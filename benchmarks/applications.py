@@ -1,0 +1,239 @@
+"""Application-level benchmark — paper Fig. 10 / Table IV / Fig. 1 analogue.
+
+Measures the four paper applications (ESPCN, EDSR, YOLOv3-Tiny, Attention)
+in two execution modes:
+
+  * unfused — every operator runs as its own jit (each TM op round-trips
+    "HBM"), the paper's CPU-coupled baseline;
+  * fused   — whole network in one jit (TM ops composed into neighbours by
+    XLA, the TMU-coupled near-memory mode).
+
+Reports, per application:
+  * e2e latency both modes + reduction % (Fig. 10a analogue; paper: 14–35%)
+  * TM-op-only latency both modes + reduction % (Fig. 10b; paper: 87–94%)
+  * TM share of unfused e2e (Fig. 1; paper: up to 40.62% for EDSR)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import tm_ops
+from repro.models import cnn
+
+
+def _stage_times(stages, x, reps):
+    """Run a list of (name, kind, fn) stages eagerly (own jit each)."""
+    ts = {}
+    cur = x
+    jitted = [(n, k, jax.jit(f)) for n, k, f in stages]
+    # warm
+    for n, k, f in jitted:
+        cur = f(cur)
+    outs = cur
+    cur = x
+    for n, k, f in jitted:
+        ts[n] = (k, time_fn(f, cur, reps=reps))
+        cur = f(cur)
+    return ts, outs
+
+
+def _fused_time(stages, x, reps):
+    def whole(a):
+        for _, _, f in stages:
+            a = f(a)
+        return a
+    return time_fn(jax.jit(whole), x, reps=reps)
+
+
+def _report(name, stages, x, reps=5):
+    ts, _ = _stage_times(stages, x, reps)
+    t_unfused = sum(t for _, t in ts.values())
+    t_tm_unfused = sum(t for k, t in ts.values() if k == "tm")
+    t_compute = t_unfused - t_tm_unfused
+    t_fused = _fused_time(stages, x, reps)
+    t_tm_fused = max(t_fused - t_compute, 0.0)
+    return {
+        "app": name,
+        "e2e_unfused_ms": t_unfused * 1e3,
+        "e2e_fused_ms": t_fused * 1e3,
+        "e2e_reduction": 1 - t_fused / t_unfused,
+        "tm_unfused_ms": t_tm_unfused * 1e3,
+        "tm_fused_ms": t_tm_fused * 1e3,
+        "tm_reduction": 1 - t_tm_fused / max(t_tm_unfused, 1e-12),
+        "tm_share_unfused": t_tm_unfused / t_unfused,
+    }
+
+
+def espcn_stages(key, s=3):
+    p = cnn.init_espcn(key, s=s)
+    return [
+        ("conv1", "compute", lambda x: jnp.tanh(cnn.conv2d(x, p["c1"]))),
+        ("conv2", "compute", lambda x: jnp.tanh(cnn.conv2d(x, p["c2"]))),
+        ("conv3", "compute", lambda x: cnn.conv2d(x, p["c3"])),
+        ("pixelshuffle", "tm", lambda x: tm_ops.pixel_shuffle(x, s)),
+    ]
+
+
+def edsr_stages(key, n_blocks=4, s=2):
+    p = cnn.init_edsr(key, n_blocks=n_blocks, s=s)
+    stages = [("head", "compute", lambda x: cnn.conv2d(x, p["head"]))]
+    for i, blk in enumerate(p["blocks"]):
+        stages.append((f"res{i}_convs", "compute",
+                       lambda x, b=blk: cnn.conv2d(
+                           jax.nn.relu(cnn.conv2d(x, b["c1"])), b["c2"]) * 0.1))
+        stages.append((f"res{i}_add", "tm", lambda x: x))  # Add folded below
+    # proper residual structure needs two inputs; emulate Add cost with route
+    stages.append(("up_conv", "compute", lambda x: cnn.conv2d(x, p["up"])))
+    stages.append(("pixelshuffle", "tm", lambda x: tm_ops.pixel_shuffle(x, s)))
+    return stages
+
+
+def edsr_report(key, x, n_blocks=4, s=2, reps=5):
+    """EDSR with real residual Adds measured as TM stages."""
+    p = cnn.init_edsr(key, n_blocks=n_blocks, s=s)
+    conv_head = jax.jit(lambda x: cnn.conv2d(x, p["head"]))
+    conv_block = [jax.jit(lambda x, b=b: cnn.conv2d(
+        jax.nn.relu(cnn.conv2d(x, b["c1"])), b["c2"])) for b in p["blocks"]]
+    add = jax.jit(tm_ops.add)
+    conv_up = jax.jit(lambda x: cnn.conv2d(x, p["up"]))
+    ps = jax.jit(lambda x: tm_ops.pixel_shuffle(x, s))
+
+    h = conv_head(x)
+    t_compute = time_fn(conv_head, x, reps=reps)
+    t_tm = 0.0
+    for cb in conv_block:
+        r = cb(h)
+        t_compute += time_fn(cb, h, reps=reps)
+        t_tm += time_fn(add, h, r, reps=reps)
+        h = add(h, r * 0.1)
+    u = conv_up(h)
+    t_compute += time_fn(conv_up, h, reps=reps)
+    t_tm += time_fn(ps, u, reps=reps)
+    t_unfused = t_compute + t_tm
+    fused = jax.jit(lambda x: cnn.edsr(p, x))
+    t_fused = time_fn(fused, x, reps=reps)
+    t_tm_fused = max(t_fused - t_compute, 0.0)
+    return {
+        "app": "EDSR", "e2e_unfused_ms": t_unfused * 1e3,
+        "e2e_fused_ms": t_fused * 1e3,
+        "e2e_reduction": 1 - t_fused / t_unfused,
+        "tm_unfused_ms": t_tm * 1e3, "tm_fused_ms": t_tm_fused * 1e3,
+        "tm_reduction": 1 - t_tm_fused / max(t_tm, 1e-12),
+        "tm_share_unfused": t_tm / t_unfused,
+    }
+
+
+def yolo_report(key, x, reps=5):
+    p = cnn.init_yolov3_tiny(key, n_classes=80)
+    rearr = jax.jit(lambda x: tm_ops.rearrange(x, 1, 16))
+
+    def backbone(z):
+        for i, w in enumerate(p["backbone"]):
+            z = jax.nn.leaky_relu(cnn.conv2d(z, w), 0.1)
+            if i < 5:
+                z = jax.lax.reduce_window(z, -jnp.inf, jax.lax.max,
+                                          (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+        z = jax.nn.leaky_relu(cnn.conv2d(z, p["conv7"]), 0.1)
+        return jax.nn.leaky_relu(cnn.conv2d(z, p["head1_reduce"]), 0.1)
+
+    backbone_j = jax.jit(backbone)
+    up = jax.jit(lambda r: tm_ops.upsample(
+        jax.nn.leaky_relu(cnn.conv2d(r, p["up_reduce"]), 0.1), 2))
+    post = jax.jit(lambda pred: cnn.yolo_postprocess(
+        pred, conf_threshold=0.3, capacity=128, max_out=32))
+
+    z0 = rearr(x)
+    r = backbone_j(z0)
+    pred1 = cnn.conv2d(r, p["head1"])
+    t_tm = time_fn(rearr, x, reps=reps)
+    t_compute = time_fn(backbone_j, z0, reps=reps)
+    t_tm += time_fn(up, r, reps=reps)
+    t_tm += time_fn(post, pred1, reps=reps)  # Bboxcal+NMS (fine-grained TM)
+    t_unfused = t_compute + t_tm
+
+    def whole(img):
+        p1, p2 = cnn.yolov3_tiny(p, img)
+        return cnn.yolo_postprocess(p1, conf_threshold=0.3, capacity=128,
+                                    max_out=32)
+
+    t_fused = time_fn(jax.jit(whole), x, reps=reps)
+    t_tm_fused = max(t_fused - t_compute, 0.0)
+    return {
+        "app": "YOLOv3-Tiny", "e2e_unfused_ms": t_unfused * 1e3,
+        "e2e_fused_ms": t_fused * 1e3,
+        "e2e_reduction": 1 - t_fused / t_unfused,
+        "tm_unfused_ms": t_tm * 1e3, "tm_fused_ms": t_tm_fused * 1e3,
+        "tm_reduction": 1 - t_tm_fused / max(t_tm, 1e-12),
+        "tm_share_unfused": t_tm / t_unfused,
+    }
+
+
+def attention_report(key, reps=5):
+    """Paper Table IV 'Attention' row (64×768): TM ops are the QKV Split and
+    head-layout transposes around the dot products."""
+    S, D, H = 64, 768, 12
+    hd = D // H
+    w = jax.random.normal(key, (D, 3 * D)) * D ** -0.5
+    wo = jax.random.normal(key, (D, D)) * D ** -0.5
+    x = jax.random.normal(jax.random.fold_in(key, 1), (S, D))
+
+    proj = jax.jit(lambda x: x @ w)
+    split_heads = jax.jit(lambda qkv: [
+        tm_ops.permute(qkv[:, i * D:(i + 1) * D].reshape(S, H, hd), (1, 0, 2))
+        for i in range(3)])
+    dots = jax.jit(lambda q, k, v: jax.nn.softmax(
+        (q @ k.transpose(0, 2, 1)) / hd ** 0.5) @ v)
+    merge = jax.jit(lambda o: tm_ops.permute(o, (1, 0, 2)).reshape(S, D) @ wo)
+
+    qkv = proj(x)
+    q, k, v = split_heads(qkv)
+    o = dots(q, k, v)
+    t_compute = time_fn(proj, x, reps=reps) + time_fn(dots, q, k, v, reps=reps)
+    t_tm = time_fn(split_heads, qkv, reps=reps) + time_fn(merge, o, reps=reps)
+    t_unfused = t_compute + t_tm
+
+    def whole(x):
+        qkv = x @ w
+        q, k, v = [tm_ops.permute(qkv[:, i * D:(i + 1) * D].reshape(S, H, hd),
+                                  (1, 0, 2)) for i in range(3)]
+        o = jax.nn.softmax((q @ k.transpose(0, 2, 1)) / hd ** 0.5) @ v
+        return tm_ops.permute(o, (1, 0, 2)).reshape(S, D) @ wo
+
+    t_fused = time_fn(jax.jit(whole), x, reps=reps)
+    t_tm_fused = max(t_fused - t_compute, 0.0)
+    return {
+        "app": "Attention", "e2e_unfused_ms": t_unfused * 1e3,
+        "e2e_fused_ms": t_fused * 1e3,
+        "e2e_reduction": 1 - t_fused / t_unfused,
+        "tm_unfused_ms": t_tm * 1e3, "tm_fused_ms": t_tm_fused * 1e3,
+        "tm_reduction": 1 - t_tm_fused / max(t_tm, 1e-12),
+        "tm_share_unfused": t_tm / t_unfused,
+    }
+
+
+def main(scale: float = 0.25):
+    key = jax.random.PRNGKey(0)
+    hw = max(32, int(448 * scale))
+    img = jax.random.uniform(key, (1, hw, hw, 3))
+    rows = []
+    rows.append(_report("ESPCN", espcn_stages(key), img))
+    rows.append(edsr_report(key, img))
+    rows.append(yolo_report(key, jax.random.uniform(key, (1, 64, 64, 3))))
+    rows.append(attention_report(key))
+    print("# applications (Fig. 10 / Table IV analogue), img=%dx%d" % (hw, hw))
+    hdr = (f"{'app':14s}{'e2e_unfused':>12s}{'e2e_fused':>11s}{'e2e_red':>9s}"
+           f"{'tm_red':>8s}{'tm_share':>9s}")
+    print(hdr)
+    for r in rows:
+        print(f"{r['app']:14s}{r['e2e_unfused_ms']:>10.1f}ms"
+              f"{r['e2e_fused_ms']:>9.1f}ms{r['e2e_reduction']:>9.1%}"
+              f"{r['tm_reduction']:>8.1%}{r['tm_share_unfused']:>9.1%}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

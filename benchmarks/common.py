@@ -1,0 +1,24 @@
+"""Timing helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, reps: int = 5, warmup: int = 2) -> float:
+    """Median wall time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def fmt_us(s: float) -> str:
+    return f"{s * 1e6:10.1f}"

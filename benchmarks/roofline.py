@@ -1,0 +1,81 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+per (arch × shape × mesh): the three roofline terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS ratio, and the bound on achievable compute utilization
+(compute_term / max(terms) — what MFU could reach if the dominant
+non-compute term were hidden perfectly).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirname="experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def table(recs, mesh="single"):
+    rows = []
+    for r in recs:
+        if r.get("mesh") != mesh or not r.get("live", False):
+            continue
+        dom = r["dominant"].replace("_s", "")
+        bound = r["step_time_bound_s"]
+        util_bound = r["compute_s"] / bound if bound else 0.0
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": dom,
+            "useful_flops_ratio": r["useful_flops_ratio"],
+            "util_bound": util_bound,
+            "bytes_per_device_gb": r["bytes_per_device"] / 1e9,
+        })
+    rows.sort(key=lambda x: (x["arch"], ORDER.index(x["shape"])))
+    return rows
+
+
+def fmt_markdown(rows, title):
+    out = [f"### {title}", "",
+           "| arch | shape | compute (s) | memory (s) | collective (s) | "
+           "dominant | model/HLO flops | util bound |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{r['util_bound']:.1%} |")
+    return "\n".join(out)
+
+
+def main(dirname="experiments/dryrun"):
+    recs = load(dirname)
+    if not recs:
+        print(f"# roofline: no dry-run records in {dirname} — run "
+              f"`python -m repro.launch.dryrun --all --mesh both` first")
+        return []
+    for mesh in ("single", "multi"):
+        rows = table(recs, mesh)
+        print(f"\n# roofline ({mesh}-pod, {len(rows)} live cells)")
+        print(f"{'arch':24s}{'shape':>12s}{'compute':>11s}{'memory':>11s}"
+              f"{'coll':>11s}{'dominant':>11s}{'m/HLO':>7s}{'util≤':>7s}")
+        for r in rows:
+            print(f"{r['arch']:24s}{r['shape']:>12s}{r['compute_s']:>11.3e}"
+                  f"{r['memory_s']:>11.3e}{r['collective_s']:>11.3e}"
+                  f"{r['dominant']:>11s}{r['useful_flops_ratio']:>7.2f}"
+                  f"{r['util_bound']:>7.1%}")
+    return table(recs, "single")
+
+
+if __name__ == "__main__":
+    main()

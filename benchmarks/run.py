@@ -1,0 +1,69 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  tm_operators  -> Fig. 8 / Table III (operator-level latency + traffic)
+  applications  -> Fig. 10 / Table IV / Fig. 1 (e2e + TM-only latency)
+  area_power    -> Table V (abstraction/configuration cost)
+  roofline      -> EXPERIMENTS.md §Roofline (from dry-run artifacts)
+
+Prints a final ``name,us_per_call,derived`` CSV summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.25,
+                    help="spatial scale of paper Table III shapes")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=["tm_operators", "applications", "area_power",
+                             "roofline", "scaling"])
+    args = ap.parse_args(argv)
+    csv = ["name,us_per_call,derived"]
+
+    if "tm_operators" not in args.skip:
+        from benchmarks import tm_operators
+        for r in tm_operators.main(scale=args.scale):
+            csv.append(f"tm/{r['op']},{r['standalone_us']:.1f},"
+                       f"speedup={r['speedup']:.2f};traffic_red="
+                       f"{r['traffic_reduction']:.2f}")
+        print()
+
+    if "applications" not in args.skip:
+        from benchmarks import applications
+        for r in applications.main(scale=args.scale):
+            csv.append(f"app/{r['app']},{r['e2e_fused_ms'] * 1e3:.1f},"
+                       f"e2e_red={r['e2e_reduction']:.3f};tm_red="
+                       f"{r['tm_reduction']:.3f};tm_share="
+                       f"{r['tm_share_unfused']:.3f}")
+        print()
+
+    if "area_power" not in args.skip:
+        from benchmarks import area_power
+        for r in area_power.main():
+            csv.append(f"instr/{r['op']},0,{r['instr_bytes']}B")
+        print()
+
+    if "roofline" not in args.skip:
+        from benchmarks import roofline
+        for r in roofline.main():
+            csv.append(f"roofline/{r['arch']}/{r['shape']},"
+                       f"{r['compute_s'] * 1e6:.1f},"
+                       f"dom={r['dominant']};util_bound={r['util_bound']:.3f}")
+        print()
+
+    if "scaling" not in args.skip:
+        from benchmarks import scaling
+        for r in scaling.main():
+            csv.append(f"scaling/{r['arch']}/{r['shape']},0,"
+                       f"compute_eff={r['compute_eff']:.2f};"
+                       f"memory_eff={r['memory_eff']:.2f}")
+        print()
+
+    print("\n".join(csv))
+
+
+if __name__ == "__main__":
+    main()

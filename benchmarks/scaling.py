@@ -1,0 +1,55 @@
+"""Multi-pod scaling efficiency from the dry-run artifacts.
+
+Weak-scaling check for the 2-pod mesh: with the global batch fixed, doubling
+chips should halve per-device compute/memory terms (efficiency ≈ 1.0); the
+collective term gains the cross-pod gradient reduce.  Reads the same JSONs
+as benchmarks/roofline.py.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(dirname="experiments/dryrun"):
+    recs = {}
+    for p in glob.glob(os.path.join(dirname, "*.json")):
+        with open(p) as f:
+            d = json.load(f)
+        if d.get("live"):
+            recs[(d["arch"], d["shape"], d["mesh"])] = d
+    return recs
+
+
+def main(dirname="experiments/dryrun"):
+    recs = load(dirname)
+    rows = []
+    for (arch, shape, mesh), r in sorted(recs.items()):
+        if mesh != "single":
+            continue
+        m = recs.get((arch, shape, "multi"))
+        if not m:
+            continue
+        ceff = r["compute_s"] / (2 * m["compute_s"]) if m["compute_s"] else 0
+        meff = r["memory_s"] / (2 * m["memory_s"]) if m["memory_s"] else 0
+        coll_ratio = (m["collective_s"] / r["collective_s"]
+                      if r["collective_s"] else float("inf"))
+        rows.append({"arch": arch, "shape": shape,
+                     "compute_eff": ceff, "memory_eff": meff,
+                     "collective_x": coll_ratio})
+    if not rows:
+        print("# scaling: no dry-run records; run the sweep first")
+        return rows
+    print("# multi-pod weak scaling (512 vs 256 chips, fixed global work)")
+    print(f"{'arch':24s}{'shape':>12s}{'compute_eff':>12s}{'memory_eff':>11s}"
+          f"{'coll_x':>8s}")
+    for r in rows:
+        print(f"{r['arch']:24s}{r['shape']:>12s}{r['compute_eff']:>12.2f}"
+              f"{r['memory_eff']:>11.2f}{r['collective_x']:>8.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

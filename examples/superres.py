@@ -1,0 +1,49 @@
+"""Super-resolution (the paper's flagship application, EDSR/ESPCN) with the
+two TMU system-level tricks made visible:
+
+  * near-memory fusion — the whole network in one jit vs per-op execution;
+  * output forwarding — the final projection's PixelShuffle applied at
+    matmul tile-commit time by the Pallas ``matmul_tm`` kernel (paper
+    Fig. 5c), validated against the unfused reference.
+
+    PYTHONPATH=src python examples/superres.py
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul_tm import (matmul_pixel_shuffle_call,
+                                     matmul_pixel_shuffle_ref)
+from repro.models import cnn
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    img = jax.random.uniform(key, (1, 64, 64, 3))
+
+    # -- EDSR end to end ------------------------------------------------
+    p = cnn.init_edsr(key, n_blocks=4, s=2)
+    fused = jax.jit(lambda x: cnn.edsr(p, x))
+    out = jax.block_until_ready(fused(img))
+    t0 = time.perf_counter()
+    for _ in range(3):
+        out = jax.block_until_ready(fused(img))
+    t = (time.perf_counter() - t0) / 3
+    print(f"EDSR x2: {img.shape} -> {out.shape}  ({t*1e3:.1f} ms fused)")
+
+    # -- output forwarding: PixelShuffle at matmul tile commit ----------
+    H, W, C, s, K = 16, 32, 3, 2, 64
+    feats = jax.random.normal(key, (H * W, K))          # last-layer features
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, C * s * s)) * 0.1
+    y_fwd = matmul_pixel_shuffle_call(feats, w, H=H, W=W, C=C, s=s)
+    y_ref = matmul_pixel_shuffle_ref(feats, w, H, W, C, s)
+    assert np.allclose(np.asarray(y_fwd), np.asarray(y_ref), atol=1e-4)
+    print(f"output forwarding: matmul -> ({H*s}, {W*s}, {C}) image written "
+          f"directly at tile commit (0 extra HBM round-trips), matches ref")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Async, atomic checkpointing with restore-time resharding (elasticity).
+
+Fault-tolerance contract:
+  * **atomic** — arrays are written to ``step_N.tmp/`` and ``os.rename``d to
+    ``step_N/`` only when complete; a crash mid-save never corrupts the
+    latest checkpoint.
+  * **async** — ``save()`` snapshots device arrays to host then hands the
+    file I/O to a background thread; training continues immediately.
+  * **elastic** — ``restore(..., shardings=...)`` device_puts each leaf with
+    the *target* sharding, which may belong to a different mesh shape than
+    the one that saved it (node failure -> restart on fewer/more hosts).
+  * **retention** — keeps the last ``keep`` checkpoints, deletes older.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten(flat: dict):
+    root: dict = {}
+    for path, v in flat.items():
+        parts = path.split("/")
+        node = root
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return root
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, *, blocking: bool = False):
+        """Snapshot to host memory synchronously, write files asynchronously."""
+        self.wait()  # one in-flight save at a time
+        flat = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}
+
+        def write():
+            try:
+                tmp = os.path.join(self.dir, f"step_{step}.tmp")
+                final = os.path.join(self.dir, f"step_{step}")
+                os.makedirs(tmp, exist_ok=True)
+                manifest = {}
+                for k, v in host.items():
+                    fname = k.replace("/", "__") + ".npy"
+                    np.save(os.path.join(tmp, fname), v)
+                    manifest[k] = fname
+                with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                    json.dump({"step": step, "arrays": manifest}, f)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)  # atomic publish
+                self._gc()
+            except Exception as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp") and \
+                    os.path.isdir(os.path.join(self.dir, name)):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int | None = None, *, shardings=None):
+        """Load a checkpoint; ``shardings`` (flat-path dict or pytree) places
+        each leaf on the *current* mesh — the elastic-restart path."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat_shardings = _flatten(shardings) if isinstance(shardings, dict) \
+            else None
+        flat = {}
+        for k, fname in manifest["arrays"].items():
+            arr = np.load(os.path.join(d, fname))
+            if flat_shardings is not None and k in flat_shardings:
+                arr = jax.device_put(arr, flat_shardings[k])
+            elif shardings is not None and flat_shardings is None:
+                arr = jax.device_put(arr, shardings)
+            flat[k] = arr
+        return _unflatten(flat), step

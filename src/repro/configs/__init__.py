@@ -1,0 +1,2 @@
+from repro.configs.registry import ARCHS, get_config, get_smoke, list_archs  # noqa: F401
+from repro.configs.shapes import SHAPES, cell_is_live, input_specs  # noqa: F401

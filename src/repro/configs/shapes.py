@@ -1,0 +1,110 @@
+"""Assigned input-shape set (train_4k / prefill_32k / decode_32k / long_500k)
+and the per-(arch, shape) input ShapeDtypeStructs for the dry-run.
+
+``long_500k`` requires sub-quadratic attention: live only for the SSM
+(rwkv6) and hybrid (zamba2) families; the eight pure full-attention archs
+skip it (recorded as ``skipped(full-attention)`` — see DESIGN.md
+§Arch-applicability).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_is_live(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    """(live?, reason).  long_500k only for sub-quadratic families."""
+    if shape == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "skipped(full-attention)"
+    return True, "live"
+
+
+def _embeds_input(cfg: ModelConfig, B: int, S: int):
+    return jax.ShapeDtypeStruct((B, S, cfg.d_model), cfg.dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, scale: float = 1.0) -> dict:
+    """ShapeDtypeStruct stand-ins for every input of the cell's step fn.
+
+    ``scale`` < 1 shrinks batch/seq for reduced-mesh test dry-runs.
+    Training inputs are (tokens, labels) — or (embeds, labels) for the
+    stub-frontend archs; serving inputs add caches/states.
+    """
+    sp = SHAPES[shape]
+    B = max(1, int(sp.global_batch * scale))
+    S = max(128, int(sp.seq_len * scale)) if sp.seq_len > 128 else sp.seq_len
+    i32 = jnp.int32
+
+    if sp.kind == "train":
+        if cfg.frontend in ("audio_stub", "vision_stub"):
+            return {"batch": {"embeds": _embeds_input(cfg, B, S),
+                              "labels": jax.ShapeDtypeStruct((B, S), i32)}}
+        return {"batch": {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                          "labels": jax.ShapeDtypeStruct((B, S), i32)}}
+
+    caches = _cache_specs(cfg, B, S)
+    states = _state_specs(cfg, B)
+    if sp.kind == "prefill":
+        if cfg.frontend in ("audio_stub", "vision_stub"):
+            tok = {"embeds": _embeds_input(cfg, B, S)}
+        else:
+            tok = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        return {**tok, "caches": caches, "states": states}
+    # decode: one new token against a seq_len-deep cache
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+            "caches": caches, "states": states,
+            "index": jax.ShapeDtypeStruct((), i32)}
+
+
+def _cache_specs(cfg: ModelConfig, B: int, S: int):
+    cdt = jnp.bfloat16
+    if cfg.family in ("dense", "moe"):
+        z = jax.ShapeDtypeStruct((cfg.n_layers, B, S, cfg.n_kv_heads, cfg.hd),
+                                 cdt)
+        return {"k": z, "v": z}
+    if cfg.family == "hybrid":
+        k = cfg.attn_every or cfg.n_layers
+        z = jax.ShapeDtypeStruct((cfg.n_layers // k, B, S, cfg.n_kv_heads,
+                                  cfg.hd), cdt)
+        return {"k": z, "v": z}
+    return None
+
+
+def _state_specs(cfg: ModelConfig, B: int):
+    if cfg.family == "ssm":
+        L, D = cfg.n_layers, cfg.d_model
+        H = D // cfg.ssm_head_dim
+        K = cfg.ssm_head_dim
+        return {"tprev": jax.ShapeDtypeStruct((L, B, 1, D), cfg.dtype),
+                "fprev": jax.ShapeDtypeStruct((L, B, 1, D), cfg.dtype),
+                "wkv": jax.ShapeDtypeStruct((L, B, H, K, K), jnp.float32)}
+    if cfg.family == "hybrid":
+        k = cfg.attn_every or cfg.n_layers
+        ng, rem = divmod(cfg.n_layers, k)
+        d_inner = cfg.ssm_expand * cfg.d_model
+        H = d_inner // cfg.ssm_head_dim
+        P, N = cfg.ssm_head_dim, cfg.ssm_state
+        return {"main": jax.ShapeDtypeStruct((ng, k, B, H, P, N), jnp.float32),
+                "tail": jax.ShapeDtypeStruct((rem, B, H, P, N), jnp.float32)}
+    return None

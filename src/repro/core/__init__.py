@@ -1,0 +1,15 @@
+"""The paper's contribution: unified address abstraction + TM execution model.
+
+Public surface:
+  affine    — AffineMap / MixedRadixMap / Table II operator library
+  engine    — apply_map: the reconfigurable address-generation datapath
+  instr     — TMOpcode / TMInstr / TMProgram (RISC-inspired encoding)
+  executor  — 8-stage execution model (reference + fused backends)
+  rme       — reconfigurable masking engine (assemble / evaluate)
+  tm_ops    — functional per-operator API
+  fusion    — near-memory copy elision by map composition
+  forwarding— output forwarding (TM in producer epilogues)
+"""
+
+from repro.core import affine, engine, fusion, instr, rme, tm_ops  # noqa: F401
+from repro.core.executor import TMExecutor  # noqa: F401

@@ -1,0 +1,98 @@
+"""8-stage TM execution model (paper Fig. 3), as an interpreter.
+
+The :class:`TMExecutor` runs a :class:`~repro.core.instr.TMProgram` over a
+buffer file, mirroring the TMU FSM:
+
+  Fetch/Decode  -> iterate the instruction list, dispatch on opcode
+  Tensor Load   -> resolve ``srcs`` from the buffer dict (HBM analogue)
+  Fine TM       -> RME assemble / evaluate
+  Element-wise  -> vector add/sub/mul/max
+  Coarse TM     -> the unified address engine (apply_map)
+  Tensor Store  -> bind ``dst`` in the buffer dict
+  Branch        -> implicit: apply_map/rme internally iterate segments;
+                   at program level, multi-map ops (Route) loop over bands.
+
+Backends:
+  * ``reference`` — execute instructions one by one (every intermediate hits
+    "HBM", like a CPU fallback / the paper's unfused baseline).
+  * ``fused``     — run the fusion pass first (near-memory execution: elided
+    intermediates never materialize), then execute.
+
+The executor itself is jit-compatible: running it under ``jax.jit`` stages
+the whole program into one XLA computation, which is the final TPU-native
+form (XLA then fuses the remaining gathers with neighbours).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core import rme
+from repro.core.engine import apply_map
+from repro.core.fusion import FusionReport, fuse
+from repro.core.instr import EwOp, TMInstr, TMOpcode, TMProgram
+
+_EW: dict[EwOp, Callable] = {
+    EwOp.ADD: jnp.add,
+    EwOp.SUB: jnp.subtract,
+    EwOp.MUL: jnp.multiply,
+    EwOp.MAX: jnp.maximum,
+}
+
+
+@dataclasses.dataclass
+class TMExecutor:
+    backend: str = "fused"  # "reference" | "fused"
+    last_report: FusionReport | None = None
+
+    def __call__(self, prog: TMProgram, buffers: dict[str, jnp.ndarray],
+                 *, batch_dims: int = 0) -> dict[str, jnp.ndarray]:
+        if self.backend == "fused":
+            prog, self.last_report = fuse(prog)
+        bufs = dict(buffers)
+        for ins in prog.instrs:  # Fetch
+            bufs[ins.dst] = self._exec(ins, bufs, batch_dims)  # Decode..Store
+        missing = [o for o in prog.outputs if o not in bufs]
+        if missing:
+            raise KeyError(f"program did not produce outputs: {missing}")
+        return {o: bufs[o] for o in prog.outputs}
+
+    # one instruction = Decode + Load + (fine|ew|coarse) + Store
+    def _exec(self, ins: TMInstr, bufs: dict, batch_dims: int) -> jnp.ndarray:
+        srcs = [bufs[s] for s in ins.srcs]  # Tensor Load
+        if ins.opcode == TMOpcode.COPY:
+            return srcs[0]
+        if ins.opcode == TMOpcode.ELEMENTWISE:
+            return _EW[ins.ew](srcs[0], srcs[1])
+        if ins.opcode == TMOpcode.COARSE:
+            if ins.maps is not None:  # Route: band loop (Branch stage)
+                out = None
+                for x, m in zip(srcs, ins.maps):
+                    band = apply_map(m, x, batch_dims=batch_dims)
+                    out = band if out is None else out + band
+                if ins.ew is not None and len(srcs) > len(ins.maps):
+                    out = _EW[ins.ew](out, srcs[-1])
+                return out
+            out = apply_map(ins.map_, srcs[0], batch_dims=batch_dims)
+            if ins.ew is not None:  # fused elementwise epilogue
+                out = _EW[ins.ew](out, srcs[1])
+            return out
+        if ins.opcode == TMOpcode.FINE_ASSEMBLE:
+            cfg = ins.rme
+            if cfg.lane_mask is not None:
+                return rme.assemble_static(srcs[0], jnp.asarray(cfg.lane_mask, bool))
+            packed, _ = rme.assemble(srcs[0], srcs[1].astype(bool), cfg.capacity)
+            return packed
+        if ins.opcode == TMOpcode.FINE_EVALUATE:
+            cfg = ins.rme
+            if cfg.top_k is not None:
+                rows, _ = rme.evaluate_topk(srcs[0], cfg.top_k, cfg.capacity,
+                                            cfg.score_index)
+                return rows
+            rows, _, _ = rme.evaluate(srcs[0], cfg.threshold, cfg.capacity,
+                                      cmp=cfg.cmp, score_index=cfg.score_index)
+            return rows
+        raise ValueError(f"unknown opcode {ins.opcode}")

@@ -1,0 +1,156 @@
+"""Reconfigurable Masking Engine — fine-grained TM (paper Section V-B.2).
+
+The RME's two schemes, re-expressed at TPU lane granularity:
+
+* **assemble** — gather lanes selected by a mask and pack them contiguously
+  into the output stream.  In hardware this is a byte crossbar driven by the
+  byte-masking register; on TPU the idiomatic equivalent is a vectorized
+  *prefix-sum compaction*: ``dest = cumsum(mask) - 1`` gives each surviving
+  lane its packed position in one vector pass.
+
+* **evaluate** — filter a stream by a runtime predicate (compare/threshold)
+  and emit only the surviving records (plus indices).  This realizes Bboxcal
+  (confidence thresholding of YOLO output rows) and doubles as MoE token
+  dispatch (top-k routing -> expert-local packed batches).
+
+Both return *statically shaped* outputs (TPU requires static shapes): results
+are packed to a ``capacity`` with a validity count, exactly like the TMU's
+commit buffer which fills predictable rounds before streaming out.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# assemble
+# --------------------------------------------------------------------------
+
+def assemble_static(x: jnp.ndarray, lane_mask: jnp.ndarray) -> jnp.ndarray:
+    """Pack lanes of the minor axis selected by a *static* boolean mask.
+
+    ``x``: (..., L); ``lane_mask``: (L,) python/numpy bool.  Static masks fold
+    to a plain gather under jit (the byte-masking-register case).
+    """
+    import numpy as np
+
+    idx = np.nonzero(np.asarray(lane_mask))[0]
+    return jnp.take(x, jnp.asarray(idx), axis=-1)
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def assemble(x: jnp.ndarray, mask: jnp.ndarray, capacity: int,
+             fill: float = 0.0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Runtime compaction along the leading axis (records = rows).
+
+    ``x``: (N, ...); ``mask``: (N,) bool.  Returns ``(packed, count)`` where
+    ``packed`` is (capacity, ...) holding the selected rows in order, padded
+    with ``fill``, and ``count`` is the number of valid rows (<= capacity;
+    overflow rows are dropped, as a fixed-size commit buffer would).
+    """
+    n = x.shape[0]
+    mask = mask.astype(jnp.int32)
+    pos = jnp.cumsum(mask) - 1  # packed position of each surviving row
+    count = jnp.minimum(pos[-1] + 1 if n else 0, capacity)
+    valid = (mask == 1) & (pos < capacity)
+    dest = jnp.where(valid, pos, capacity)  # dropped rows scatter to slot cap
+    out = jnp.full((capacity + 1,) + x.shape[1:], fill, dtype=x.dtype)
+    out = out.at[dest].set(jnp.where(
+        valid.reshape((-1,) + (1,) * (x.ndim - 1)), x, out[dest]))
+    return out[:capacity], count
+
+
+@partial(jax.jit, static_argnames=("capacity",))
+def assemble_indices(mask: jnp.ndarray, capacity: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Like :func:`assemble` but returns the *source indices* of survivors.
+
+    Gather-friendly form (used by the Pallas rme_gather kernel and MoE
+    dispatch): ``indices[j] = i`` of the j-th surviving row, padded with ``n``
+    (one-past-end sentinel).  Returns ``(indices, count)``.
+    """
+    n = mask.shape[0]
+    mask_i = mask.astype(jnp.int32)
+    pos = jnp.cumsum(mask_i) - 1
+    count = jnp.minimum(jnp.sum(mask_i), capacity)
+    valid = (mask_i == 1) & (pos < capacity)
+    dest = jnp.where(valid, pos, capacity)
+    idx = jnp.full((capacity + 1,), n, dtype=jnp.int32)
+    idx = idx.at[dest].set(jnp.where(valid, jnp.arange(n, dtype=jnp.int32), idx[dest]))
+    return idx[:capacity], count
+
+
+# --------------------------------------------------------------------------
+# evaluate
+# --------------------------------------------------------------------------
+
+_CMPS = {
+    "ge": lambda a, b: a >= b,
+    "gt": lambda a, b: a > b,
+    "le": lambda a, b: a <= b,
+    "lt": lambda a, b: a < b,
+}
+
+
+@partial(jax.jit, static_argnames=("cmp", "capacity", "score_index"))
+def evaluate(x: jnp.ndarray, threshold, capacity: int, *, cmp: str = "ge",
+             score_index: int = 0) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Threshold-filter records (rows of ``x``) on a score column.
+
+    ``x``: (N, D).  Keeps rows where ``x[:, score_index] <cmp> threshold``,
+    packed to ``capacity``.  Returns ``(packed_rows, src_indices, count)``.
+    This is Bboxcal's confidence filter (paper Fig. 2c) in one fused pass.
+    """
+    scores = x[:, score_index]
+    mask = _CMPS[cmp](scores, threshold)
+    idx, count = assemble_indices(mask, capacity)
+    safe = jnp.minimum(idx, x.shape[0] - 1)
+    rows = jnp.where((idx < x.shape[0])[:, None], x[safe], jnp.zeros_like(x[safe]))
+    return rows, idx, count
+
+
+@partial(jax.jit, static_argnames=("capacity", "k"))
+def evaluate_topk(x: jnp.ndarray, k: int, capacity: int | None = None,
+                  score_index: int = 0) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Evaluate scheme, top-k variant: keep the k highest-scoring rows.
+
+    Returns ``(rows, src_indices)``; rows are score-sorted.  ``capacity``
+    defaults to k.  This is the RME configuration used for maximal-value
+    retrieval (paper Section V-B.2) and MoE expert routing.
+    """
+    cap = capacity or k
+    scores = x[:, score_index]
+    _, idx = jax.lax.top_k(scores, k)
+    idx = idx[:cap].astype(jnp.int32)
+    return x[idx], idx
+
+
+# --------------------------------------------------------------------------
+# MoE dispatch built on assemble/evaluate (used by repro.models.moe)
+# --------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_experts", "capacity"))
+def dispatch_tokens(expert_of: jnp.ndarray, num_experts: int,
+                    capacity: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-expert assemble: pack token indices by expert assignment.
+
+    ``expert_of``: (T,) int32 expert id per token-slot.  Returns
+    ``(indices, counts)``: ``indices[e]`` is (capacity,) of token ids routed
+    to expert ``e`` (padded with T), ``counts[e]`` the live count.  Semantics
+    are exactly ``vmap(assemble_indices)`` over the per-expert masks — the
+    paper's assemble scheme applied E times with different mask registers.
+    """
+    T = expert_of.shape[0]
+    onehot = jax.nn.one_hot(expert_of, num_experts, dtype=jnp.int32)  # (T, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1  # packed slot per (token, expert)
+    counts = jnp.minimum(onehot.sum(0), capacity)
+    valid = (onehot == 1) & (pos < capacity)
+    dest = jnp.where(valid, pos, capacity)  # (T, E)
+    idx = jnp.full((num_experts, capacity + 1), T, dtype=jnp.int32)
+    token_ids = jnp.arange(T, dtype=jnp.int32)[:, None]
+    idx = idx.at[jnp.arange(num_experts)[None, :], dest].set(
+        jnp.where(valid, token_ids, T))
+    return idx[:, :capacity], counts

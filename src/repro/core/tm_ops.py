@@ -1,0 +1,223 @@
+"""Functional API over the TM layer — one callable per paper operator.
+
+Every operator here is executed by the *same* engine
+(:func:`repro.core.engine.apply_map`) parameterized by a
+:class:`~repro.core.affine.MixedRadixMap`, or by the RME
+(:mod:`repro.core.rme`) for fine-grained ops — this is the executable form of
+the paper's claim that one reconfigurable datapath covers all TM operators.
+
+Conventions: feature maps are channel-last ``(..., H, W, C)``; ``batch_dims``
+leading axes pass through (the engine vmaps over them implicitly via flat
+take).  All ops are jit-compatible and differentiable where meaningful
+(gather has a scatter-add VJP supplied by jnp.take).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import affine as af
+from repro.core import rme
+from repro.core.engine import apply_map
+
+
+def _bd(x: jnp.ndarray, core_ndim: int) -> int:
+    return x.ndim - core_ndim
+
+
+# -- coarse-grained ---------------------------------------------------------
+
+def transpose(x: jnp.ndarray) -> jnp.ndarray:
+    """(…, H, W, C) -> (…, W, H, C) — paper Transpose."""
+    b = _bd(x, 3)
+    return apply_map(af.transpose_map(x.shape[b:]), x, batch_dims=b)
+
+
+def rot90(x: jnp.ndarray) -> jnp.ndarray:
+    """90° CCW rotation of the spatial dims — paper Rot90."""
+    b = _bd(x, 3)
+    return apply_map(af.rot90_map(x.shape[b:]), x, batch_dims=b)
+
+
+def pixel_shuffle(x: jnp.ndarray, s: int) -> jnp.ndarray:
+    """(…, H, W, C·s²) -> (…, H·s, W·s, C) — paper PixelShuffle."""
+    b = _bd(x, 3)
+    return apply_map(af.pixel_shuffle_map(x.shape[b:], s), x, batch_dims=b)
+
+
+def pixel_unshuffle(x: jnp.ndarray, s: int) -> jnp.ndarray:
+    """(…, H·s, W·s, C) -> (…, H, W, C·s²) — paper PixelUnshuffle."""
+    b = _bd(x, 3)
+    return apply_map(af.pixel_unshuffle_map(x.shape[b:], s), x, batch_dims=b)
+
+
+def upsample(x: jnp.ndarray, s: int) -> jnp.ndarray:
+    """Nearest-neighbour ×s upsample — paper Upsample."""
+    b = _bd(x, 3)
+    return apply_map(af.upsample_map(x.shape[b:], s), x, batch_dims=b)
+
+
+def split(x: jnp.ndarray, n: int) -> list[jnp.ndarray]:
+    """Channel split into ``n`` equal parts — paper Split."""
+    b = _bd(x, 3)
+    return [apply_map(af.split_map(x.shape[b:], n, p), x, batch_dims=b)
+            for p in range(n)]
+
+
+def route(xs: Sequence[jnp.ndarray]) -> jnp.ndarray:
+    """Channel concat — paper Route.  Gather-form: each band map reads its
+    source; bands are summed (disjoint supports)."""
+    b = _bd(xs[0], 3)
+    shapes = [x.shape[b:] for x in xs]
+    maps = af.route_maps(shapes)
+    out = None
+    for x, m in zip(xs, maps):
+        band = apply_map(m, x, batch_dims=b)
+        out = band if out is None else out + band
+    return out
+
+
+def add(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Element-wise Add (residual) — paper Add.  Identity map + EW stage."""
+    return x + y
+
+
+def img2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1,
+            pad: int = 0) -> jnp.ndarray:
+    """(…, H, W, C) -> (…, OH·OW, KH·KW·C) patch matrix — paper Img2col."""
+    b = _bd(x, 3)
+    return apply_map(af.img2col_map(x.shape[b:], kh, kw, stride, pad), x,
+                     batch_dims=b)
+
+
+def rearrange(x: jnp.ndarray, group: int, pad_c: int) -> jnp.ndarray:
+    """RGB-stream -> burst-friendly high-channel fmap — paper Rearrange."""
+    b = _bd(x, 3)
+    return apply_map(af.rearrange_map(x.shape[b:], group, pad_c), x,
+                     batch_dims=b)
+
+
+# -- generic sequence-model manipulations (same datapath) -------------------
+
+def permute(x: jnp.ndarray, perm: Sequence[int]) -> jnp.ndarray:
+    """Arbitrary axis permutation as a coarse TM op (head-layout transposes)."""
+    m = af.MixedRadixMap(
+        out_shape=tuple(x.shape[p] for p in perm), in_shape=x.shape,
+        splits=(),
+        affine=af.AffineMap.permutation(_inv_perm(perm)),
+    )
+    return apply_map(m, x)
+
+
+def _inv_perm(perm: Sequence[int]) -> list[int]:
+    inv = [0] * len(perm)
+    for i, p in enumerate(perm):
+        inv[p] = i
+    return inv
+
+
+def repeat_heads(x: jnp.ndarray, rep: int, axis: int) -> jnp.ndarray:
+    """GQA KV broadcast: repeat along ``axis`` (Upsample along a head axis).
+
+    out[..., h, ...] = in[..., h // rep, ...]
+    """
+    in_shape = x.shape
+    out_shape = list(in_shape)
+    out_shape[axis] *= rep
+    n = len(in_shape)
+    # digits: (d0..dn-1, r) with axis split by rep; in[axis] = q, others id.
+    A = [[af.Frac(0)] * (n + 1) for _ in range(n)]
+    for i in range(n):
+        A[i][i] = af.Frac(1)
+    m = af.MixedRadixMap(
+        out_shape=tuple(out_shape), in_shape=in_shape,
+        splits=(af.DigitSplit(axis, rep),),
+        affine=af.AffineMap(tuple(tuple(r) for r in A),
+                            tuple(af.Frac(0) for _ in range(n))),
+    )
+    return apply_map(m, x)
+
+
+# -- fine-grained ------------------------------------------------------------
+
+def resize_bilinear(x: jnp.ndarray, out_h: int, out_w: int) -> jnp.ndarray:
+    """Bilinear Resize — paper Resize (fine-grained; weighted 4-tap gather).
+
+    Uses the half-pixel convention (align_corners=False).  The four taps are
+    each an affine gather (the RME's assemble of neighbouring bytes); the
+    weights are the fractional parts — computed in one vector pass.
+    """
+    b = _bd(x, 3)
+    H, W, C = x.shape[b:]
+    ys = (jnp.arange(out_h, dtype=jnp.float32) + 0.5) * (H / out_h) - 0.5
+    xs = (jnp.arange(out_w, dtype=jnp.float32) + 0.5) * (W / out_w) - 0.5
+    y0 = jnp.clip(jnp.floor(ys), 0, H - 1).astype(jnp.int32)
+    x0 = jnp.clip(jnp.floor(xs), 0, W - 1).astype(jnp.int32)
+    y1 = jnp.minimum(y0 + 1, H - 1)
+    x1 = jnp.minimum(x0 + 1, W - 1)
+    wy = jnp.clip(ys - y0, 0.0, 1.0)[:, None, None]
+    wx = jnp.clip(xs - x0, 0.0, 1.0)[None, :, None]
+
+    def g(yi, xi):
+        t = jnp.take(x, yi, axis=b)
+        return jnp.take(t, xi, axis=b + 1)
+
+    v00, v01 = g(y0, x0), g(y0, x1)
+    v10, v11 = g(y1, x0), g(y1, x1)
+    top = v00 * (1 - wx) + v01 * wx
+    bot = v10 * (1 - wx) + v11 * wx
+    out = top * (1 - wy) + bot * wy
+    return out.astype(x.dtype)
+
+
+def bboxcal(pred: jnp.ndarray, conf_threshold: float, capacity: int,
+            score_index: int = 4) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Bboxcal — extract high-confidence boxes from YOLO head output.
+
+    ``pred``: (N, D) rows of (x, y, w, h, conf, classes…).  RME *evaluate*
+    scheme: confidence threshold -> packed survivors.  Returns
+    ``(boxes, src_indices, count)``.
+    """
+    return rme.evaluate(pred, conf_threshold, capacity, cmp="ge",
+                        score_index=score_index)
+
+
+def nms(boxes: jnp.ndarray, scores: jnp.ndarray, iou_threshold: float,
+        max_out: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Greedy non-maximum suppression (YOLO post-processing, paper Fig. 1).
+
+    ``boxes``: (N, 4) xywh.  Static-shape greedy NMS via fori_loop —
+    the evaluate scheme applied iteratively.  Returns (keep_idx, count).
+    """
+    n = boxes.shape[0]
+    x, y, w, h = boxes[:, 0], boxes[:, 1], boxes[:, 2], boxes[:, 3]
+    x1, y1, x2, y2 = x - w / 2, y - h / 2, x + w / 2, y + h / 2
+    area = jnp.maximum(x2 - x1, 0) * jnp.maximum(y2 - y1, 0)
+
+    def iou(i):
+        xx1 = jnp.maximum(x1[i], x1)
+        yy1 = jnp.maximum(y1[i], y1)
+        xx2 = jnp.minimum(x2[i], x2)
+        yy2 = jnp.minimum(y2[i], y2)
+        inter = jnp.maximum(xx2 - xx1, 0) * jnp.maximum(yy2 - yy1, 0)
+        return inter / jnp.maximum(area[i] + area - inter, 1e-9)
+
+    def body(k, st):
+        live, keep, cnt = st
+        masked = jnp.where(live, scores, -jnp.inf)
+        i = jnp.argmax(masked)
+        ok = masked[i] > -jnp.inf
+        keep = keep.at[cnt].set(jnp.where(ok, i, n))
+        cnt = cnt + ok.astype(jnp.int32)
+        sup = iou(i) > iou_threshold
+        live = live & ~sup & ~(jnp.arange(n) == i)
+        live = live & ok  # once empty, stay empty
+        return live, keep, cnt
+
+    live0 = jnp.ones((n,), dtype=bool)
+    keep0 = jnp.full((max_out,), n, dtype=jnp.int32)
+    _, keep, cnt = jax.lax.fori_loop(0, max_out, body, (live0, keep0, jnp.int32(0)))
+    return keep, cnt

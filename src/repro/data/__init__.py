@@ -1,0 +1,2 @@
+from repro.data.pipeline import (PrefetchPipeline, SyntheticLM,  # noqa: F401
+                                 make_batch_specs)

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import (  # noqa: F401
+    flash_attention_call, flash_decode_call)
+from repro.kernels.flash_attention.ref import attention_ref, decode_ref  # noqa: F401

@@ -1,0 +1,38 @@
+"""Pure-jnp attention oracle."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """q, k, v: (BH, S, D) fp; plain softmax attention in fp32."""
+    BH, S, D = q.shape
+    Sk = k.shape[1]
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(S)[:, None]
+        ki = jnp.arange(Sk)[None, :]
+        s = jnp.where(qi >= ki, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_ref(q, k, v, length, *, scale=None):
+    """q: (BH, 1, D); k/v: (BH, S, D); attend to positions < length."""
+    BH, S, D = k.shape
+    if scale is None:
+        scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, None, :] < length
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

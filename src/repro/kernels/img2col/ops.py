@@ -1,0 +1,19 @@
+"""Jit'd wrappers for the img2col / conv kernels."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.img2col.img2col import conv2d, img2col
+
+
+@partial(jax.jit, static_argnames=("kh", "kw", "stride", "pad", "interpret"))
+def img2col_call(x, *, kh, kw, stride=1, pad=0, interpret=True):
+    return img2col(x, kh, kw, stride, pad, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("stride", "pad", "interpret"))
+def conv2d_call(x, w, *, stride=1, pad=0, interpret=True):
+    return conv2d(x, w, stride, pad, interpret=interpret)

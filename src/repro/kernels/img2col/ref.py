@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for img2col + implicit-GEMM conv."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import tm_ops
+
+
+def img2col_ref(x: jnp.ndarray, kh: int, kw: int, stride: int = 1,
+                pad: int = 0) -> jnp.ndarray:
+    return tm_ops.img2col(x, kh, kw, stride=stride, pad=pad)
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray, stride: int = 1,
+               pad: int = 0) -> jnp.ndarray:
+    kh, kw, C, OC = w.shape
+    H, W, _ = x.shape
+    OH = (H + 2 * pad - kh) // stride + 1
+    OW = (W + 2 * pad - kw) // stride + 1
+    patches = img2col_ref(x, kh, kw, stride, pad)  # (OH·OW, kh·kw·C)
+    out = patches @ w.reshape(kh * kw * C, OC)
+    return out.reshape(OH, OW, OC)

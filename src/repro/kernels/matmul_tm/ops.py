@@ -1,0 +1,46 @@
+"""Jit'd wrappers for matmul with TM-epilogue output forwarding."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.affine import MixedRadixMap
+from repro.kernels.matmul_tm.matmul_tm import (
+    matmul_tm, pixel_shuffle_epilogue, transpose_epilogue)
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul_call(x, w, *, bm=128, bn=128, bk=128, interpret=True):
+    return matmul_tm(x, w, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul_transpose_call(x, w, *, bm=128, bn=128, bk=128, interpret=True):
+    M, K = x.shape
+    N = w.shape[1]
+    bm, bn = min(bm, M), min(bn, N)
+    ep = transpose_epilogue(M, N, bm, bn)
+    return matmul_tm(x, w, bm=bm, bn=bn, bk=bk, interpret=interpret, **ep)
+
+
+@partial(jax.jit, static_argnames=("H", "W", "C", "s", "bk", "interpret"))
+def matmul_pixel_shuffle_call(x, w, *, H, W, C, s, bk=128, interpret=True):
+    """(H·W, K) @ (K, C·s²) committed directly as the (H·s, W·s, C) image."""
+    K = x.shape[1]
+    ep = pixel_shuffle_epilogue(H, W, C, s)
+    return matmul_tm(x, w, bm=W, bn=C * s * s, bk=min(bk, K),
+                     interpret=interpret, **ep)
+
+
+def matmul_tm_call(x: jnp.ndarray, w: jnp.ndarray, m: MixedRadixMap, *,
+                   interpret: bool = True) -> jnp.ndarray:
+    """Generic entry: decode the map into a supported epilogue or fall back
+    to matmul followed by the generic tm_affine kernel (two passes)."""
+    from repro.kernels.tm_affine.ops import tm_affine_call
+    if m.is_pure_permutation() and m.permutation() == (1, 0):
+        return matmul_transpose_call(x, w, interpret=interpret)
+    y = matmul_call(x, w, interpret=interpret)
+    return tm_affine_call(y, m, interpret=interpret)

@@ -1,0 +1,22 @@
+"""Pure-jnp oracles for matmul + TM epilogues."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    return x @ w
+
+
+def matmul_transpose_ref(x, w):
+    return (x @ w).T
+
+
+def matmul_pixel_shuffle_ref(x, w, H, W, C, s):
+    """x rows are image pixels in raster order: (H·W, K) @ (K, C·s²) then
+    PixelShuffle with the paper's c-major channel layout
+    (c_i = c·s² + dy·s + dx)."""
+    y = (x @ w).reshape(H, W, C, s, s)        # (H, W, C, dy, dx)
+    y = y.transpose(0, 3, 1, 4, 2)            # (H, dy, W, dx, C)
+    return y.reshape(H * s, W * s, C)

@@ -1,0 +1,2 @@
+from repro.kernels.resize.ops import resize_call  # noqa: F401
+from repro.kernels.resize.ref import resize_ref  # noqa: F401

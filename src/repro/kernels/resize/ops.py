@@ -1,0 +1,10 @@
+from functools import partial
+
+import jax
+
+from repro.kernels.resize.resize import resize_bilinear
+
+
+@partial(jax.jit, static_argnames=("out_h", "out_w", "interpret"))
+def resize_call(x, *, out_h, out_w, interpret=True):
+    return resize_bilinear(x, out_h, out_w, interpret=interpret)

@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for bilinear resize: the tm_ops implementation."""
+
+from repro.core.tm_ops import resize_bilinear as resize_ref  # noqa: F401

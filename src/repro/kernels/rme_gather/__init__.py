@@ -1,0 +1,2 @@
+from repro.kernels.rme_gather.ops import assemble_call, evaluate_call  # noqa: F401
+from repro.kernels.rme_gather.ref import assemble_ref, evaluate_ref  # noqa: F401

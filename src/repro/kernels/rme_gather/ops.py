@@ -1,0 +1,17 @@
+from functools import partial
+
+import jax
+
+from repro.kernels.rme_gather.rme_gather import assemble, evaluate
+
+
+@partial(jax.jit, static_argnames=("capacity", "cmp", "score_index", "interpret"))
+def evaluate_call(x, threshold, *, capacity, cmp="ge", score_index=0,
+                  interpret=True):
+    return evaluate(x, threshold, capacity, cmp=cmp, score_index=score_index,
+                    interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("capacity", "interpret"))
+def assemble_call(x, mask, *, capacity, interpret=True):
+    return assemble(x, mask, capacity, interpret=interpret)

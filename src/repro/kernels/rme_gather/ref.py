@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: the core RME implementation."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import rme
+
+
+def evaluate_ref(x, threshold, capacity, *, cmp="ge", score_index=0):
+    rows, idx, cnt = rme.evaluate(x, threshold, capacity, cmp=cmp,
+                                  score_index=score_index)
+    return rows, idx, jnp.reshape(cnt, (1,))
+
+
+def assemble_ref(x, mask, capacity):
+    rows, cnt = rme.assemble(x, mask, capacity)
+    return rows, jnp.reshape(cnt, (1,))

@@ -1,0 +1,98 @@
+"""RME compaction Pallas kernel — assemble/evaluate on TPU.
+
+The masking crossbar of the paper's RME has no lane-shuffle analogue on TPU;
+the idiomatic equivalent is *sort-based compaction*: a stable argsort on the
+inverted mask moves surviving records to the front in original order, in one
+vectorized pass.  The kernel fuses: score -> predicate -> compaction ->
+gather, producing a statically shaped packed block (the commit buffer) plus
+a survivor count — this is Bboxcal (paper Fig. 2c) end to end, and the same
+configuration drives MoE token dispatch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _evaluate_kernel(x_ref, thr_ref, o_ref, idx_ref, cnt_ref, *,
+                     cmp: str, score_index: int, capacity: int):
+    x = x_ref[...]                       # (N, D)
+    n = x.shape[0]
+    scores = x[:, score_index]
+    thr = thr_ref[0]
+    mask = {
+        "ge": scores >= thr, "gt": scores > thr,
+        "le": scores <= thr, "lt": scores < thr,
+    }[cmp]
+    # stable sort: survivors first, original order preserved
+    order = jnp.argsort(jnp.where(mask, 0, 1), stable=True).astype(jnp.int32)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    take = order[:capacity]
+    rows = jnp.take(x, take, axis=0)
+    live = (jnp.arange(capacity) < cnt)
+    o_ref[...] = jnp.where(live[:, None], rows, jnp.zeros_like(rows))
+    idx_ref[...] = jnp.where(live, take, n).astype(jnp.int32)
+    cnt_ref[...] = jnp.minimum(cnt, capacity).reshape(1)
+
+
+def evaluate(x: jnp.ndarray, threshold, capacity: int, *, cmp: str = "ge",
+             score_index: int = 0, interpret: bool = True):
+    """Threshold-filter rows of (N, D) -> packed (capacity, D) + idx + count."""
+    N, D = x.shape
+    kern = functools.partial(_evaluate_kernel, cmp=cmp,
+                             score_index=score_index, capacity=capacity)
+    thr = jnp.asarray([threshold], dtype=x.dtype)
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((N, D), lambda i: (0, 0)),
+                  pl.BlockSpec((1,), lambda i: (0,))],
+        out_specs=[
+            pl.BlockSpec((capacity, D), lambda i: (0, 0)),
+            pl.BlockSpec((capacity,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((capacity, D), x.dtype),
+            jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, thr)
+
+
+def _assemble_kernel(x_ref, mask_ref, o_ref, cnt_ref, *, capacity: int):
+    x = x_ref[...]
+    mask = mask_ref[...] != 0
+    order = jnp.argsort(jnp.where(mask, 0, 1), stable=True).astype(jnp.int32)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    rows = jnp.take(x, order[:capacity], axis=0)
+    live = (jnp.arange(capacity) < cnt)
+    o_ref[...] = jnp.where(live[:, None], rows, jnp.zeros_like(rows))
+    cnt_ref[...] = jnp.minimum(cnt, capacity).reshape(1)
+
+
+def assemble(x: jnp.ndarray, mask: jnp.ndarray, capacity: int, *,
+             interpret: bool = True):
+    """Pack rows of (N, D) selected by a runtime mask -> (capacity, D) + count."""
+    N, D = x.shape
+    kern = functools.partial(_assemble_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kern,
+        grid=(1,),
+        in_specs=[pl.BlockSpec((N, D), lambda i: (0, 0)),
+                  pl.BlockSpec((N,), lambda i: (0,))],
+        out_specs=[
+            pl.BlockSpec((capacity, D), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((capacity, D), x.dtype),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, mask.astype(jnp.int32))

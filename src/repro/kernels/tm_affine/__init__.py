@@ -1,0 +1,2 @@
+from repro.kernels.tm_affine.ops import plan_of, tm_affine_call  # noqa: F401
+from repro.kernels.tm_affine.ref import tm_affine_ref  # noqa: F401

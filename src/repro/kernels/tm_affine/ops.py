@@ -1,0 +1,22 @@
+"""Jit'd public wrapper for the generic TM kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.affine import MixedRadixMap
+from repro.kernels.tm_affine.tm_affine import analyze_block_mode, tm_affine
+
+
+@partial(jax.jit, static_argnums=(1,), static_argnames=("interpret", "force_mode"))
+def tm_affine_call(x: jnp.ndarray, m: MixedRadixMap, *, interpret: bool = True,
+                   force_mode: str | None = None) -> jnp.ndarray:
+    return tm_affine(x, m, interpret=interpret, force_mode=force_mode)
+
+
+def plan_of(m: MixedRadixMap):
+    """Expose the decode step (block plan or None) for tests/benchmarks."""
+    return analyze_block_mode(m)

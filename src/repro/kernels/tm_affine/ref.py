@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tm_affine kernel: the core engine itself."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.affine import MixedRadixMap
+from repro.core.engine import apply_map
+
+
+def tm_affine_ref(x: jnp.ndarray, m: MixedRadixMap) -> jnp.ndarray:
+    return apply_map(m, x)

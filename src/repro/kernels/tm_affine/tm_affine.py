@@ -1,0 +1,229 @@
+"""Generic coarse-grained TM Pallas kernel — the TPU-native address generator.
+
+Two execution modes, selected by analyzing the :class:`MixedRadixMap` (the
+"instruction decode" step of the TMU, performed at trace time):
+
+* **block mode** — the map lifts to *block* granularity: every output block
+  is exactly one input block (possibly flipped along some axes).  Then the
+  Pallas ``BlockSpec.index_map`` IS the paper's address generator: the grid
+  sequencer evaluates the affine block map each step to drive the HBM→VMEM
+  DMA, and the kernel body applies only the intra-block residual (axis
+  permutation / flips).  Covers Transpose, Rot90, Split/Route bands, Add,
+  head-layout permutes — zero index tensors, pure DMA re-addressing.
+
+* **gather mode** — general fallback: flat gather indices are precomputed at
+  trace time (they fold to constants under jit, exactly like loading the
+  TMU's address registers) and streamed in blocks alongside the data; the
+  kernel gathers rows from a VMEM-resident input slab.  Covers PixelShuffle,
+  Img2col, Rearrange, Upsample and any future (A, B) pair.
+
+Both modes tile the output in (8·k, 128·m)-aligned VMEM blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from fractions import Fraction
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.affine import MixedRadixMap
+from repro.core.engine import gather_indices
+
+
+# ---------------------------------------------------------------------------
+# block-mode analysis
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockPlan:
+    """Lifted block-level form of a signed-permutation affine map.
+
+    For out axis ``i``: input axis ``src_axis[i]`` supplies the data;
+    ``sign[i]`` = ±1 (−1 ⇒ reversed); ``offset[i]`` = constant shift in
+    elements.  Validity: in_coord[src_axis[i]] = sign[i]·out_coord[i] +
+    offset[i], offsets divisible by the chosen block size.
+    """
+
+    src_axis: tuple[int, ...]
+    sign: tuple[int, ...]
+    offset: tuple[int, ...]
+    block: tuple[int, ...]          # out-block shape
+    grid: tuple[int, ...]           # out grid
+    perm: tuple[int, ...]           # in-block axis permutation for the body
+
+
+def analyze_block_mode(m: MixedRadixMap,
+                       block: tuple[int, ...] | None = None) -> BlockPlan | None:
+    """Return a BlockPlan if the map is a signed permutation w/ liftable offsets."""
+    if m.splits or m.digit_bounds:
+        return None
+    n_out, n_in = len(m.out_shape), len(m.in_shape)
+    if n_out != n_in:
+        return None
+    src_of_in: dict[int, tuple[int, int, int]] = {}  # in_axis -> (out_axis, sign, off)
+    for i, (row, off) in enumerate(zip(m.affine.A, m.affine.b)):
+        nz = [(j, a) for j, a in enumerate(row) if a != 0]
+        if len(nz) != 1:
+            return None
+        j, a = nz[0]
+        if a not in (1, -1) or off.denominator != 1:
+            return None
+        src_of_in[i] = (j, int(a), int(off))
+    if len(src_of_in) != n_in:
+        return None
+    # invert: for each out axis, which in axis it feeds
+    src_axis = [0] * n_out
+    sign = [1] * n_out
+    offset = [0] * n_out
+    for in_ax, (out_ax, s, off) in src_of_in.items():
+        src_axis[out_ax] = in_ax
+        sign[out_ax] = s
+        offset[out_ax] = off
+    if block is None:
+        block = _default_block(m.out_shape)
+    grid = []
+    for d, (size, bs) in enumerate(zip(m.out_shape, block)):
+        if size % bs:
+            return None
+        # offsets must be block-aligned on the *input* axis; block size on the
+        # input axis equals bs (same axis pairing).  sign=+1: in = out + off,
+        # alignment needs off % bs == 0.  sign=-1: in = off - out, the block
+        # image is [off-(g+1)bs+1, off-g·bs] — one block iff (off+1) % bs == 0.
+        if sign[d] > 0 and offset[d] % bs:
+            return None
+        if sign[d] < 0 and (offset[d] + 1) % bs:
+            return None
+        if m.in_shape[src_axis[d]] % bs:
+            return None
+        grid.append(size // bs)
+    # perm for the body: out-block axes gather from in-block axes src_axis
+    return BlockPlan(tuple(src_axis), tuple(sign), tuple(offset),
+                     tuple(block), tuple(grid), tuple(src_axis))
+
+
+def _default_block(shape: tuple[int, ...]) -> tuple[int, ...]:
+    """(…, 8·k, 128·m)-aligned blocks, capped so the block fits VMEM."""
+    blk = list(shape)
+    if len(shape) >= 1:
+        blk[-1] = min(shape[-1], 128) if shape[-1] % 128 == 0 or shape[-1] < 128 \
+            else math.gcd(shape[-1], 128)
+    if len(shape) >= 2:
+        target = 256
+        b = math.gcd(shape[-2], target)
+        blk[-2] = b if b > 0 else shape[-2]
+    # clamp leading dims to 1-block granularity while VMEM budget exceeded
+    itemsize = 4
+    budget = 4 * 1024 * 1024  # 4 MB per buffer => double buffering fits VMEM
+    for d in range(len(shape) - 3, -1, -1):
+        blk[d] = 1
+    while math.prod(blk) * itemsize > budget and blk[-2] > 8:
+        blk[-2] //= 2
+    return tuple(blk)
+
+
+# ---------------------------------------------------------------------------
+# block-mode kernel
+# ---------------------------------------------------------------------------
+
+def _block_kernel(plan: BlockPlan):
+    def kernel(x_ref, o_ref):
+        val = x_ref[...]
+        # un-permute: out-block axis i <- in-block axis plan.perm[i]
+        val = jnp.transpose(val, axes=plan.perm) if plan.perm != tuple(
+            range(len(plan.perm))) else val
+        for ax, s in enumerate(plan.sign):
+            if s < 0:
+                val = jnp.flip(val, axis=ax)
+        o_ref[...] = val
+    return kernel
+
+
+def _block_call(x: jnp.ndarray, m: MixedRadixMap, plan: BlockPlan,
+                interpret: bool) -> jnp.ndarray:
+    n = len(plan.grid)
+
+    def in_index(*gidx):
+        # address generation at block granularity: the paper's Eq. 1 with
+        # coordinates in units of blocks.
+        out = [0] * n
+        for d in range(n):
+            g = gidx[d]
+            bs = plan.block[d]
+            if plan.sign[d] > 0:
+                ib = g + plan.offset[d] // bs          # in = out + off
+            else:
+                ib = (plan.offset[d] + 1) // bs - 1 - g  # in = off - out
+            out[plan.src_axis[d]] = ib
+        return tuple(out)
+
+    in_block = [0] * n
+    for d in range(n):
+        in_block[plan.src_axis[d]] = plan.block[d]
+
+    return pl.pallas_call(
+        _block_kernel(plan),
+        grid=plan.grid,
+        in_specs=[pl.BlockSpec(tuple(in_block), in_index)],
+        out_specs=pl.BlockSpec(plan.block, lambda *g: g),
+        out_shape=jax.ShapeDtypeStruct(m.out_shape, x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# gather-mode kernel
+# ---------------------------------------------------------------------------
+
+def _gather_kernel(x_ref, idx_ref, valid_ref, fill_ref, o_ref):
+    xf = x_ref[...].reshape(-1)
+    idx = idx_ref[...]
+    out = jnp.take(xf, idx.reshape(-1), axis=0).reshape(idx.shape)
+    valid = valid_ref[...]
+    o_ref[...] = jnp.where(valid, out, fill_ref[0].astype(out.dtype))
+
+
+def _gather_call(x: jnp.ndarray, m: MixedRadixMap, interpret: bool,
+                 row_block: int = 256) -> jnp.ndarray:
+    flat_idx, valid = gather_indices(m)  # folds to constants under jit
+    rows = math.prod(m.out_shape[:-1]) if len(m.out_shape) > 1 else 1
+    minor = m.out_shape[-1]
+    idx2 = flat_idx.reshape(rows, minor)
+    val2 = valid.reshape(rows, minor)
+    rb = min(row_block, rows)
+    while rows % rb:
+        rb -= 1
+    grid = (rows // rb,)
+    fill = jnp.asarray([m.fill], dtype=x.dtype)
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(x.shape, lambda i: (0,) * x.ndim),   # whole input slab
+            pl.BlockSpec((rb, minor), lambda i: (i, 0)),
+            pl.BlockSpec((rb, minor), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((rb, minor), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, minor), x.dtype),
+        interpret=interpret,
+    )(x, idx2, val2, fill)
+    return out.reshape(m.out_shape)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def tm_affine(x: jnp.ndarray, m: MixedRadixMap, *, interpret: bool = True,
+              block: tuple[int, ...] | None = None,
+              force_mode: str | None = None) -> jnp.ndarray:
+    """Execute a MixedRadixMap as a Pallas kernel (decode -> block|gather)."""
+    assert x.shape == m.in_shape, (x.shape, m.in_shape)
+    plan = None if force_mode == "gather" else analyze_block_mode(m, block)
+    if plan is not None and force_mode != "gather":
+        return _block_call(x, m, plan, interpret)
+    return _gather_call(x, m, interpret)

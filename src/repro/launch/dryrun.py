@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this builds the real step function (train_step for train_4k,
+prefill_step for prefill_32k, serve_step for decode shapes), jits it with
+the production shardings, lowers against ShapeDtypeStruct inputs (no
+allocation), compiles, and records:
+
+  * ``memory_analysis()``  — per-device bytes (args/outputs/temps): fits-HBM
+  * ``cost_analysis()``    — HLO FLOPs + bytes for the roofline terms
+  * collective bytes       — parsed from the post-SPMD optimized HLO
+    (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute operand sizes)
+
+Usage:
+  python -m repro.launch.dryrun --arch mistral-nemo-12b --shape train_4k \
+      --mesh single --out experiments/dryrun
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import math
+import re
+import sys
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_config, list_archs
+from repro.configs.shapes import SHAPES, cell_is_live, input_specs
+from repro.launch import hlo_cost
+from repro.launch.mesh import (make_production_mesh, rules_for_cell,
+                               specialize_rules)
+from repro.models.transformer import ModelConfig, init_lm
+from repro.runtime import sharding as shard_lib
+from repro.runtime.step import (init_train_state, make_decode_step,
+                                make_prefill_embeds_step, make_prefill_step,
+                                make_train_step, serve_state_specs,
+                                state_specs)
+
+# -- hardware constants (TPU v5e) -------------------------------------------
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+LINK_BW = 50e9           # bytes/s / link (ICI)
+
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=?\s*")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4,
+                "s64": 8, "u64": 8, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum result bytes of every collective in the optimized (post-SPMD)
+    per-device HLO.  Approximation: one result-sized transfer per device per
+    op (ring all-reduce is 2×; we keep the raw sum and report the op mix)."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        lhs, _, rhs = line.partition("=")
+        b = _shape_bytes(rhs.split("(")[0])
+        if b == 0:
+            b = _shape_bytes(lhs)
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+def _abstract_train_state(cfg: ModelConfig, compress: bool = False):
+    box = {}
+
+    def grab(key):
+        st, specs = init_train_state(cfg, key, compress=compress)
+        box["specs"] = specs
+        return st
+
+    shape = jax.eval_shape(grab, jax.random.PRNGKey(0))
+    return shape, box["specs"]
+
+
+def _abstract_params(cfg: ModelConfig):
+    box = {}
+
+    def grab(key):
+        p, specs = init_lm(cfg, key)
+        box["specs"] = specs
+        return p
+
+    shape = jax.eval_shape(grab, jax.random.PRNGKey(0))
+    return shape, box["specs"]
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh, *, compress=False):
+    """Returns (jitted_fn, example_args (ShapeDtypeStructs))."""
+    sp = SHAPES[shape_name]
+    long_ctx = shape_name == "long_500k"
+    rules = specialize_rules(rules_for_cell(sp.kind, long_context=long_ctx),
+                             cfg, mesh)
+    specs_in = input_specs(cfg, shape_name)
+
+    def nsh(pspec):
+        return NamedSharding(mesh, pspec)
+
+    with shard_lib.use_rules(mesh, rules):
+        if sp.kind == "train":
+            state_shape, pspecs = _abstract_train_state(cfg, compress)
+            st_specs = state_specs(pspecs, compress=compress)
+            st_sh = shard_lib.tree_sharding(st_specs, mesh, rules)
+            batch = specs_in["batch"]
+            if "tokens" in batch:
+                b_sh = {"tokens": nsh(shard_lib.spec_of(("batch", None))),
+                        "labels": nsh(shard_lib.spec_of(("batch", None)))}
+            else:
+                b_sh = {"embeds": nsh(shard_lib.spec_of(("batch", None, "embed"))),
+                        "labels": nsh(shard_lib.spec_of(("batch", None)))}
+            fn = make_train_step(cfg, compress=compress)
+
+            def train_fn(state, batch):
+                with shard_lib.use_rules(mesh, rules):
+                    return fn(state, batch)
+
+            jitted = jax.jit(train_fn,
+                             in_shardings=(st_sh, b_sh),
+                             out_shardings=(st_sh, None),
+                             donate_argnums=(0,))
+            return jitted, (state_shape, batch)
+
+        params_shape, pspecs = _abstract_params(cfg)
+        p_sh = shard_lib.tree_sharding(pspecs, mesh, rules)
+        c_specs, s_specs = serve_state_specs(cfg, long_context=long_ctx)
+        caches = specs_in.get("caches")
+        states = specs_in.get("states")
+        c_sh = shard_lib.tree_sharding(c_specs, mesh, rules) if caches else None
+        s_sh = shard_lib.tree_sharding(s_specs, mesh, rules) if states else None
+
+        if sp.kind == "prefill":
+            if "embeds" in specs_in:
+                fn = make_prefill_embeds_step(cfg)
+                tok = specs_in["embeds"]
+                tok_sh = nsh(shard_lib.spec_of(("batch", None, "embed")))
+            else:
+                fn = make_prefill_step(cfg)
+                tok = specs_in["tokens"]
+                tok_sh = nsh(shard_lib.spec_of(("batch", None)))
+
+            def prefill_fn(params, tok, caches, states):
+                with shard_lib.use_rules(mesh, rules):
+                    return fn(params, tok, caches, states)
+
+            jitted = jax.jit(prefill_fn,
+                             in_shardings=(p_sh, tok_sh, c_sh, s_sh),
+                             out_shardings=(None, c_sh, s_sh),
+                             donate_argnums=(2, 3))
+            return jitted, (params_shape, tok, caches, states)
+
+        # decode
+        fn = make_decode_step(cfg)
+        tok_sh = nsh(shard_lib.spec_of(("batch", None)))
+
+        def decode_fn(params, token, caches, states, index):
+            with shard_lib.use_rules(mesh, rules):
+                return fn(params, token, caches, states, index)
+
+        jitted = jax.jit(decode_fn,
+                         in_shardings=(p_sh, tok_sh, c_sh, s_sh, None),
+                         out_shardings=(tok_sh, None, c_sh, s_sh),
+                         donate_argnums=(2, 3))
+        return jitted, (params_shape, specs_in["token"], caches, states,
+                        specs_in["index"])
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference (per step)."""
+    sp = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if sp.kind == "train":
+        return 6.0 * n * sp.global_batch * sp.seq_len
+    if sp.kind == "prefill":
+        return 2.0 * n * sp.global_batch * sp.seq_len
+    return 2.0 * n * sp.global_batch  # decode: one token per sequence
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             out_dir: str | None = None, compress: bool = False) -> dict:
+    cfg = get_config(arch)
+    live, reason = cell_is_live(cfg, shape_name)
+    mesh_name = "multi" if multi_pod else "single"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "live": live, "reason": reason}
+    if not live:
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    t0 = time.time()
+    jitted, args = build_cell(cfg, shape_name, mesh, compress=compress)
+    lowered = jitted.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    # scan-aware analysis (XLA's cost_analysis counts while bodies once —
+    # see hlo_cost.py); totals are per-device (post-SPMD module)
+    totals = hlo_cost.analyze(hlo)
+    coll = {k: int(v) for k, v in totals.coll.items()}
+    coll_bytes_dev = totals.collective_bytes
+
+    flops_dev = totals.flops
+    bytes_dev = totals.bytes
+    flops_global = flops_dev * chips
+    t_compute = flops_global / (chips * PEAK_FLOPS)
+    t_memory = bytes_dev * chips / (chips * HBM_BW)
+    t_coll = coll_bytes_dev * chips / (chips * LINK_BW)
+    mf = model_flops(cfg, shape_name)
+
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    rec.update({
+        "chips": chips,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll_bytes_dev,
+        "collectives": coll,
+        "xla_cost_analysis": {"flops": float(cost.get("flops", 0.0)),
+                              "bytes": float(cost.get("bytes accessed", 0.0))},
+        "memory_analysis": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        **terms,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(flops_global, 1.0),
+        "step_time_bound_s": max(terms.values()),
+    })
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs())
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--compress", action="store_true",
+                    help="enable int8 gradient compression in train cells")
+    args = ap.parse_args(argv)
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    ok = True
+    for arch, shape in cells:
+        for mp in meshes:
+            try:
+                rec = run_cell(arch, shape, mp, out_dir=args.out,
+                               compress=args.compress)
+                if not rec["live"]:
+                    print(f"[skip] {arch} {shape} "
+                          f"{'multi' if mp else 'single'}: {rec['reason']}")
+                    continue
+                print(f"[ok]   {arch} {shape} {'multi' if mp else 'single'} "
+                      f"chips={rec['chips']} "
+                      f"compile={rec['compile_s']}s "
+                      f"dom={rec['dominant']} "
+                      f"t=({rec['compute_s']:.3e},{rec['memory_s']:.3e},"
+                      f"{rec['collective_s']:.3e})s "
+                      f"useful={rec['useful_flops_ratio']:.2f}")
+            except Exception as e:  # a failed cell is a bug in the system
+                ok = False
+                print(f"[FAIL] {arch} {shape} {'multi' if mp else 'single'}: "
+                      f"{type(e).__name__}: {e}")
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Serving driver: batched prefill + decode loop with KV caches/SSM states.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
+      --batch 4 --prompt-len 32 --gen 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_config, get_smoke, list_archs
+from repro.models.transformer import init_caches, init_lm, init_states
+from repro.runtime.step import make_decode_step, make_prefill_step
+
+
+def serve(cfg, *, batch=4, prompt_len=32, gen=32, seed=0, log=print):
+    params, _ = init_lm(cfg, jax.random.PRNGKey(seed))
+    max_len = prompt_len + gen
+    caches = init_caches(cfg, batch, max_len,
+                         dtype=jnp.float32 if cfg.dtype == jnp.float32
+                         else jnp.bfloat16)
+    states = init_states(cfg, batch)
+    prompts = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                 (batch, prompt_len), 0, cfg.vocab)
+
+    prefill = jax.jit(make_prefill_step(cfg), donate_argnums=(2, 3))
+    decode = jax.jit(make_decode_step(cfg), donate_argnums=(2, 3),
+                     static_argnames=())
+
+    t0 = time.monotonic()
+    lg, caches, states = prefill(params, prompts, caches, states)
+    tok = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    jax.block_until_ready(tok)
+    t_prefill = time.monotonic() - t0
+
+    out = [tok]
+    t0 = time.monotonic()
+    for t in range(prompt_len, prompt_len + gen - 1):
+        tok, lg, caches, states = decode(params, tok, caches, states, t)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.monotonic() - t0
+    toks = jnp.concatenate(out, axis=1)
+    tps = batch * (gen - 1) / max(t_decode, 1e-9)
+    log(f"prefill {batch}x{prompt_len}: {t_prefill*1e3:.1f} ms; "
+        f"decode {gen-1} steps: {t_decode*1e3:.1f} ms ({tps:.1f} tok/s)")
+    return toks, {"prefill_s": t_prefill, "decode_s": t_decode,
+                  "tokens_per_s": tps}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args(argv)
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    toks, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
+                        gen=args.gen)
+    print("generated token ids (first row):", toks[0][:16].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo built on the TM layer (repro.core.tm_ops)."""

@@ -1,0 +1,249 @@
+"""GQA attention assembled from TM ops + online-softmax attention.
+
+TM-layer integration (every op below is a paper operator):
+  * fused QKV projection → **Split** (channel split of the fused output)
+  * (B, S, H·Hd) → (B, S, H, Hd) head layout → coarse TM reshape
+  * KV-cache append at the decode position → **Route** (band write)
+  * GQA KV broadcast kv→q heads → **Upsample** along the head axis; executed
+    in *fused form* — the repeat is absorbed into the grouped einsum's
+    indexing, i.e. the Upsample map composes into the attention address
+    pattern and costs zero HBM traffic (the near-memory claim, applied)
+  * online-softmax streaming over KV blocks → the RME *evaluate* scheme
+    generalized to running max/sum
+
+The jnp paths below are what multi-pod lowering uses (XLA fuses them); the
+Pallas flash kernels in repro.kernels.flash_attention are the TPU hot-spot
+realization, numerically validated against the same oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope
+from repro.runtime.sharding import resolves_to, shard
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   dtype=jnp.float32):
+    kq, ko = jax.random.split(key)
+    fused = (n_heads + 2 * n_kv) * head_dim
+    wqkv = (jax.random.normal(kq, (d_model, fused), jnp.float32)
+            * d_model ** -0.5).astype(dtype)
+    wo = (jax.random.normal(ko, (n_heads * head_dim, d_model), jnp.float32)
+          * (n_heads * head_dim) ** -0.5).astype(dtype)
+    params = {"wqkv": wqkv, "wo": wo}
+    specs = {"wqkv": ("embed_fsdp", "heads"), "wo": ("heads", "embed_fsdp")}
+    return params, specs
+
+
+def qkv_split(p, x, n_heads: int, n_kv: int, head_dim: int):
+    """Fused projection + TM Split + head-layout reshape."""
+    qkv = x @ p["wqkv"]
+    qkv = shard(qkv, ("batch", None, "heads"))
+    B, S, _ = qkv.shape
+    q_end = n_heads * head_dim
+    k_end = q_end + n_kv * head_dim
+    q = qkv[..., :q_end].reshape(B, S, n_heads, head_dim)       # TM Split band 0
+    k = qkv[..., q_end:k_end].reshape(B, S, n_kv, head_dim)     # band 1
+    v = qkv[..., k_end:].reshape(B, S, n_kv, head_dim)          # band 2
+    return q, k, v
+
+
+def _grouped_scores(q, k, scale):
+    """q: (B, S, KV, G, D); k: (B, T, KV, D) -> (B, KV, G, S, T)."""
+    return jnp.einsum("bskgd,btkd->bkgst", q, k,
+                      preferred_element_type=jnp.float32) * scale
+
+
+def chunked_attention_triangular(q, k, v, *, chunk: int = 1024):
+    """Causal online-softmax attention over the lower triangle only.
+
+    §Perf hillclimb B3: the scanned version computes all nc² score blocks
+    and masks the upper triangle — ~2× wasted score traffic and FLOPs.  This
+    statically-unrolled version touches only the nc(nc+1)/2 live blocks
+    (diagonal blocks keep the in-block causal mask).  Exact same numerics.
+    """
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    chunk = min(chunk, S)
+    while S % chunk or T % chunk:
+        chunk -= 1
+    nc = S // chunk
+    if nc > 16:  # bound the unrolled block count (HLO size)
+        return chunked_attention(q, k, v, causal=True, chunk=chunk)
+    qg = q.reshape(B, nc, chunk, KV, G, D)
+    kc = k.reshape(B, nc, chunk, KV, D)
+    vc = v.reshape(B, nc, chunk, KV, D)
+    outs = []
+    for i in range(nc):
+        qb = qg[:, i]                              # (B, c, KV, G, D)
+        m = jnp.full((B, KV, G, chunk), -1e30, jnp.float32)
+        l = jnp.zeros((B, KV, G, chunk), jnp.float32)
+        acc = jnp.zeros((B, KV, G, chunk, D), jnp.float32)
+        for j in range(i + 1):                     # lower triangle only
+            s = jnp.einsum("bskgd,btkd->bkgst", qb, kc[:, j],
+                           preferred_element_type=jnp.float32) * scale
+            if j == i:  # diagonal block: in-block causal mask
+                mask = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bkgst,btkd->bkgsd", p, vc[:, j].astype(jnp.float32))
+            m = m_new
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    out = jnp.stack(outs, axis=1)                  # (B, nc, KV, G, c, D)
+    out = out.transpose(0, 1, 4, 2, 3, 5).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int = 1024,
+                      n_kv: int | None = None):
+    """Online-softmax attention, scanned over KV chunks (flash-style in XLA).
+
+    q: (B, S, H, D); k, v: (B, T, KV, D).  Returns (B, S, H, D).
+    Memory is O(S·chunk) per head group instead of O(S·T).
+    """
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, S, KV, G, D)
+    chunk = min(chunk, T)
+    while T % chunk:
+        chunk -= 1
+    nchunks = T // chunk
+    kc = k.reshape(B, nchunks, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nchunks, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+
+    m0 = jnp.full((B, KV, G, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, S, D), jnp.float32)
+
+    q_pos = jnp.arange(S)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        ci, kb, vb = inp  # kb: (B, chunk, KV, D)
+        s = _grouped_scores(qg, kb, scale)  # (B, KV, G, S, chunk)
+        if causal:
+            kpos = ci * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= kpos[None, :]
+            s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bkgst,btkd->bkgsd", p, vb.astype(jnp.float32))
+        acc = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.arange(nchunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, KV, G, S, D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def full_attention(q, k, v, *, causal: bool, kv_len=None):
+    """Reference/materialized path (small S or decode).
+
+    §Perf hillclimb C3: K/V stay in their storage dtype (bf16 cache) — the
+    score einsum accumulates in f32 (preferred_element_type) and the PV
+    einsum takes bf16 probabilities, so no f32 copies of the cache are ever
+    materialized (the flash-kernel dtype discipline, in XLA form)."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(D)
+    s = _grouped_scores(q.reshape(B, S, KV, G, D), k.astype(q.dtype), scale)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    if kv_len is not None:
+        mask = jnp.arange(T) < kv_len
+        s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bkgsd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, D)
+    return out.astype(q.dtype)
+
+
+def attention_block(p, x, inv_freq, *, n_heads: int, n_kv: int, head_dim: int,
+                    positions=None, cache=None, cache_index=None,
+                    causal: bool = True, chunk: int = 1024,
+                    triangular: bool = False):
+    """Full attention block.  With ``cache`` (decode/prefill serving): append
+    new K/V at ``cache_index`` (TM Route band write) and attend to the cache.
+
+    Returns (out, new_cache).
+    """
+    B, S, _ = x.shape
+    q, k, v = qkv_split(p, x, n_heads, n_kv, head_dim)
+    if positions is None:
+        base = 0 if cache_index is None else cache_index
+        positions = base + jnp.arange(S)
+        positions = jnp.broadcast_to(positions, (B, S))
+    q = apply_rope(q, positions, inv_freq)
+    k = apply_rope(k, positions, inv_freq)
+
+    if cache is not None:
+        # TM Route: write the new band into the KV cache at cache_index
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, cache_index, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        kv_len = cache_index + S
+        if S == 1:
+            # §Perf hillclimb C: without explicit constraints the SPMD
+            # propagator loses the cache's batch sharding through the DUS +
+            # grouped-einsum chain and all-gathers the whole cache per
+            # layer.  Decode-only: in prefill these constraints fight the
+            # propagator (and n_heads need not divide the model axis).
+            # needed when kv_seq→model (C2 flash-decode); redundant — and
+            # measured harmful (zamba2 long_500k) — when the cache is
+            # already data-sharded from the input shardings.
+            if resolves_to("kv_seq", "model"):
+                cache_axes = ("batch", "kv_seq", "kv_heads", None)
+                ck = shard(ck, cache_axes)
+                cv = shard(cv, cache_axes)
+                new_cache = {"k": ck, "v": cv}
+            out = full_attention(q, ck, cv, causal=False, kv_len=kv_len)
+        elif causal and triangular and S > 2048:
+            # prefill: causal within the fresh segment (cache assumed empty
+            # before cache_index == 0 prefill start)
+            out = chunked_attention_triangular(q, k, v, chunk=chunk)
+        else:
+            out = chunked_attention(q, k, v, causal=causal, chunk=chunk) \
+                if S > 2048 else full_attention(q, k, v, causal=causal)
+        out = out.reshape(B, S, n_heads * head_dim)
+        return out @ p["wo"], new_cache
+
+    if S > 2048:
+        out = chunked_attention_triangular(q, k, v, chunk=chunk) \
+            if (causal and triangular) \
+            else chunked_attention(q, k, v, causal=causal, chunk=chunk)
+    else:
+        out = full_attention(q, k, v, causal=causal)
+    out = out.reshape(B, S, n_heads * head_dim)
+    return out @ p["wo"], None
+
+
+def init_cache(B: int, max_len: int, n_kv: int, head_dim: int,
+               dtype=jnp.bfloat16):
+    z = jnp.zeros((B, max_len, n_kv, head_dim), dtype)
+    return {"k": z, "v": z}

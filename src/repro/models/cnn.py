@@ -1,0 +1,150 @@
+"""The paper's application networks: ESPCN, EDSR, YOLOv3-Tiny.
+
+These are the models of paper Table IV / Fig. 10 — the system-level
+demonstration that TM ops (Rearrange, PixelShuffle, Upsample, Route, Add,
+Bboxcal, Img2col) glue the compute-intensive convs.  Every TM op routes
+through ``repro.core.tm_ops``; convolutions use XLA's fused conv (the
+"TPU" role), with the Pallas implicit-GEMM conv (kernels/img2col) as the
+hot-spot variant.  ``*_tm_program`` helpers expose each network's TM
+instruction stream so the fusion pass / benchmarks can measure the unfused
+vs fused (near-memory) traffic exactly as Fig. 10b does.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tm_ops
+
+
+def conv2d(x, w, b=None, *, stride=1, pad="SAME"):
+    """x: (B, H, W, C); w: (kh, kw, C, OC)."""
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=pad,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    if b is not None:
+        out = out + b
+    return out
+
+
+def _w(key, kh, kw, c, oc, dtype=jnp.float32):
+    fan = kh * kw * c
+    return (jax.random.normal(key, (kh, kw, c, oc), jnp.float32)
+            * fan ** -0.5).astype(dtype)
+
+
+# ===========================================================================
+# ESPCN — efficient sub-pixel CNN (paper Table IV row 1)
+# ===========================================================================
+
+def init_espcn(key, *, c_in=3, s=3, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "c1": _w(ks[0], 5, 5, c_in, 64, dtype),
+        "c2": _w(ks[1], 3, 3, 64, 32, dtype),
+        "c3": _w(ks[2], 3, 3, 32, c_in * s * s, dtype),
+        "s": s,
+    }
+
+
+def espcn(p, x):
+    """x: (B, H, W, 3) -> (B, H·s, W·s, 3).  Tail PixelShuffle is the TM op
+    the paper forwards from the TPU's last conv (output forwarding)."""
+    h = jnp.tanh(conv2d(x, p["c1"]))
+    h = jnp.tanh(conv2d(h, p["c2"]))
+    h = conv2d(h, p["c3"])
+    return tm_ops.pixel_shuffle(h, p["s"])
+
+
+# ===========================================================================
+# EDSR (paper Fig. 4b: conv -> N resblocks (Add) -> conv -> PixelShuffle)
+# ===========================================================================
+
+def init_edsr(key, *, c_in=3, feats=64, n_blocks=8, s=2, dtype=jnp.float32):
+    ks = jax.random.split(key, 3 + 2 * n_blocks)
+    p = {
+        "head": _w(ks[0], 3, 3, c_in, feats, dtype),
+        "blocks": [
+            {"c1": _w(ks[1 + 2 * i], 3, 3, feats, feats, dtype),
+             "c2": _w(ks[2 + 2 * i], 3, 3, feats, feats, dtype)}
+            for i in range(n_blocks)
+        ],
+        "up": _w(ks[-2], 3, 3, feats, c_in * s * s, dtype),
+        "s": s,
+    }
+    return p
+
+
+def edsr(p, x, *, res_scale=0.1):
+    h = conv2d(x, p["head"])
+    skip = h
+    for blk in p["blocks"]:
+        r = conv2d(jax.nn.relu(conv2d(h, blk["c1"])), blk["c2"])
+        h = tm_ops.add(h, r * res_scale)      # TM Add (residual)
+    h = tm_ops.add(h, skip)
+    h = conv2d(h, p["up"])
+    return tm_ops.pixel_shuffle(h, p["s"])    # TM PixelShuffle
+
+
+# ===========================================================================
+# YOLOv3-Tiny (paper Table IV: RR, RO, US, BB)
+# ===========================================================================
+
+def init_yolov3_tiny(key, *, c_in=16, n_classes=80, dtype=jnp.float32):
+    ks = jax.random.split(key, 10)
+    chans = [c_in, 16, 32, 64, 128, 256, 512]
+    p = {"backbone": [], "n_classes": n_classes}
+    for i in range(6):
+        p["backbone"].append(_w(ks[i], 3, 3, chans[i], chans[i + 1], dtype))
+    no = 3 * (5 + n_classes)
+    p["conv7"] = _w(ks[6], 3, 3, 512, 1024, dtype)
+    p["head1_reduce"] = _w(ks[7], 1, 1, 1024, 256, dtype)
+    p["head1"] = _w(ks[8], 1, 1, 256, no, dtype)
+    p["up_reduce"] = _w(ks[9], 1, 1, 256, 128, dtype)
+    p["head2"] = _w(jax.random.fold_in(key, 99), 1, 1, 128 + 128, no, dtype)
+    return p
+
+
+def yolov3_tiny(p, img):
+    """img: (B, H, W, 3) raw; preprocessing Rearrange -> backbone ->
+    Route/Upsample neck -> two heads.  Returns (pred1, pred2) raw grids."""
+    # paper preprocessing: byte Rearrange of the RGB stream into a
+    # burst-friendly 16-channel fmap (Table III: 448×448×3 -> 448×448×16,
+    # spatial preserved — channel interleave + zero pad to the burst width)
+    x = tm_ops.rearrange(img, 1, 16)
+    feats = []
+    for i, w in enumerate(p["backbone"]):
+        x = jax.nn.leaky_relu(conv2d(x, w), 0.1)
+        if i < 5:
+            x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                      (1, 2, 2, 1), (1, 2, 2, 1), "SAME")
+        feats.append(x)
+    x = jax.nn.leaky_relu(conv2d(x, p["conv7"]), 0.1)
+    r = jax.nn.leaky_relu(conv2d(x, p["head1_reduce"]), 0.1)
+    pred1 = conv2d(r, p["head1"])
+    u = jax.nn.leaky_relu(conv2d(r, p["up_reduce"]), 0.1)
+    u = tm_ops.upsample(u, 2)                          # TM Upsample
+    skip = feats[3]                                    # matching-stride fmap
+    cat = tm_ops.route([u, skip])                      # TM Route
+    pred2 = conv2d(cat, p["head2"])
+    return pred1, pred2
+
+
+def yolo_postprocess(pred, conf_threshold=0.5, capacity=256,
+                     iou_threshold=0.45, max_out=64):
+    """Bboxcal (RME evaluate) + NMS over a raw head grid.
+
+    pred: (B, Hg, Wg, 3·(5+nc)) -> per-image packed boxes."""
+    B, Hg, Wg, no = pred.shape
+    d = no // 3
+    rows = pred.reshape(B, Hg * Wg * 3, d)
+
+    def per_img(r):
+        boxes, idx, cnt = tm_ops.bboxcal(r, conf_threshold, capacity,
+                                         score_index=4)
+        scores = jnp.where(jnp.arange(capacity) < cnt, boxes[:, 4], -jnp.inf)
+        keep, kcnt = tm_ops.nms(boxes[:, :4], scores, iou_threshold, max_out)
+        return boxes, keep, cnt, kcnt
+
+    return jax.vmap(per_img)(rows)

@@ -1,0 +1,122 @@
+"""Shared layers: norms, MLPs, RoPE, embeddings — with logical shardings.
+
+Convention: every ``init_*`` returns ``(params, specs)`` — two parallel
+pytrees; ``specs`` leaves are tuples of logical axis names consumed by
+``repro.runtime.sharding``.  Apply functions are pure.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import shard
+
+
+def _norm_init(key, shape, scale):
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale)
+
+
+# -- linear ------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, *, axes=("embed_fsdp", "mlp"),
+                dtype=jnp.float32):
+    w = _norm_init(key, (d_in, d_out), d_in ** -0.5).astype(dtype)
+    return {"w": w}, {"w": axes}
+
+
+def linear(p, x):
+    return x @ p["w"]
+
+
+# -- rmsnorm -----------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"g": jnp.ones((d,), dtype)}, {"g": (None,)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["g"]).astype(x.dtype)
+
+
+# -- SwiGLU MLP (TM Split: one fused up-projection split into gate/up) --------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    wi = _norm_init(k1, (d_model, 2 * d_ff), d_model ** -0.5).astype(dtype)
+    wo = _norm_init(k2, (d_ff, d_model), d_ff ** -0.5).astype(dtype)
+    return (
+        {"wi": wi, "wo": wo},
+        {"wi": ("embed_fsdp", "mlp"), "wo": ("mlp", "embed_fsdp")},
+    )
+
+
+def mlp(p, x):
+    """SwiGLU.  The gate/up Split is the paper's Split op on the fused
+    projection output (channel split, TM coarse-grained)."""
+    h = x @ p["wi"]
+    h = shard(h, ("batch", None, "mlp"))
+    gate, up = jnp.split(h, 2, axis=-1)  # TM Split (fused by XLA into the GEMM)
+    h = jax.nn.silu(gate) * up
+    out = h @ p["wo"]
+    return out
+
+
+# -- embeddings ---------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.float32):
+    e = _norm_init(key, (vocab, d_model), 1.0).astype(dtype)
+    return {"e": e}, {"e": ("vocab", "embed")}
+
+
+def embed(p, tokens):
+    return jnp.take(p["e"], tokens, axis=0)
+
+
+def unembed(p, x, valid_vocab: int | None = None):
+    """Logits; vocab sharded over model axis (TP).  ``valid_vocab`` masks
+    padding rows (vocab padded for TP divisibility) to -1e9."""
+    logits = x @ p["e"].T
+    V = p["e"].shape[0]
+    if valid_vocab is not None and valid_vocab != V:
+        mask = jnp.arange(V) < valid_vocab
+        logits = jnp.where(mask, logits, jnp.asarray(-1e9, logits.dtype))
+    return shard(logits, ("batch", None, "vocab"))
+
+
+# -- RoPE ----------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    return inv  # (head_dim//2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               inv_freq: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * inv_freq  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- cross entropy --------------------------------------------------------------
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 ignore_id: int = -1) -> jnp.ndarray:
+    """Mean next-token CE over valid positions.  logits (B, S, V) fp32."""
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    lse = m[..., 0] + jnp.log(jnp.sum(jnp.exp(logits - m), axis=-1))
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    valid = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

@@ -1,0 +1,116 @@
+"""Mixture-of-Experts with RME-based token dispatch.
+
+The paper's RME schemes map one-to-one onto MoE routing:
+  * **evaluate** — top-k selection of router scores (threshold/maximal
+    retrieval, paper Section V-B.2)
+  * **assemble** — packing the tokens routed to each expert into a
+    contiguous expert-local batch (`rme.dispatch_tokens`, which is
+    ``vmap(assemble_indices)`` over per-expert masks)
+  * un-assemble — the weighted scatter-add back to token order
+
+Dispatch is *per sequence* (vmapped over batch), so under batch→data
+sharding every gather stays shard-local: expert parallelism costs no
+token all-to-all, only the expert-sharded einsum.  Capacity overflow drops
+tokens (standard capacity-factor semantics; the residual path keeps them).
+
+Supports shared experts (Qwen2-MoE: 4 shared + 60 routed top-4) and top-1
+routing (Llama4-Scout: 16 experts top-1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rme
+from repro.models.layers import init_mlp, mlp
+from repro.runtime.sharding import shard
+
+
+def init_moe(key, d_model: int, d_ff: int, num_experts: int, top_k: int,
+             n_shared: int = 0, shared_d_ff: int | None = None,
+             dtype=jnp.float32, pad_experts: int = 0):
+    E = max(pad_experts, num_experts)  # physical expert count (EP divisibility)
+    keys = jax.random.split(key, 4)
+    wr = (jax.random.normal(keys[0], (d_model, num_experts), jnp.float32)
+          * d_model ** -0.5).astype(dtype)
+    wi = (jax.random.normal(keys[1], (E, d_model, 2 * d_ff), jnp.float32)
+          * d_model ** -0.5).astype(dtype)
+    wo = (jax.random.normal(keys[2], (E, d_ff, d_model), jnp.float32)
+          * d_ff ** -0.5).astype(dtype)
+    params = {"router": wr, "wi": wi, "wo": wo}
+    specs = {"router": ("embed", None),
+             "wi": ("experts", "embed_fsdp", "expert_mlp"),
+             "wo": ("experts", "expert_mlp", "embed_fsdp")}
+    if n_shared:
+        sp, ss = init_mlp(keys[3], d_model, shared_d_ff or d_ff, dtype=dtype)
+        params["shared"] = sp
+        specs["shared"] = ss
+    return params, specs
+
+
+def _dispatch_one(x, gates, expert_of, num_experts: int, capacity: int):
+    """One sequence: x (S, D); expert_of (S, k) int; gates (S, k).
+
+    RME assemble per (expert, k-slot): pack token ids -> (E, C) indices,
+    gather tokens, and remember the inverse for the scatter back.
+    """
+    S, D = x.shape
+    k = expert_of.shape[1]
+    flat_expert = expert_of.reshape(-1)                 # (S·k,)
+    flat_gate = gates.reshape(-1)
+    token_of_slot = jnp.repeat(jnp.arange(S, dtype=jnp.int32), k)
+    idx, counts = rme.dispatch_tokens(flat_expert, num_experts, capacity)
+    # idx: (E, C) slot ids into the (S·k,) flat routing table; sentinel = S·k
+    valid = idx < S * k
+    safe = jnp.minimum(idx, S * k - 1)
+    tok = token_of_slot[safe]                           # (E, C) token ids
+    gate = jnp.where(valid, flat_gate[safe], 0.0)       # (E, C)
+    xe = jnp.where(valid[..., None], x[tok], 0.0)       # (E, C, D) gathered
+    return xe, gate, tok, valid
+
+
+def moe_block(p, x, *, num_experts: int, top_k: int, capacity_factor: float = 1.25,
+              router_softmax: bool = True, n_shared: int = 0):
+    """x: (B, S, D) -> (B, S, D)."""
+    B, S, D = x.shape
+    E_phys = p["wi"].shape[0]  # >= num_experts when padded for EP
+    scores = jnp.einsum("bsd,de->bse", x, p["router"]).astype(jnp.float32)
+    if router_softmax:
+        probs = jax.nn.softmax(scores, axis=-1)
+    else:
+        probs = jax.nn.sigmoid(scores)
+    # RME evaluate: top-k retrieval of router scores
+    gates, expert_of = jax.lax.top_k(probs, top_k)      # (B, S, k)
+    if router_softmax and top_k > 1:
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    capacity = int(capacity_factor * S * top_k / num_experts) + 1
+    capacity = min(capacity, S)
+
+    def per_seq(xs, gs, es):
+        xe, gate, tok, valid = _dispatch_one(xs, gs, es, E_phys, capacity)
+        return xe, gate, tok, valid
+
+    xe, gate, tok, valid = jax.vmap(per_seq)(x, gates, expert_of)
+    # xe: (B, E, C, D) — expert-major layout, experts sharded over "model"
+    xe = shard(xe, ("batch", "experts", None, None))
+    h = jnp.einsum("becd,edf->becf", xe, p["wi"])
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("becf,efd->becd", h, p["wo"])       # (B, E, C, D)
+    ye = ye * gate[..., None]
+    # un-assemble: weighted scatter-add back to token positions
+    def combine(y_seq, tok_seq, valid_seq):
+        yf = jnp.where(valid_seq[..., None], y_seq, 0.0).reshape(-1, D)
+        tf = jnp.where(valid_seq, tok_seq, S).reshape(-1)
+        out = jnp.zeros((S + 1, D), yf.dtype).at[tf].add(yf)
+        return out[:S]
+
+    out = jax.vmap(combine)(ye, tok, valid).astype(x.dtype)
+    if n_shared:
+        out = out + mlp(p["shared"], x)
+    # router z-loss / aux load-balancing loss (returned via aux)
+    me = jnp.mean(jax.nn.one_hot(expert_of[..., 0], num_experts), axis=(0, 1))
+    ce = jnp.mean(probs, axis=(0, 1))
+    aux = {"load_balance": num_experts * jnp.sum(me * ce)}
+    return out, aux

@@ -1,0 +1,307 @@
+"""State-space / linear-attention blocks: Mamba2 (SSD) and RWKV6 (Finch).
+
+TM-layer integration:
+  * RWKV6 token shift — the paper's **Rearrange** along time (byte-level
+    fine-grained shift becomes a lane-level shift of the sequence axis)
+  * per-head state layout transposes — coarse TM
+  * chunked recurrences — the Branch stage of the execution model: long
+    tensors processed in segments with carried state
+
+Both blocks expose a ``*_step`` single-token form (O(1) state decode) used by
+``serve_step`` for the long_500k shapes, and a scan form for training.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.runtime.sharding import shard
+
+
+# ===========================================================================
+# Mamba2-style SSD block (scalar-per-head decay, chunked linear recurrence)
+# ===========================================================================
+
+def init_mamba2(key, d_model: int, d_state: int = 64, expand: int = 2,
+                head_dim: int = 64, dtype=jnp.float32):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 5)
+    # in_proj: fused (z, x, B, C, dt) — TM Split on the output
+    d_proj = 2 * d_inner + 2 * d_state + n_heads
+    win = (jax.random.normal(ks[0], (d_model, d_proj), jnp.float32)
+           * d_model ** -0.5).astype(dtype)
+    wout = (jax.random.normal(ks[1], (d_inner, d_model), jnp.float32)
+            * d_inner ** -0.5).astype(dtype)
+    A_log = jnp.zeros((n_heads,), jnp.float32)
+    D = jnp.ones((n_heads,), jnp.float32)
+    dt_bias = jnp.log(jnp.exp(jnp.linspace(1e-3, 0.1, n_heads)) - 1.0 + 1e-9)
+    params = {"win": win, "wout": wout, "A_log": A_log, "D": D,
+              "dt_bias": dt_bias.astype(jnp.float32)}
+    specs = {"win": ("embed_fsdp", "mlp"), "wout": ("mlp", "embed_fsdp"),
+             "A_log": (None,), "D": (None,), "dt_bias": (None,)}
+    meta = dict(d_inner=d_inner, n_heads=n_heads, head_dim=head_dim,
+                d_state=d_state)
+    return params, specs, meta
+
+
+def _mamba2_split(p, u, meta):
+    d_inner, n_heads, d_state = meta["d_inner"], meta["n_heads"], meta["d_state"]
+    proj = u @ p["win"]
+    proj = shard(proj, ("batch", None, "mlp"))
+    z = proj[..., :d_inner]
+    x = proj[..., d_inner:2 * d_inner]
+    Bm = proj[..., 2 * d_inner:2 * d_inner + d_state]
+    Cm = proj[..., 2 * d_inner + d_state:2 * d_inner + 2 * d_state]
+    dt = proj[..., 2 * d_inner + 2 * d_state:]
+    return z, x, Bm, Cm, dt
+
+
+def mamba2_block(p, u, meta, *, chunk: int = 256, h0=None,
+                 return_state: bool = False):
+    """u: (B, S, D) -> (B, S, D).  Chunked SSD recurrence.
+
+    State h: (B, H, P, N) with P = head_dim, N = d_state; per head scalar
+    decay a_t = exp(-dt_t · exp(A_log)).  Within a chunk the recurrence is
+    evaluated with cumulative-product decays (all matmuls); chunk boundaries
+    carry the state (the Branch stage).  ``h0`` seeds the recurrence
+    (prefill continuation); ``return_state`` also returns the final state.
+    """
+    B, S, D = u.shape
+    H, P, N = meta["n_heads"], meta["head_dim"], meta["d_state"]
+    z, x, Bm, Cm, dt = _mamba2_split(p, u, meta)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, S, H)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))                        # decay (B,S,H)
+    xh = x.reshape(B, S, H, P).astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk -= 1
+    nc = S // chunk
+
+    def scan_chunk(h, inp):
+        # h: (B, H, P, N); inputs for one chunk of length c
+        ac, xc, Bc, Cc = inp   # (c, B, H), (c, B, H, P), (c, B, N), (c, B, N)
+        c = ac.shape[0]
+        # log-space cumulative decay within chunk
+        la = jnp.log(jnp.maximum(ac, 1e-30))         # (c, B, H)
+        cum = jnp.cumsum(la, axis=0)                 # prod_{u<=t} a_u
+        # contribution of carried state: h · prod a
+        dec_t = jnp.exp(cum)                         # (c, B, H)
+        # y_state[t] = C_t · (h · dec_t): (c,B,H,P)
+        hC = jnp.einsum("bhpn,cbn->cbhp", h, Cc)
+        y_state = hC * dec_t[..., None]
+        # intra-chunk: y_intra[t] = sum_{s<=t} (prod_{u in (s,t]} a_u) x_s (B_s·C_t)
+        # decay(s->t) = exp(cum[t] - cum[s]) for s<=t
+        dmat = jnp.exp(cum[None, :, :, :] - cum[:, None, :, :])   # (s, t, B, H)
+        smask = (jnp.arange(c)[:, None] <= jnp.arange(c)[None, :])
+        dmat = jnp.where(smask[:, :, None, None], dmat, 0.0)
+        bc = jnp.einsum("sbn,tbn->stb", Bc, Cc)                    # (s, t, B)
+        w = dmat * bc[:, :, :, None]                               # (s, t, B, H)
+        y_intra = jnp.einsum("stbh,sbhp->tbhp", w, xc)
+        # state update: h' = h · prod_all + sum_s prod_{u>s} a_u · x_s B_s^T
+        dec_all = jnp.exp(cum[-1])                                 # (B, H)
+        dec_tail = jnp.exp(cum[-1][None] - cum)                    # (c, B, H)
+        outer = jnp.einsum("cbh,cbhp,cbn->bhpn", dec_tail, xc, Bc)
+        h_new = h * dec_all[..., None, None] + outer
+        return h_new, y_state + y_intra
+
+    ac = a.transpose(1, 0, 2).reshape(nc, chunk, B, H)
+    xc = xh.transpose(1, 0, 2, 3).reshape(nc, chunk, B, H, P)
+    Bc = Bf.transpose(1, 0, 2).reshape(nc, chunk, B, N)
+    Cc = Cf.transpose(1, 0, 2).reshape(nc, chunk, B, N)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    hf, ys = jax.lax.scan(scan_chunk, h0, (ac, xc, Bc, Cc))
+    y = ys.reshape(nc * chunk, B, H, P).transpose(1, 0, 2, 3)      # (B, S, H, P)
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, -1) * jax.nn.silu(z.astype(jnp.float32))
+    out = (y.astype(u.dtype)) @ p["wout"]
+    if return_state:
+        return out, hf
+    return out
+
+
+def mamba2_step(p, u, state, meta):
+    """Single-token decode: u (B, 1, D), state (B, H, P, N) -> (y, state')."""
+    B = u.shape[0]
+    H, P, N = meta["n_heads"], meta["head_dim"], meta["d_state"]
+    z, x, Bm, Cm, dt = _mamba2_split(p, u, meta)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B, H)
+    a = jnp.exp(-dt * jnp.exp(p["A_log"]))
+    xh = x.reshape(B, H, P).astype(jnp.float32)
+    Bf = Bm[:, 0].astype(jnp.float32)   # (B, N)
+    Cf = Cm[:, 0].astype(jnp.float32)
+    state = state * a[..., None, None] + jnp.einsum("bhp,bn->bhpn", xh, Bf)
+    y = jnp.einsum("bhpn,bn->bhp", state, Cf) + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, H * P) * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(u.dtype)) @ p["wout"], state
+
+
+def mamba2_init_state(B: int, meta, dtype=jnp.float32):
+    return jnp.zeros((B, meta["n_heads"], meta["head_dim"], meta["d_state"]),
+                     dtype)
+
+
+# ===========================================================================
+# RWKV6 (Finch) — data-dependent decay linear attention
+# ===========================================================================
+
+def init_rwkv6(key, d_model: int, head_dim: int = 64, d_ff: int | None = None,
+               dtype=jnp.float32):
+    H = d_model // head_dim
+    ks = jax.random.split(key, 8)
+
+    def lin(k, i, o, s=None):
+        return (jax.random.normal(k, (i, o), jnp.float32)
+                * (s or i) ** -0.5).astype(dtype)
+
+    params = {
+        "w_rkvg": lin(ks[0], d_model, 4 * d_model),  # fused r,k,v,gate — TM Split
+        "w_decay": lin(ks[1], d_model, d_model),
+        "w_out": lin(ks[2], d_model, d_model),
+        "mu": jnp.full((5, d_model), 0.5, jnp.float32),  # token-shift mixers
+        "u_bonus": jnp.zeros((H, head_dim), jnp.float32),
+        "decay_base": jnp.full((d_model,), -6.0, jnp.float32),
+    }
+    specs = {
+        "w_rkvg": ("embed_fsdp", "heads"), "w_decay": ("embed", None),
+        "w_out": ("heads", "embed_fsdp"), "mu": (None, None),
+        "u_bonus": (None, None), "decay_base": (None,),
+    }
+    meta = dict(n_heads=H, head_dim=head_dim)
+    return params, specs, meta
+
+
+def token_shift(x, x_prev=None):
+    """TM Rearrange along time: x[t] -> x[t-1] (zero/state at t=0).
+
+    In the TMU encoding this is a coarse map with offset −1 on the sequence
+    axis; here it is one lane-aligned slice+concat.
+    """
+    B, S, D = x.shape
+    if x_prev is None:
+        x_prev = jnp.zeros((B, 1, D), x.dtype)
+    return jnp.concatenate([x_prev, x[:, :-1]], axis=1)
+
+
+def _rwkv_mix(p, x, shifted):
+    mu = p["mu"]
+    mix = lambda i: x * mu[i] + shifted * (1 - mu[i])
+    return mix(0), mix(1), mix(2), mix(3), mix(4)
+
+
+def rwkv6_block(p, x, meta, *, x_prev=None, state=None, chunk: int = 64,
+                stepwise: bool = False):
+    """x: (B, S, D) -> (B, S, D).
+
+    Default path is the **chunked** wkv recurrence (perf hillclimb A,
+    EXPERIMENTS.md §Perf): within a chunk of length c the per-channel
+    data-dependent decays are separable —
+        y_t^intra = Σ_{s<t} (r_t e^{cl_{t-1}-o})·(k_s e^{o-cl_s}) v_s
+    with cl the in-chunk cumulative log-decay and o = cl_c/2 a stability
+    offset — so the whole chunk is three (c,·) matmuls instead of c
+    state round-trips.  State crosses chunk boundaries only (the Branch
+    stage of the TM execution model).  ``stepwise=True`` keeps the exact
+    per-token scan (the reference / paper-faithful baseline).
+    """
+    B, S, D = x.shape
+    H, K = meta["n_heads"], meta["head_dim"]
+    shifted = token_shift(x, x_prev)
+    xr, xk, xv, xg, xw = _rwkv_mix(p, x, shifted)
+    # w_rkvg is stored fused (one weight, TM Split into 4 column bands);
+    # each band multiplies its own token-shift mix.
+    r = (xr @ p["w_rkvg"][:, :D]).reshape(B, S, H, K)
+    k = (xk @ p["w_rkvg"][:, D:2 * D]).reshape(B, S, H, K)
+    v = (xv @ p["w_rkvg"][:, 2 * D:3 * D]).reshape(B, S, H, K)
+    g = xg @ p["w_rkvg"][:, 3 * D:]
+    w = -jnp.exp(p["decay_base"] + (xw @ p["w_decay"]).astype(jnp.float32))
+    la = w.reshape(B, S, H, K)          # log-decay (negative)
+    r32, k32, v32 = (t.astype(jnp.float32) for t in (r, k, v))
+    u = p["u_bonus"]
+
+    if state is None:
+        state = jnp.zeros((B, H, K, K), jnp.float32)
+
+    if stepwise or S == 1:
+        def step(s, inp):
+            rt, kt, vt, lat = inp  # (B, H, K) each
+            kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+            y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+            s = s * jnp.exp(lat)[..., None] + kv
+            return s, y
+
+        rs, ks_, vs, las = (t.transpose(1, 0, 2, 3)
+                            for t in (r32, k32, v32, la))
+        state, ys = jax.lax.scan(step, state, (rs, ks_, vs, las))
+        y = ys.transpose(1, 0, 2, 3).reshape(B, S, D)
+    else:
+        c = chunk
+        while S % c:
+            c -= 1
+        nc = S // c
+        # Measured (EXPERIMENTS.md §Perf A2/A3): casting matmul operands to
+        # bf16 REGRESSES traffic 3× here — every astype is a fusion boundary
+        # that materializes a chunk tensor.  Keep the chunk pipeline f32.
+        cdt = jnp.float32
+        rc, kc, vc = (t.astype(cdt).reshape(B, nc, c, H, K)
+                      .transpose(1, 0, 2, 3, 4) for t in (r32, k32, v32))
+        lac = la.reshape(B, nc, c, H, K).transpose(1, 0, 2, 3, 4)
+        tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)  # strict lower
+
+        def chunk_step(s, inp):
+            rt, kt, vt, lat = inp          # (B, c, H, K); lat f32
+            cl = jnp.cumsum(lat, axis=1)   # inclusive cumulative log-decay
+            cl_prev = cl - lat             # exclusive (cl_{t-1})
+            cl_end = cl[:, -1:, :, :]      # cl_c
+            o = 0.5 * cl_end               # stability offset
+            r_t = rt * jnp.exp(cl_prev - o).astype(cdt)
+            k_s = kt * jnp.exp(o - cl).astype(cdt)
+            A = jnp.einsum("bthk,bshk->bhts", r_t, k_s) * tri[None, None]
+            diag = jnp.einsum("bthk,bthk->bth", rt,
+                              u.astype(cdt)[None, None] * kt)
+            y_intra = jnp.einsum("bhts,bshv->bthv", A.astype(cdt), vt) \
+                + diag[..., None].astype(jnp.float32) * vt.astype(jnp.float32)
+            r_dec = rt * jnp.exp(cl_prev).astype(cdt)
+            y_inter = jnp.einsum("bthk,bhkv->bthv", r_dec, s.astype(cdt))
+            k_tail = kt * jnp.exp(cl_end - cl).astype(cdt)
+            s = s * jnp.exp(cl_end[:, 0])[..., None] + \
+                jnp.einsum("bshk,bshv->bhkv", k_tail, vt).astype(jnp.float32)
+            return s, (y_intra.astype(jnp.float32) +
+                       y_inter.astype(jnp.float32))
+
+        state, ys = jax.lax.scan(chunk_step, state, (rc, kc, vc, lac))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, D)
+
+    y = y * jax.nn.silu(g.astype(jnp.float32))
+    out = (y.astype(x.dtype)) @ p["w_out"]
+    return out, x[:, -1:], state
+
+
+def rwkv6_step(p, x, x_prev, state, meta):
+    """Single-token decode: x (B, 1, D)."""
+    out, xl, state = rwkv6_block(p, x, meta, x_prev=x_prev, state=state)
+    return out, xl, state
+
+
+def init_rwkv_ffn(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    wk = (jax.random.normal(k1, (d_model, d_ff), jnp.float32)
+          * d_model ** -0.5).astype(dtype)
+    wv = (jax.random.normal(k2, (d_ff, d_model), jnp.float32)
+          * d_ff ** -0.5).astype(dtype)
+    return ({"wk": wk, "wv": wv, "mu": jnp.full((d_model,), 0.5, jnp.float32)},
+            {"wk": ("embed_fsdp", "mlp"), "wv": ("mlp", "embed_fsdp"),
+             "mu": (None,)})
+
+
+def rwkv_ffn(p, x, x_prev=None):
+    shifted = token_shift(x, x_prev)
+    xm = (x * p["mu"] + shifted * (1 - p["mu"])).astype(x.dtype)
+    h = jnp.square(jax.nn.relu(xm @ p["wk"]))
+    return (h @ p["wv"]).astype(x.dtype), x[:, -1:]

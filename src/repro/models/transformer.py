@@ -1,0 +1,551 @@
+"""Decoder-only LM covering all five assigned families.
+
+One config dataclass + one forward, dispatching per-family blocks:
+  dense  — GQA attention + SwiGLU (mistral-nemo, command-r+, phi4, granite,
+           musicgen backbone, internvl2 backbone)
+  moe    — GQA attention + RME-dispatched MoE (llama4-scout, qwen2-moe)
+  hybrid — Mamba2 stack + shared attention every k layers (zamba2)
+  ssm    — RWKV6 time-mix + channel-mix (rwkv6)
+
+Layers are *stacked* (leading L axis) and driven by ``jax.lax.scan`` with a
+configurable remat policy — the standard TPU production pattern (constant
+compile time, activation memory ∝ one layer).  All data-movement inside
+blocks routes through TM-layer semantics (Split/Route/Upsample/Rearrange,
+see repro.models.attention / moe / ssm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_rope, embed, init_embedding, init_mlp,
+                                 init_rmsnorm, mlp, rmsnorm, rope_freqs,
+                                 softmax_xent, unembed)
+from repro.runtime.sharding import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    rope_theta: float = 10000.0
+    # MoE
+    num_experts: int = 0
+    top_k: int = 0
+    n_shared: int = 0
+    moe_d_ff: int = 0              # routed-expert hidden dim (0 -> d_ff)
+    capacity_factor: float = 1.25  # expert capacity (tokens dropped beyond)
+    # pad the expert dimension to this count (0 = none) so expert parallelism
+    # divides the TP mesh axis (qwen2: 60 -> 64).  Routing stays over
+    # num_experts; pad experts receive no tokens (§Perf hillclimb B).
+    moe_pad_experts: int = 0
+    # drop sequence parallelism around MoE dispatch (§Perf B2; wins for
+    # high-expert-count archs, loses for llama4-class — opt-in per arch)
+    moe_drop_sp: bool = False
+
+    @property
+    def num_experts_padded(self) -> int:
+        return max(self.moe_pad_experts, self.num_experts)
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    attn_every: int = 0            # hybrid: shared attn block cadence
+    # modality stubs
+    frontend: str = "none"         # none | audio_stub | vision_stub
+    n_codebooks: int = 0
+    vit_dim: int = 0
+    pixel_unshuffle_s: int = 0
+    # execution
+    max_seq: int = 131072
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"            # none | full
+    attn_chunk: int = 1024
+    # "triangular" computes only the nc(nc+1)/2 live causal score blocks
+    # (§Perf B3) but its static q-chunking fights sequence-parallel sharding
+    # (SPMD involuntary remat) — enable it only where SP is off (MoE archs).
+    attn_impl: str = "scan"        # scan | triangular
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a 128 multiple (TP divisibility + lane alignment).
+        Pad logits are masked to -1e9 in unembed."""
+        return ((self.vocab + 127) // 128) * 128
+
+    def param_count(self) -> int:
+        """Total parameters (for 6·N·D model-FLOPs accounting)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        emb = V * D
+        if self.family in ("dense", "moe"):
+            at = D * (self.n_heads + 2 * self.n_kv_heads) * self.hd \
+                + self.n_heads * self.hd * D
+            if self.family == "dense":
+                ff = D * 2 * F + F * D
+            else:
+                fe = self.moe_d_ff or F
+                ff = self.num_experts * (D * 2 * fe + fe * D) + D * self.num_experts
+                if self.n_shared:
+                    ff += D * 2 * F + F * D
+            return emb + L * (at + ff + 2 * D)
+        if self.family == "ssm":
+            blk = 4 * D * D + D * D + D * D + D * 2 * F // 1 + F * D
+            return emb + L * blk
+        if self.family == "hybrid":
+            d_inner = self.ssm_expand * D
+            nh = d_inner // self.ssm_head_dim
+            m = D * (2 * d_inner + 2 * self.ssm_state + nh) + d_inner * D
+            # shared attention counted once (params reused every attn_every)
+            at = (2 * D) * (self.n_heads + 2 * self.n_kv_heads) * self.hd \
+                + self.n_heads * self.hd * (2 * D) + (2 * D) * D
+            return emb + L * (m + 2 * D) + at
+        raise ValueError(self.family)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE counts top_k + shared experts)."""
+        if self.family != "moe":
+            return self.param_count()
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        fe = self.moe_d_ff or F
+        at = D * (self.n_heads + 2 * self.n_kv_heads) * self.hd \
+            + self.n_heads * self.hd * D
+        ff = self.top_k * (D * 2 * fe + fe * D) + D * self.num_experts
+        if self.n_shared:
+            ff += D * 2 * F + F * D
+        return V * D + L * (at + ff + 2 * D)
+
+
+# ===========================================================================
+# per-family block init / apply
+# ===========================================================================
+
+def _init_dense_block(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    ap, asp = attn.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.hd, dtype=cfg.dtype)
+    mp, msp = init_mlp(k2, cfg.d_model, cfg.d_ff, dtype=cfg.dtype)
+    n1, s1 = init_rmsnorm(cfg.d_model)
+    n2, s2 = init_rmsnorm(cfg.d_model)
+    return ({"attn": ap, "mlp": mp, "ln1": n1, "ln2": n2},
+            {"attn": asp, "mlp": msp, "ln1": s1, "ln2": s2})
+
+
+def _init_moe_block(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    ap, asp = attn.init_attention(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.hd, dtype=cfg.dtype)
+    mp, msp = moe_mod.init_moe(k2, cfg.d_model, cfg.moe_d_ff or cfg.d_ff,
+                               cfg.num_experts, cfg.top_k,
+                               n_shared=cfg.n_shared, shared_d_ff=cfg.d_ff,
+                               dtype=cfg.dtype,
+                               pad_experts=cfg.moe_pad_experts)
+    n1, s1 = init_rmsnorm(cfg.d_model)
+    n2, s2 = init_rmsnorm(cfg.d_model)
+    return ({"attn": ap, "moe": mp, "ln1": n1, "ln2": n2},
+            {"attn": asp, "moe": msp, "ln1": s1, "ln2": s2})
+
+
+def _init_ssm_block(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    tp, tsp, meta = ssm_mod.init_rwkv6(k1, cfg.d_model,
+                                       head_dim=cfg.ssm_head_dim,
+                                       dtype=cfg.dtype)
+    fp, fsp = ssm_mod.init_rwkv_ffn(k2, cfg.d_model, cfg.d_ff, dtype=cfg.dtype)
+    n1, s1 = init_rmsnorm(cfg.d_model)
+    n2, s2 = init_rmsnorm(cfg.d_model)
+    return ({"tmix": tp, "ffn": fp, "ln1": n1, "ln2": n2},
+            {"tmix": tsp, "ffn": fsp, "ln1": s1, "ln2": s2})
+
+
+def _init_mamba_block(cfg: ModelConfig, key):
+    mp, msp, meta = ssm_mod.init_mamba2(key, cfg.d_model,
+                                        d_state=cfg.ssm_state,
+                                        expand=cfg.ssm_expand,
+                                        head_dim=cfg.ssm_head_dim,
+                                        dtype=cfg.dtype)
+    n1, s1 = init_rmsnorm(cfg.d_model)
+    return {"mamba": mp, "ln1": n1}, {"mamba": msp, "ln1": s1}
+
+
+_BLOCK_INIT = {"dense": _init_dense_block, "moe": _init_moe_block,
+               "ssm": _init_ssm_block, "hybrid": _init_mamba_block}
+
+
+def _stack_init(cfg: ModelConfig, key, n: int, init_fn):
+    keys = jax.random.split(key, n)
+    # specs are value-independent: capture them as a side effect of an
+    # abstract trace (strings can't be eval_shape outputs)
+    box = {}
+
+    def grab(k):
+        p, s = init_fn(cfg, k)
+        box["specs"] = s
+        return p
+
+    jax.eval_shape(grab, keys[0])
+    specs = box["specs"]
+    params = jax.vmap(lambda k: init_fn(cfg, k)[0])(keys)
+    lspecs = jax.tree.map(
+        lambda t: ("layers",) + tuple(t), specs,
+        is_leaf=lambda t: isinstance(t, tuple) and
+        all(isinstance(e, (str, type(None))) for e in t))
+    return params, lspecs
+
+
+def _ssm_meta(cfg: ModelConfig) -> dict:
+    if cfg.family == "ssm":
+        return dict(n_heads=cfg.d_model // cfg.ssm_head_dim,
+                    head_dim=cfg.ssm_head_dim)
+    d_inner = cfg.ssm_expand * cfg.d_model
+    return dict(d_inner=d_inner, n_heads=d_inner // cfg.ssm_head_dim,
+                head_dim=cfg.ssm_head_dim, d_state=cfg.ssm_state)
+
+
+def init_lm(cfg: ModelConfig, key):
+    """Returns (params, specs)."""
+    ks = jax.random.split(key, 6)
+    ep, esp = init_embedding(ks[0], cfg.padded_vocab, cfg.d_model,
+                             dtype=cfg.dtype)
+    fp, fsp = init_rmsnorm(cfg.d_model)
+    params: dict = {"embed": ep, "final_norm": fp}
+    specs: dict = {"embed": esp, "final_norm": fsp}
+
+    init_fn = _BLOCK_INIT[cfg.family]
+    params["blocks"], specs["blocks"] = _stack_init(cfg, ks[1], cfg.n_layers,
+                                                    init_fn)
+    if cfg.family == "hybrid":
+        # one shared attention block over concat(hidden, embed0) — 2·d_model
+        ap, asp = attn.init_attention(ks[2], 2 * cfg.d_model, cfg.n_heads,
+                                      cfg.n_kv_heads, cfg.hd, dtype=cfg.dtype)
+        pr = (jax.random.normal(ks[3], (cfg.n_heads * cfg.hd,), jnp.float32))
+        wproj = (jax.random.normal(ks[3], (2 * cfg.d_model, cfg.d_model),
+                                   jnp.float32) * (2 * cfg.d_model) ** -0.5
+                 ).astype(cfg.dtype)
+        # shared attn wo maps to 2·d_model; we give it its own down-proj
+        params["shared_attn"] = {"attn": ap, "proj": {"w": wproj},
+                                 "ln": init_rmsnorm(2 * cfg.d_model)[0]}
+        specs["shared_attn"] = {"attn": asp,
+                                "proj": {"w": ("embed_fsdp", "embed")},
+                                "ln": init_rmsnorm(2 * cfg.d_model)[1]}
+    if cfg.frontend == "vision_stub":
+        s = cfg.pixel_unshuffle_s or 2
+        d_in = cfg.vit_dim * s * s
+        wv = (jax.random.normal(ks[4], (d_in, cfg.d_model), jnp.float32)
+              * d_in ** -0.5).astype(cfg.dtype)
+        params["vision_proj"] = {"w": wv}
+        specs["vision_proj"] = {"w": (None, "embed")}
+    if cfg.frontend == "audio_stub" and cfg.n_codebooks:
+        ecb = (jax.random.normal(ks[5], (cfg.n_codebooks, cfg.vocab,
+                                         cfg.d_model), jnp.float32)
+               ).astype(cfg.dtype)
+        params["codebook_embed"] = {"e": ecb}
+        specs["codebook_embed"] = {"e": (None, "vocab", "embed")}
+    return params, specs
+
+
+# ---------------------------------------------------------------------------
+# block apply
+# ---------------------------------------------------------------------------
+
+def _dense_block(cfg: ModelConfig, p, x, inv_freq, cache=None, cache_index=None):
+    h, new_cache = attn.attention_block(
+        p["attn"], rmsnorm(p["ln1"], x), inv_freq,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+        cache=cache, cache_index=cache_index, chunk=cfg.attn_chunk,
+        triangular=cfg.attn_impl == "triangular")
+    x = x + h                                  # TM Add (residual)
+    x = x + mlp(p["mlp"], rmsnorm(p["ln2"], x))
+    x = shard(x, ("batch", "seq", "embed"))
+    return x, new_cache, {}
+
+
+def _moe_block(cfg: ModelConfig, p, x, inv_freq, cache=None, cache_index=None):
+    h, new_cache = attn.attention_block(
+        p["attn"], rmsnorm(p["ln1"], x), inv_freq,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+        cache=cache, cache_index=cache_index, chunk=cfg.attn_chunk,
+        triangular=cfg.attn_impl == "triangular")
+    x = x + h
+    m, aux = moe_mod.moe_block(p["moe"], rmsnorm(p["ln2"], x),
+                               num_experts=cfg.num_experts, top_k=cfg.top_k,
+                               n_shared=cfg.n_shared,
+                               capacity_factor=cfg.capacity_factor)
+    x = x + m
+    x = shard(x, ("batch", "seq", "embed"))
+    return x, new_cache, aux
+
+
+def _ssm_block(cfg: ModelConfig, p, x, state=None):
+    meta = _ssm_meta(cfg)
+    if state is None:
+        tprev = fprev = None
+        wkv = None
+    else:
+        tprev, fprev, wkv = state["tprev"], state["fprev"], state["wkv"]
+    h, tlast, wkv = ssm_mod.rwkv6_block(p["tmix"], rmsnorm(p["ln1"], x), meta,
+                                        x_prev=tprev, state=wkv)
+    x = x + h
+    f, flast = ssm_mod.rwkv_ffn(p["ffn"], rmsnorm(p["ln2"], x), x_prev=fprev)
+    x = x + f
+    x = shard(x, ("batch", "seq", "embed"))
+    return x, {"tprev": tlast, "fprev": flast, "wkv": wkv}
+
+
+def _mamba_block(cfg: ModelConfig, p, x, state=None):
+    meta = _ssm_meta(cfg)
+    if state is None:
+        y = ssm_mod.mamba2_block(p["mamba"], rmsnorm(p["ln1"], x), meta)
+        new_state = None
+    elif x.shape[1] == 1:  # decode step
+        y, new_state = ssm_mod.mamba2_step(p["mamba"], rmsnorm(p["ln1"], x),
+                                           state, meta)
+    else:  # prefill continuation: run chunked, carry the state out
+        y, new_state = ssm_mod.mamba2_block(p["mamba"], rmsnorm(p["ln1"], x),
+                                            meta, h0=state, return_state=True)
+    x = x + y
+    x = shard(x, ("batch", "seq", "embed"))
+    return x, new_state
+
+
+def _shared_attn(cfg: ModelConfig, p, x, embed0, inv_freq, cache=None,
+                 cache_index=None):
+    """Zamba2 shared block: attention over Route([hidden, embed0]) (TM Route
+    — channel concat), projected back to d_model.  The attention itself runs
+    at 2·d_model (its wo maps to 2·d_model), ``proj`` maps down."""
+    xin = jnp.concatenate([x, embed0], axis=-1)          # TM Route
+    h, new_cache = attn.attention_block(
+        p["attn"], rmsnorm(p["ln"], xin), inv_freq,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, head_dim=cfg.hd,
+        cache=cache, cache_index=cache_index, chunk=cfg.attn_chunk)
+    return x + h @ p["proj"]["w"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(cfg: ModelConfig, fn, *, serving: bool = False):
+    # remat only pays off under AD; in serving it just adds fusion barriers
+    if cfg.remat == "full" and not serving:
+        return jax.checkpoint(fn)
+    return fn
+
+
+def input_embed(cfg: ModelConfig, params, tokens=None, embeds=None):
+    if embeds is not None:
+        x = embeds.astype(cfg.dtype)
+    else:
+        x = embed(params["embed"], tokens)
+    return shard(x, ("batch", "seq", "embed"))
+
+
+def vision_prefix(cfg: ModelConfig, params, patch_embeds):
+    """InternVL2 projector: PixelUnshuffle (paper flagship op) on the patch
+    grid, then MLP to d_model.  patch_embeds: (B, Hp, Wp, vit_dim)."""
+    from repro.core import tm_ops
+    s = cfg.pixel_unshuffle_s or 2
+    x = tm_ops.pixel_unshuffle(patch_embeds.astype(cfg.dtype), s)
+    B, H, W, C = x.shape
+    x = x.reshape(B, H * W, C) @ params["vision_proj"]["w"]
+    return x
+
+
+def audio_embed(cfg: ModelConfig, params, codes):
+    """MusicGen frontend stub: per-codebook embeddings summed after the
+    EnCodec delay-pattern Rearrange (TM Rearrange along time: codebook k is
+    shifted right by k steps — an offset-only affine map).
+
+    codes: (B, K, S) int32 (K codebooks) -> (B, S, d_model)."""
+    B, K, S = codes.shape
+    def shift(c, k):
+        return jnp.roll(c, k, axis=-1).at[..., :k].set(0)
+    x = 0
+    for k in range(K):
+        sk = shift(codes[:, k], k)
+        x = x + jnp.take(params["codebook_embed"]["e"][k], sk, axis=0)
+    return x
+
+
+def forward(cfg: ModelConfig, params, *, tokens=None, embeds=None,
+            caches=None, cache_index=None, states=None):
+    """Run the backbone.  Returns (hidden, new_caches, new_states, aux).
+
+    ``caches``: stacked KV caches (attention families) — pytree with leading
+    L axis, scanned alongside the blocks.  ``states``: SSM/hybrid recurrent
+    state, same convention.
+    """
+    x = input_embed(cfg, params, tokens, embeds)
+    inv_freq = rope_freqs(cfg.hd, cfg.rope_theta)
+    aux_total = {}
+
+    if cfg.family in ("dense", "moe"):
+        block = _dense_block if cfg.family == "dense" else _moe_block
+
+        if caches is None:  # training / loss path
+            def body(carry, lp):
+                xc, aux_lb = carry
+                xo, _, aux = block(cfg, lp, xc, inv_freq)
+                return (xo, aux_lb + aux.get("load_balance", 0.0)), None
+
+            (x, lb), _ = jax.lax.scan(_maybe_remat(cfg, body),
+                                      (x, jnp.float32(0.0)), params["blocks"])
+            new_caches = None
+        else:
+            def body(carry, layer):
+                xc, aux_lb = carry
+                lp, cache = layer
+                xo, new_cache, aux = block(cfg, lp, xc, inv_freq, cache=cache,
+                                           cache_index=cache_index)
+                return (xo, aux_lb + aux.get("load_balance", 0.0)), new_cache
+
+            (x, lb), new_caches = jax.lax.scan(
+                _maybe_remat(cfg, body, serving=True), (x, jnp.float32(0.0)),
+                (params["blocks"], caches))
+        aux_total["load_balance"] = lb / cfg.n_layers
+        x = rmsnorm(params["final_norm"], x)
+        return x, new_caches, None, aux_total
+
+    if cfg.family == "ssm":
+        if states is None:
+            def body(xc, lp):
+                xo, _ = _ssm_block(cfg, lp, xc, state=None)
+                return xo, None
+
+            x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["blocks"])
+            new_states = None
+        else:
+            def body(xc, layer):
+                lp, st = layer
+                xo, new_st = _ssm_block(cfg, lp, xc, state=st)
+                return xo, new_st
+
+            x, new_states = jax.lax.scan(_maybe_remat(cfg, body, serving=True),
+                                         x, (params["blocks"], states))
+        x = rmsnorm(params["final_norm"], x)
+        return x, None, new_states, aux_total
+
+    if cfg.family == "hybrid":
+        k = cfg.attn_every or cfg.n_layers
+        n_groups, rem = divmod(cfg.n_layers, k)
+        embed0 = x
+        blocks = params["blocks"]
+        main = jax.tree.map(lambda a: a[:n_groups * k].reshape(
+            (n_groups, k) + a.shape[1:]), blocks)
+        tail = jax.tree.map(lambda a: a[n_groups * k:], blocks)
+        shared = params["shared_attn"]
+
+        if caches is None and states is None:  # training path
+            def group_body(xc, gp):
+                def inner(c2, lp):
+                    xo, _ = _mamba_block(cfg, lp, c2)
+                    return xo, None
+
+                xc, _ = jax.lax.scan(inner, xc, gp)
+                xc, _ = _shared_attn(cfg, shared, xc, embed0, inv_freq)
+                return xc, None
+
+            x, _ = jax.lax.scan(_maybe_remat(cfg, group_body), x, main)
+            if rem:
+                def tail_body(c2, lp):
+                    xo, _ = _mamba_block(cfg, lp, c2)
+                    return xo, None
+                x, _ = jax.lax.scan(tail_body, x, tail)
+            new_caches, new_states = None, None
+        else:
+            def group_body(xc, layer):
+                gp, st_g, cache = layer
+
+                def inner(c2, lyr):
+                    lp, st = lyr
+                    xo, new_st = _mamba_block(cfg, lp, c2, state=st)
+                    return xo, new_st
+
+                xc, new_st_g = jax.lax.scan(inner, xc, (gp, st_g))
+                xc, new_cache = _shared_attn(cfg, shared, xc, embed0,
+                                             inv_freq, cache=cache,
+                                             cache_index=cache_index)
+                return xc, (new_st_g, new_cache)
+
+            x, (new_main, new_caches) = jax.lax.scan(
+                _maybe_remat(cfg, group_body, serving=True), x,
+                (main, states["main"], caches))
+
+            if rem:
+                def tail_body(c2, lyr):
+                    lp, st = lyr
+                    xo, new_st = _mamba_block(cfg, lp, c2, state=st)
+                    return xo, new_st
+                x, new_tail = jax.lax.scan(tail_body, x,
+                                           (tail, states["tail"]))
+            else:
+                new_tail = states["tail"]
+            new_states = {"main": new_main, "tail": new_tail}
+        x = rmsnorm(params["final_norm"], x)
+        return x, new_caches, new_states, aux_total
+
+    raise ValueError(cfg.family)
+
+
+def logits(cfg: ModelConfig, params, hidden):
+    return unembed(params["embed"], hidden, valid_vocab=cfg.vocab)
+
+
+def lm_loss(cfg: ModelConfig, params, tokens, labels, *, embeds=None):
+    hidden, _, _, aux = forward(cfg, params, tokens=tokens, embeds=embeds)
+    lg = logits(cfg, params, hidden)
+    loss = softmax_xent(lg, labels)
+    if "load_balance" in aux:
+        loss = loss + 0.01 * aux["load_balance"]
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# serving state builders
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, B: int, max_len: int, dtype=jnp.bfloat16):
+    # k/v allocated separately (donation rejects aliased buffers)
+    if cfg.family in ("dense", "moe"):
+        shp = (cfg.n_layers, B, max_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    if cfg.family == "hybrid":
+        k = cfg.attn_every or cfg.n_layers
+        shp = (cfg.n_layers // k, B, max_len, cfg.n_kv_heads, cfg.hd)
+        return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+    return None
+
+
+def init_states(cfg: ModelConfig, B: int):
+    meta = _ssm_meta(cfg)
+    if cfg.family == "ssm":
+        L, D = cfg.n_layers, cfg.d_model
+        H, K = meta["n_heads"], meta["head_dim"]
+        return {"tprev": jnp.zeros((L, B, 1, D), cfg.dtype),
+                "fprev": jnp.zeros((L, B, 1, D), cfg.dtype),
+                "wkv": jnp.zeros((L, B, H, K, K), jnp.float32)}
+    if cfg.family == "hybrid":
+        k = cfg.attn_every or cfg.n_layers
+        n_groups, rem = divmod(cfg.n_layers, k)
+        H, P, N = meta["n_heads"], meta["head_dim"], meta["d_state"]
+        return {"main": jnp.zeros((n_groups, k, B, H, P, N), jnp.float32),
+                "tail": jnp.zeros((rem, B, H, P, N), jnp.float32)}
+    return None

@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,  # noqa: F401
+                               cosine_schedule, global_norm_clip)
+from repro.optim.compression import (compress_decompress,  # noqa: F401
+                                     compression_init)

@@ -1,0 +1,80 @@
+"""AdamW with fp32 master weights, global-norm clipping, cosine schedule.
+
+Mixed-precision discipline (production TPU default): model params live in
+bf16 (what matmuls read), the optimizer keeps fp32 master weights + moments.
+Master/moments inherit the parameter shardings, so under FSDP rules the
+optimizer state is fully sharded over the data axis (ZeRO-style).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class AdamWState:
+    step: jnp.ndarray
+    master: Any   # fp32 copies of params
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    f32 = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = jax.tree.map(jnp.zeros_like, f32)
+    return AdamWState(step=jnp.zeros((), jnp.int32), master=f32,
+                      m=zeros, v=jax.tree.map(jnp.zeros_like, f32))
+
+
+def global_norm_clip(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def adamw_update(grads, state: AdamWState, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, max_norm=1.0, param_dtype=jnp.bfloat16):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = global_norm_clip(grads, max_norm)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(g, mu, nu, w):
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mhat = mu / c1
+        nhat = nu / c2
+        w = w - lr * (mhat / (jnp.sqrt(nhat) + eps) + weight_decay * w)
+        return mu, nu, w
+
+    out = jax.tree.map(upd, grads, state.m, state.v, state.master)
+    m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda o: isinstance(o, tuple))
+    v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda o: isinstance(o, tuple))
+    master = jax.tree.map(lambda o: o[2], out, is_leaf=lambda o: isinstance(o, tuple))
+    params = jax.tree.map(lambda w: w.astype(param_dtype), master)
+    new_state = AdamWState(step=step, master=master, m=m, v=v)
+    return params, new_state, {"grad_norm": gnorm}
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    min_ratio: float = 0.1):
+    t = step.astype(jnp.float32)
+    warm = peak_lr * t / jnp.maximum(warmup, 1)
+    prog = jnp.clip((t - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                     (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(t < warmup, warm, cos)
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState,
+    lambda s: ((s.step, s.master, s.m, s.v), None),
+    lambda _, c: AdamWState(step=c[0], master=c[1], m=c[2], v=c[3]),
+)

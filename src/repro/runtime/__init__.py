@@ -1,0 +1,1 @@
+"""Distributed runtime: sharding rules, step builders, fault tolerance."""

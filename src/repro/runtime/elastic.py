@@ -1,0 +1,39 @@
+"""Elastic scaling: reshard a checkpointed state onto a different mesh.
+
+Node failure at scale rarely returns the same topology; the framework must
+restore a checkpoint saved on mesh A onto mesh B (fewer or more slices).
+Because checkpoints are stored as logical (unsharded) arrays and shardings
+are derived from *logical axis rules*, resharding is a device_put with the
+new mesh's NamedShardings — no format conversion.
+
+``global_batch`` stays fixed across re-meshes (the data pipeline re-splits
+per-host shards), so training curves are reproducible across topologies.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+from repro.runtime.sharding import tree_sharding
+
+
+def reshard_state(state, spec_tree, mesh: Mesh, rules: dict | None = None):
+    """device_put every leaf of ``state`` with shardings derived from the
+    logical ``spec_tree`` under ``mesh``/``rules``."""
+    shardings = tree_sharding(spec_tree, mesh, rules)
+
+    def put(x, s):
+        return jax.device_put(x, s)
+
+    return jax.tree.map(put, state, shardings)
+
+
+def validate_elastic(cfg_batch: int, mesh: Mesh) -> dict:
+    """Check the fixed global batch still divides the new data extent."""
+    import math
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    ok = cfg_batch % dp == 0
+    return {"data_parallel": dp, "per_shard_batch": cfg_batch // max(dp, 1),
+            "divisible": ok}

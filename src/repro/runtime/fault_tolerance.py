@@ -1,0 +1,88 @@
+"""Fault tolerance: heartbeat, straggler detection, supervised restarts.
+
+At thousand-node scale the failure model is: (a) hard node loss — detected
+by a missed heartbeat, recovered by checkpoint restore (possibly on a
+different mesh, see elastic.py); (b) stragglers — healthy-but-slow hosts
+that stall the synchronous collectives, detected by step-time outliers and
+mitigated by restarting/cordoning the slow host.
+
+This module is runnable on one host (the monitor watches the training
+thread) and is what ``launch/train.py`` wires around the step loop; the
+same logic runs per-host in a multi-controller deployment, with the
+coordinator acting on reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+
+class Heartbeat:
+    """Liveness monitor: the training loop beats once per step; a watcher
+    thread flags a stall when no beat arrives within ``deadline_s``."""
+
+    def __init__(self, deadline_s: float = 300.0):
+        self.deadline_s = deadline_s
+        self._last = time.monotonic()
+        self._lock = threading.Lock()
+
+    def beat(self):
+        with self._lock:
+            self._last = time.monotonic()
+
+    def stalled(self) -> bool:
+        with self._lock:
+            return (time.monotonic() - self._last) > self.deadline_s
+
+    def seconds_since_beat(self) -> float:
+        with self._lock:
+            return time.monotonic() - self._last
+
+
+@dataclasses.dataclass
+class StragglerDetector:
+    """EWMA step-time tracker; flags steps slower than ``threshold`` × the
+    running mean.  In multi-host deployments each host reports its flag to
+    the coordinator, which cordons repeat offenders."""
+
+    threshold: float = 2.0
+    alpha: float = 0.1
+    _mean: float = 0.0
+    _n: int = 0
+    flagged: int = 0
+
+    def record(self, step_time_s: float) -> bool:
+        self._n += 1
+        if self._n <= 3:  # warmup: compile steps are expected outliers
+            self._mean = step_time_s if self._mean == 0 else \
+                0.5 * (self._mean + step_time_s)
+            return False
+        is_straggler = step_time_s > self.threshold * self._mean
+        self._mean = (1 - self.alpha) * self._mean + self.alpha * step_time_s
+        if is_straggler:
+            self.flagged += 1
+        return is_straggler
+
+
+class RestartSupervisor:
+    """Run a step loop with checkpoint-restart on failure.
+
+    ``run(loop_fn, restore_fn)``: calls ``loop_fn(start_step, state)``;
+    on exception (simulated node failure in tests, real preemption in prod)
+    restores the latest checkpoint and retries, up to ``max_restarts``.
+    """
+
+    def __init__(self, max_restarts: int = 3):
+        self.max_restarts = max_restarts
+        self.restarts = 0
+
+    def run(self, loop_fn, restore_fn):
+        while True:
+            try:
+                return loop_fn(*restore_fn())
+            except Exception:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise

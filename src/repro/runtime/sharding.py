@@ -1,0 +1,146 @@
+"""Logical-axis sharding rules (MaxText-style) for single- and multi-pod meshes.
+
+Models annotate activations/params with *logical* axis names; the launcher
+installs a rules table mapping logical names to mesh axes.  Outside a rules
+context every annotation is a no-op, so the same model code runs on one CPU
+device (smoke tests) and on a 512-chip multi-pod mesh (dry-run) unchanged.
+
+Parallelism styles encoded in the default rules:
+  * DP   — batch over ("pod", "data")
+  * TP   — heads / mlp / vocab / experts over "model" (Megatron-style)
+  * SP   — inter-block activation seq over "model" (sequence parallelism)
+  * FSDP — weight "embed" rows over "data" (ZeRO-3: XLA all-gathers at use,
+           reduce-scatters grads; optimizer state stays sharded)
+  * EP   — experts over "model"
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+
+DEFAULT_RULES: dict[str, tuple[str, ...] | None] = {
+    "batch": ("pod", "data"),
+    "seq": ("model",),          # sequence parallelism between blocks
+    "kv_seq": ("data",),        # long-context decode: KV cache seq over data
+    "embed": None,
+    "embed_fsdp": ("data",),    # FSDP weight sharding axis
+    "heads": ("model",),
+    "kv_heads": None,           # kv heads replicated under TP (repeat at use)
+    "head_dim": None,
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_mlp": None,
+    "layers": None,
+    "state": None,
+    "conv": None,
+    "cap": None,
+}
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: dict | None = None):
+    """Install (mesh, rules) for shard()/spec_of() in this thread."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    # drop mesh axes that don't exist (e.g. "pod" on the single-pod mesh)
+    axes = set(mesh.axis_names)
+    clean: dict[str, tuple[str, ...] | None] = {}
+    for k, v in rules.items():
+        if v is None:
+            clean[k] = None
+        else:
+            kept = tuple(a for a in v if a in axes)
+            clean[k] = kept if kept else None
+    prev = getattr(_ctx, "state", None)
+    _ctx.state = (mesh, clean)
+    try:
+        yield
+    finally:
+        _ctx.state = prev
+
+
+def active() -> tuple[Mesh, dict] | None:
+    return getattr(_ctx, "state", None)
+
+
+def _resolve(names: Sequence[str | None]) -> P:
+    state = active()
+    assert state is not None
+    _, rules = state
+    out = []
+    for n in names:
+        if n is None:
+            out.append(None)
+        else:
+            m = rules.get(n)
+            if m is None:
+                out.append(None)
+            elif len(m) == 1:
+                out.append(m[0])
+            else:
+                out.append(m)
+    return P(*out)
+
+
+def spec_of(names: Sequence[str | None]) -> P:
+    """Logical axis names -> PartitionSpec under the active rules (P() if none)."""
+    if active() is None:
+        return P()
+    return _resolve(names)
+
+
+def sharding_of(names: Sequence[str | None]) -> NamedSharding | None:
+    state = active()
+    if state is None:
+        return None
+    mesh, _ = state
+    return NamedSharding(mesh, _resolve(names))
+
+
+def shard(x: jax.Array, names: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint under the active rules; no-op outside."""
+    s = sharding_of(names)
+    if s is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, s)
+
+
+def resolves_to(logical: str, mesh_axis: str) -> bool:
+    """True iff ``logical`` maps onto ``mesh_axis`` under the active rules."""
+    state = active()
+    if state is None:
+        return False
+    _, rules = state
+    m = rules.get(logical)
+    return bool(m) and mesh_axis in m
+
+
+def tree_sharding(spec_tree, mesh: Mesh, rules: dict | None = None):
+    """Map a pytree of logical-name tuples to NamedShardings."""
+    rules = dict(DEFAULT_RULES if rules is None else rules)
+    axes = set(mesh.axis_names)
+
+    def one(names):
+        if names is None:
+            return NamedSharding(mesh, P())
+        out = []
+        for n in names:
+            m = rules.get(n) if n else None
+            if m is None:
+                out.append(None)
+            else:
+                kept = tuple(a for a in m if a in axes)
+                out.append(None if not kept else (kept[0] if len(kept) == 1 else kept))
+        return NamedSharding(mesh, P(*out))
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda t: t is None or (isinstance(t, tuple) and
+                        all(isinstance(e, (str, type(None))) for e in t)))

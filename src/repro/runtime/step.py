@@ -1,0 +1,143 @@
+"""Train / prefill / decode step builders (pjit-ready pure functions).
+
+``make_train_step(cfg)`` returns a pure ``(state, batch) -> (state, metrics)``
+suitable for ``jax.jit`` with in/out shardings; state is a plain dict so the
+checkpoint manager can flatten it.  Distributed-optimization hooks:
+  * optional int8 gradient compression w/ error feedback (cross-pod traffic)
+  * cosine LR schedule computed on-device (no host sync)
+  * donated state (in-place buffers at the XLA level)
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (ModelConfig, forward, init_caches,
+                                      init_lm, init_states, lm_loss, logits)
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, cosine_schedule
+from repro.optim.compression import compress_decompress, compression_init
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+def init_train_state(cfg: ModelConfig, key, *, compress: bool = False):
+    params, specs = init_lm(cfg, key)
+    opt = adamw_init(params)
+    state = {"params": params,
+             "opt": {"step": opt.step, "master": opt.master,
+                     "m": opt.m, "v": opt.v}}
+    if compress:
+        state["ef"] = compression_init(params)
+    return state, specs
+
+
+def state_specs(param_specs, *, compress: bool = False):
+    """Logical-axis spec tree for the full train state (for tree_sharding)."""
+    st = {"params": param_specs,
+          "opt": {"step": None, "master": param_specs,
+                  "m": param_specs, "v": param_specs}}
+    if compress:
+        st["ef"] = param_specs
+    return st
+
+
+def make_train_step(cfg: ModelConfig, *, peak_lr: float = 3e-4,
+                    warmup: int = 100, total: int = 10000,
+                    compress: bool = False, max_norm: float = 1.0):
+    def train_step(state, batch):
+        def loss_fn(p):
+            return lm_loss(cfg, p, batch.get("tokens"), batch["labels"],
+                           embeds=batch.get("embeds"))
+
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"])
+        new_state = dict(state)
+        if compress:
+            grads, new_state["ef"] = compress_decompress(grads, state["ef"])
+        opt = AdamWState(**state["opt"])
+        lr = cosine_schedule(opt.step, peak_lr=peak_lr, warmup=warmup,
+                             total=total)
+        params, opt, om = adamw_update(grads, opt, lr, max_norm=max_norm,
+                                       param_dtype=cfg.dtype)
+        new_state["params"] = params
+        new_state["opt"] = {"step": opt.step, "master": opt.master,
+                            "m": opt.m, "v": opt.v}
+        metrics = {"loss": loss, "lr": lr, **om,
+                   **{k: v for k, v in aux.items()}}
+        return new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, caches, states):
+        hidden, caches, states, _ = forward(cfg, params, tokens=tokens,
+                                            caches=caches, cache_index=0,
+                                            states=states)
+        lg = logits(cfg, params, hidden[:, -1:])
+        return lg, caches, states
+
+    return prefill_step
+
+
+def make_prefill_embeds_step(cfg: ModelConfig):
+    """Prefill from precomputed embeddings (audio / vision stub frontends)."""
+    def prefill_step(params, embeds, caches, states):
+        hidden, caches, states, _ = forward(cfg, params, embeds=embeds,
+                                            caches=caches, cache_index=0,
+                                            states=states)
+        lg = logits(cfg, params, hidden[:, -1:])
+        return lg, caches, states
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, *, sample: bool = False,
+                     temperature: float = 1.0):
+    def decode_step(params, token, caches, states, index, key=None):
+        hidden, caches, states, _ = forward(cfg, params, tokens=token,
+                                            caches=caches, cache_index=index,
+                                            states=states)
+        lg = logits(cfg, params, hidden)
+        if sample:
+            nxt = jax.random.categorical(key, lg[:, -1] / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg[:, -1], axis=-1)
+        return nxt[:, None].astype(jnp.int32), lg, caches, states
+
+    return decode_step
+
+
+def serve_state_specs(cfg: ModelConfig, *, long_context: bool = False):
+    """Logical axes for KV caches / SSM states.
+
+    The cache sequence axis carries the logical name "kv_seq"; the per-cell
+    rules map it to "model" (regular decode: distributed flash-decode — the
+    SPMD partitioner emits partial softmax + psum combine) or "data"
+    (long_context batch=1), or drop it (train/prefill)."""
+    del long_context  # resolution happens in the rules table
+    if cfg.family in ("dense", "moe", "hybrid"):
+        caches = {"k": (None, "batch", "kv_seq", "kv_heads", None),
+                  "v": (None, "batch", "kv_seq", "kv_heads", None)}
+    else:
+        caches = None
+    if cfg.family == "ssm":
+        states = {"tprev": (None, "batch", None, None),
+                  "fprev": (None, "batch", None, None),
+                  "wkv": (None, "batch", None, None, None)}
+    elif cfg.family == "hybrid":
+        states = {"main": (None, None, "batch", None, None, None),
+                  "tail": (None, "batch", None, None, None)}
+    else:
+        states = None
+    return caches, states

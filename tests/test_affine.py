@@ -1,0 +1,123 @@
+"""Unified address abstraction: Table II fidelity + algebraic properties."""
+
+import numpy as np
+import pytest
+from fractions import Fraction
+from hypothesis import given, settings, strategies as st
+
+from repro.core import affine as af
+
+
+class TestPaperTable2:
+    """The verbatim (A, B) register values of paper Table II."""
+
+    def test_transpose(self):
+        m = af.paper_table2("transpose", w_i=448)
+        assert m.apply((3, 5, 7)) == (5, 448 * 3, 7)
+
+    def test_rot90(self):
+        m = af.paper_table2("rot90", w_i=448)
+        # x_o = -y_i + w_i ; y_o = w_i * x_i
+        assert m.apply((2, 3, 1)) == (-3 + 448, 448 * 2, 1)
+
+    def test_pixelshuffle_fractional_channel(self):
+        m = af.paper_table2("pixelshuffle", w_i=448, s=2)
+        x, y, c = m.apply((10, 3, 7))
+        assert (x, y, c) == (10, 2 * 448 * 3, 7 // 2)
+
+    def test_img2col_strides(self):
+        m = af.paper_table2("img2col", w_i=448, x_s=2, y_s=2, x_p=1, y_p=1,
+                            x_k=3, y_k=3)
+        assert m.apply((4, 6, 2))[2] == 2
+
+    def test_route_four_inputs(self):
+        m = af.paper_table2("route", w_i=448)
+        assert m.n_in == 4 and m.n_out == 3
+
+    @pytest.mark.parametrize("op", ["transpose", "rot90", "img2col",
+                                    "pixelshuffle", "pixelunshuffle",
+                                    "upsample", "route", "split", "add"])
+    def test_all_ops_encoded(self, op):
+        af.paper_table2(op, w_i=448, s=2, x_s=1, y_s=1)
+
+
+class TestAffineAlgebra:
+    def test_inverse_roundtrip(self):
+        m = af.AffineMap.make([[0, 1, 0], [-1, 0, 0], [0, 0, 2]], [1, 2, 3])
+        inv = m.inverse()
+        for x in [(0, 0, 0), (3, -1, 4), (10, 20, 6)]:
+            assert inv.apply(m.apply(x)) == x
+
+    def test_singular_raises(self):
+        m = af.AffineMap.make([[1, 0, 0], [0, 1, 0], [0, 0, 0]])
+        with pytest.raises(ValueError):
+            m.inverse()
+
+    def test_compose_matches_sequential(self):
+        a = af.AffineMap.make([[0, 1], [1, 0]], [3, -2])
+        b = af.AffineMap.make([[2, 0], [0, 1]], [0, 5])
+        ab = a.compose(b)
+        for x in [(0, 0), (1, 2), (-3, 7)]:
+            assert ab.apply(x) == a.apply(b.apply(x))
+
+    def test_permutation_predicate(self):
+        assert af.AffineMap.permutation([2, 0, 1]).is_permutation()
+        assert not af.AffineMap.make([[1, 1], [0, 1]]).is_permutation()
+
+    @given(st.lists(st.integers(-5, 5), min_size=2, max_size=2),
+           st.integers(-3, 3), st.integers(-3, 3))
+    @settings(max_examples=50, deadline=None)
+    def test_floor_semantics(self, x, num, den):
+        """apply() floors like Python // (hardware truncating divider)."""
+        if den == 0:
+            return
+        m = af.AffineMap.make([[Fraction(num, den), 0], [0, 1]])
+        got = m.apply(x)[0]
+        exact = Fraction(num, den) * x[0]
+        assert got == exact.numerator // exact.denominator if exact.denominator == 1 \
+            else got == int(exact // 1)
+
+
+class TestMixedRadixMap:
+    def test_encode_decode_roundtrip(self):
+        m = af.img2col_map((16, 16, 4), 3, 3, stride=2, pad=1)
+        m2 = af.MixedRadixMap.decode(m.encode())
+        assert m2 == m
+
+    def test_digit_bounds_respected(self):
+        m = af.rearrange_map((4, 8, 3), 2, 8)
+        # out channel 6..7 has g=2 >= group=2 -> OOB
+        _, ok = m.gather_coord((0, 0, 7))
+        assert not ok
+        _, ok2 = m.gather_coord((0, 0, 5))
+        assert ok2
+
+    @given(st.integers(2, 4), st.integers(2, 4), st.integers(2, 4))
+    @settings(max_examples=20, deadline=None)
+    def test_pixel_shuffle_unshuffle_inverse(self, h, w, s):
+        """PU ∘ PS is the identity at the coordinate level."""
+        shape = (h, w, s * s * 2)
+        ps = af.pixel_shuffle_map(shape, s)
+        pu = af.pixel_unshuffle_map(ps.out_shape, s)
+        assert pu.out_shape == shape
+        for coord in [(0, 0, 0), (h - 1, w - 1, 1),
+                      (h // 2, w - 1, s * s * 2 - 1)]:
+            mid, ok1 = pu.gather_coord(coord)   # PU out-coord -> PS out-coord
+            src, ok2 = ps.gather_coord(mid)     # PS out-coord -> original
+            assert ok1 and ok2 and src == coord
+
+    def test_compose_maps_exact(self):
+        t = af.transpose_map((4, 6, 8))
+        s = af.split_map((6, 4, 8), 2, 1)
+        fused = af.compose_maps(s, t)
+        assert fused is not None
+        for coord in np.ndindex(*fused.out_shape):
+            ic, ok = fused.gather_coord(coord)
+            mid, ok1 = s.gather_coord(coord)
+            ic2, ok2 = t.gather_coord(mid)
+            assert ic == ic2 and ok == (ok1 and ok2)
+
+    def test_compose_refuses_oob_outer(self):
+        maps = af.route_maps([(4, 4, 2), (4, 4, 2)])
+        t = af.transpose_map((4, 4, 2))
+        assert af.compose_maps(maps[0], t) is None  # outer oob -> two passes

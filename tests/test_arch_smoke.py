@@ -1,0 +1,98 @@
+"""Per-assigned-architecture smoke tests: reduced config of the same family,
+one forward/train step on CPU, output shapes + no NaNs (the deliverable-f
+requirement).  The FULL configs are exercised only via the dry-run."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import (SHAPES, cell_is_live, get_config, get_smoke,
+                           input_specs, list_archs)
+from repro.models.transformer import init_lm, lm_loss, forward, logits
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_train_step(arch):
+    cfg = get_smoke(arch)
+    assert cfg.family == get_config(arch).family  # same family, reduced dims
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 16
+    labels = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    if cfg.frontend in ("audio_stub", "vision_stub"):
+        emb = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model),
+                                cfg.dtype) * 0.1
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, None, labels, embeds=emb),
+            has_aux=True)(params)
+    else:
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, toks, labels), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(grads):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all(), arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_smoke_forward_shapes(arch):
+    cfg = get_smoke(arch)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    h, _, _, _ = forward(cfg, params, tokens=toks)
+    assert h.shape == (B, S, cfg.d_model)
+    lg = logits(cfg, params, h)
+    assert lg.shape == (B, S, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(lg, np.float32)).all()
+
+
+def test_full_configs_match_assignment():
+    """The exact published numbers from the assignment block."""
+    expect = {
+        "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+        "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 1408, 151936),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "rwkv6-3b": (32, 2560, None, None, 8960, 65536),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+    }
+    for arch, (L, D, H, KV, F, V) in expect.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L and cfg.d_model == D and cfg.vocab == V, arch
+        if H is not None:
+            assert cfg.n_heads == H and cfg.n_kv_heads == KV, arch
+        ff = cfg.moe_d_ff if cfg.family == "moe" else cfg.d_ff
+        assert ff == F, (arch, ff, F)
+
+
+def test_moe_configs():
+    q = get_config("qwen2-moe-a2.7b")
+    assert (q.num_experts, q.top_k, q.n_shared) == (60, 4, 4)
+    l = get_config("llama4-scout-17b-a16e")
+    assert (l.num_experts, l.top_k) == (16, 1)
+
+
+def test_cell_liveness_32_plus_8():
+    live = skipped = 0
+    for arch in list_archs():
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            ok, reason = cell_is_live(cfg, shape)
+            live += ok
+            skipped += not ok
+            if not ok:
+                assert shape == "long_500k" and reason == "skipped(full-attention)"
+    assert (live, skipped) == (32, 8)
+
+
+@pytest.mark.parametrize("shape", list(SHAPES))
+def test_input_specs_are_abstract(shape):
+    cfg = get_config("zamba2-7b")  # live for all four shapes
+    specs = input_specs(cfg, shape)
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)  # never allocated

@@ -1,0 +1,175 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs ref.py oracle."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import affine as af
+
+DTYPES = [np.float32, jnp.bfloat16]
+
+
+def _tol(dt):
+    return 2e-2 if dt == jnp.bfloat16 else 2e-5
+
+
+# -- tm_affine ---------------------------------------------------------------
+
+class TestTmAffine:
+    from repro.kernels.tm_affine import tm_affine_call, tm_affine_ref
+
+    CASES = [
+        ("transpose", lambda s: af.transpose_map(s), (32, 128, 64)),
+        ("rot90", lambda s: af.rot90_map(s), (32, 128, 64)),
+        ("split", lambda s: af.split_map(s, 2, 1), (32, 128, 64)),
+        ("pixelshuffle", lambda s: af.pixel_shuffle_map(s, 2), (16, 64, 16)),
+        ("pixelunshuffle", lambda s: af.pixel_unshuffle_map(s, 2), (16, 64, 16)),
+        ("upsample", lambda s: af.upsample_map(s, 2), (16, 64, 16)),
+        ("img2col", lambda s: af.img2col_map(s, 3, 3, 1, 1), (16, 64, 16)),
+        ("rearrange", lambda s: af.rearrange_map(s, 4, 16), (16, 64, 3)),
+    ]
+
+    @pytest.mark.parametrize("name,mk,shape", CASES,
+                             ids=[c[0] for c in CASES])
+    @pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+    def test_vs_oracle(self, rng, name, mk, shape, dtype):
+        from repro.kernels.tm_affine import tm_affine_call, tm_affine_ref
+        m = mk(shape)
+        x = jnp.asarray(rng.rand(*shape).astype(np.float32)).astype(dtype)
+        got = tm_affine_call(x, m, interpret=True)
+        ref = tm_affine_ref(x, m)
+        assert got.dtype == x.dtype
+        assert np.array_equal(np.asarray(got, np.float32),
+                              np.asarray(ref, np.float32)), name
+
+    def test_gather_mode_forced(self, rng):
+        from repro.kernels.tm_affine import tm_affine_call, tm_affine_ref
+        m = af.transpose_map((16, 64, 32))
+        x = jnp.asarray(rng.rand(16, 64, 32).astype(np.float32))
+        got = tm_affine_call(x, m, interpret=True, force_mode="gather")
+        assert np.array_equal(np.asarray(got), np.asarray(tm_affine_ref(x, m)))
+
+
+# -- img2col / conv ----------------------------------------------------------
+
+class TestImg2col:
+    @pytest.mark.parametrize("hwckst", [(16, 16, 8, 3, 1, 1), (16, 16, 8, 3, 2, 1),
+                                        (8, 12, 4, 2, 2, 0), (16, 16, 3, 5, 1, 2)])
+    def test_img2col_vs_ref(self, rng, hwckst):
+        from repro.kernels.img2col import img2col_call, img2col_ref
+        H, W, C, k, st_, pad = hwckst
+        x = jnp.asarray(rng.rand(H, W, C).astype(np.float32))
+        got = img2col_call(x, kh=k, kw=k, stride=st_, pad=pad)
+        assert np.allclose(got, img2col_ref(x, k, k, st_, pad))
+
+    @pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+    def test_conv_implicit_gemm(self, rng, dtype):
+        from repro.kernels.img2col import conv2d_call, conv2d_ref
+        x = jnp.asarray(rng.rand(16, 16, 8).astype(np.float32)).astype(dtype)
+        w = jnp.asarray(rng.rand(3, 3, 8, 16).astype(np.float32)).astype(dtype)
+        got = conv2d_call(x, w, stride=1, pad=1)
+        ref = conv2d_ref(x, w, 1, 1)
+        assert np.allclose(np.asarray(got, np.float32),
+                           np.asarray(ref, np.float32),
+                           rtol=_tol(dtype), atol=_tol(dtype) * 8)
+
+
+# -- resize -------------------------------------------------------------------
+
+class TestResize:
+    @pytest.mark.parametrize("out_hw", [(32, 24), (96, 100), (64, 48)])
+    def test_vs_ref(self, rng, out_hw):
+        from repro.kernels.resize import resize_call, resize_ref
+        x = jnp.asarray(rng.rand(64, 48, 8).astype(np.float32))
+        got = resize_call(x, out_h=out_hw[0], out_w=out_hw[1])
+        assert np.allclose(got, resize_ref(x, *out_hw), atol=1e-5)
+
+
+# -- rme_gather ----------------------------------------------------------------
+
+class TestRmeGather:
+    def test_evaluate(self, rng):
+        from repro.kernels.rme_gather import evaluate_call, evaluate_ref
+        x = jnp.asarray(rng.rand(64, 8).astype(np.float32))
+        got = evaluate_call(x, 0.5, capacity=32, score_index=4)
+        ref = evaluate_ref(x, 0.5, 32, score_index=4)
+        for g, r in zip(got, ref):
+            assert np.allclose(np.asarray(g), np.asarray(r))
+
+    def test_assemble(self, rng):
+        from repro.kernels.rme_gather import assemble_call, assemble_ref
+        x = jnp.asarray(rng.rand(64, 8).astype(np.float32))
+        mask = jnp.asarray(rng.rand(64) > 0.5)
+        got = assemble_call(x, mask, capacity=16)
+        ref = assemble_ref(x, mask, 16)
+        for g, r in zip(got, ref):
+            assert np.allclose(np.asarray(g), np.asarray(r))
+
+
+# -- matmul_tm -------------------------------------------------------------------
+
+class TestMatmulTM:
+    @pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+    def test_plain(self, rng, dtype):
+        from repro.kernels.matmul_tm import matmul_call, matmul_ref
+        x = jnp.asarray(rng.rand(256, 128).astype(np.float32)).astype(dtype)
+        w = jnp.asarray(rng.rand(128, 256).astype(np.float32)).astype(dtype)
+        got = matmul_call(x, w)
+        assert np.allclose(np.asarray(got, np.float32),
+                           np.asarray(matmul_ref(x, w), np.float32),
+                           rtol=_tol(dtype), atol=_tol(dtype) * 32)
+
+    def test_transpose_epilogue(self, rng):
+        from repro.kernels.matmul_tm import (matmul_transpose_call,
+                                             matmul_transpose_ref)
+        x = jnp.asarray(rng.rand(256, 128).astype(np.float32))
+        w = jnp.asarray(rng.rand(128, 256).astype(np.float32))
+        assert np.allclose(matmul_transpose_call(x, w),
+                           matmul_transpose_ref(x, w), atol=1e-3)
+
+    def test_pixel_shuffle_epilogue(self, rng):
+        from repro.kernels.matmul_tm import (matmul_pixel_shuffle_call,
+                                             matmul_pixel_shuffle_ref)
+        H, W, C, s = 8, 16, 4, 2
+        x = jnp.asarray(rng.rand(H * W, 64).astype(np.float32))
+        w = jnp.asarray(rng.rand(64, C * s * s).astype(np.float32))
+        got = matmul_pixel_shuffle_call(x, w, H=H, W=W, C=C, s=s)
+        assert np.allclose(got, matmul_pixel_shuffle_ref(x, w, H, W, C, s),
+                           atol=1e-3)
+
+
+# -- flash attention --------------------------------------------------------------
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+    def test_fwd(self, rng, causal, dtype):
+        from repro.kernels.flash_attention import (attention_ref,
+                                                   flash_attention_call)
+        q, k, v = (jnp.asarray(rng.randn(4, 256, 64).astype(np.float32))
+                   .astype(dtype) for _ in range(3))
+        got = flash_attention_call(q, k, v, causal=causal)
+        ref = attention_ref(q, k, v, causal=causal)
+        assert np.allclose(np.asarray(got, np.float32),
+                           np.asarray(ref, np.float32),
+                           atol=3e-2 if dtype == jnp.bfloat16 else 2e-3)
+
+    @pytest.mark.parametrize("length", [1, 100, 256])
+    def test_decode(self, rng, length):
+        from repro.kernels.flash_attention import decode_ref, flash_decode_call
+        q = jnp.asarray(rng.randn(4, 1, 64).astype(np.float32))
+        k = jnp.asarray(rng.randn(4, 256, 64).astype(np.float32))
+        v = jnp.asarray(rng.randn(4, 256, 64).astype(np.float32))
+        got = flash_decode_call(q, k, v, length)
+        assert np.allclose(got, decode_ref(q, k, v, length), atol=2e-3)
+
+    def test_block_size_sweep(self, rng):
+        from repro.kernels.flash_attention import (attention_ref,
+                                                   flash_attention_call)
+        q, k, v = (jnp.asarray(rng.randn(2, 192, 32).astype(np.float32))
+                   for _ in range(3))
+        ref = attention_ref(q, k, v, causal=True)
+        for bq, bk in [(64, 64), (192, 32), (32, 192)]:
+            got = flash_attention_call(q, k, v, causal=True, bq=bq, bk=bk)
+            assert np.allclose(got, ref, atol=2e-3), (bq, bk)

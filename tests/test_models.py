@@ -1,0 +1,147 @@
+"""Model zoo behaviour: train/grad paths, decode==teacher-forcing, bf16."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.transformer import (ModelConfig, forward, init_caches,
+                                      init_lm, init_states, lm_loss, logits)
+
+TINY = dict(n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_ff=64,
+            vocab=64, dtype=jnp.float32, max_seq=32, remat="none")
+
+FAMILIES = {
+    "dense": {},
+    "moe": dict(num_experts=4, top_k=2, moe_d_ff=32, capacity_factor=99.0),
+    "ssm": dict(ssm_head_dim=8),
+    "hybrid": dict(ssm_state=8, ssm_head_dim=8, attn_every=2),
+}
+
+
+def _cfg(fam, **kw):
+    return ModelConfig(name=fam, family=fam, **{**TINY, **FAMILIES[fam], **kw})
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_train_grads_finite(fam):
+    cfg = _cfg(fam)
+    params, specs = init_lm(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    (loss, _), g = jax.value_and_grad(
+        lambda p: lm_loss(cfg, p, toks, toks), has_aux=True)(params)
+    assert np.isfinite(float(loss))
+    for leaf in jax.tree.leaves(g):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    # specs mirror params leaf-for-leaf
+    is_spec = lambda t: isinstance(t, tuple) and all(
+        isinstance(e, (str, type(None))) for e in t)
+    assert len(jax.tree.leaves(params)) == len(
+        jax.tree.leaves(specs, is_leaf=is_spec))
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_decode_matches_teacher_forcing(fam):
+    cfg = _cfg(fam)
+    B, S, prefill = 2, 12, 8
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    h_full, _, _, _ = forward(cfg, params, tokens=toks)
+    lg_full = logits(cfg, params, h_full)
+    caches = init_caches(cfg, B, S, dtype=jnp.float32)
+    states = init_states(cfg, B)
+    h, caches, states, _ = forward(cfg, params, tokens=toks[:, :prefill],
+                                   caches=caches, cache_index=0, states=states)
+    lg = [logits(cfg, params, h)]
+    for t in range(prefill, S):
+        h, caches, states, _ = forward(cfg, params, tokens=toks[:, t:t + 1],
+                                       caches=caches, cache_index=t,
+                                       states=states)
+        lg.append(logits(cfg, params, h))
+    err = np.abs(np.asarray(lg_full) - np.asarray(jnp.concatenate(lg, 1))).max()
+    assert err < 2e-3, (fam, err)
+
+
+@pytest.mark.parametrize("fam", list(FAMILIES))
+def test_bf16_stable(fam):
+    cfg = _cfg(fam, dtype=jnp.bfloat16)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    h, _, _, _ = forward(cfg, params, tokens=toks)
+    assert h.dtype == jnp.bfloat16
+    caches = init_caches(cfg, 2, 16)
+    states = init_states(cfg, 2)
+    h, caches, states, _ = forward(cfg, params, tokens=toks, caches=caches,
+                                   cache_index=0, states=states)
+    h, _, _, _ = forward(cfg, params, tokens=toks[:, :1], caches=caches,
+                         cache_index=8, states=states)
+    assert np.isfinite(np.asarray(h, np.float32)).all()
+
+
+def test_moe_load_balance_aux():
+    cfg = _cfg("moe")
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    _, _, _, aux = forward(cfg, params, tokens=toks)
+    assert float(aux["load_balance"]) >= 0.99  # >= 1 at balance, ~E at collapse
+
+
+def test_moe_capacity_drops_tokens():
+    """Tight capacity must drop tokens (not crash, not corrupt)."""
+    cfg = _cfg("moe", capacity_factor=0.25)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    h, _, _, _ = forward(cfg, params, tokens=toks)
+    assert np.isfinite(np.asarray(h)).all()
+
+
+def test_remat_matches_no_remat():
+    cfg_a = _cfg("dense", remat="none")
+    cfg_b = _cfg("dense", remat="full")
+    params, _ = init_lm(cfg_a, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64)
+    la, _ = lm_loss(cfg_a, params, toks, toks)
+    lb, _ = lm_loss(cfg_b, params, toks, toks)
+    assert np.allclose(float(la), float(lb), rtol=1e-6)
+    ga = jax.grad(lambda p: lm_loss(cfg_a, p, toks, toks)[0])(params)
+    gb = jax.grad(lambda p: lm_loss(cfg_b, p, toks, toks)[0])(params)
+    for a, b in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+        assert np.allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_vocab_padding_masks_logits():
+    cfg = _cfg("dense", vocab=50)   # pads to 128
+    assert cfg.padded_vocab == 128
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, 50)
+    h, _, _, _ = forward(cfg, params, tokens=toks)
+    lg = logits(cfg, params, h)
+    assert lg.shape[-1] == 128
+    assert (np.asarray(lg)[..., 50:] <= -1e8).all()
+
+
+def test_chunked_attention_matches_full(rng):
+    from repro.models.attention import chunked_attention, full_attention
+    q = jnp.asarray(rng.randn(2, 64, 8, 16).astype(np.float32))
+    k = jnp.asarray(rng.randn(2, 64, 4, 16).astype(np.float32))
+    v = jnp.asarray(rng.randn(2, 64, 4, 16).astype(np.float32))
+    for causal in (True, False):
+        a = chunked_attention(q, k, v, causal=causal, chunk=16)
+        b = full_attention(q, k, v, causal=causal)
+        assert np.allclose(np.asarray(a), np.asarray(b), atol=2e-5), causal
+
+
+def test_gqa_grouping_equals_repeated_kv(rng):
+    """Grouped einsum == explicit TM Upsample of KV heads (fusion claim)."""
+    from repro.core.tm_ops import repeat_heads
+    from repro.models.attention import full_attention
+    q = jnp.asarray(rng.randn(1, 16, 8, 16).astype(np.float32))
+    k = jnp.asarray(rng.randn(1, 16, 2, 16).astype(np.float32))
+    v = jnp.asarray(rng.randn(1, 16, 2, 16).astype(np.float32))
+    grouped = full_attention(q, k, v, causal=True)
+    k_rep = repeat_heads(k, 4, axis=2)
+    v_rep = repeat_heads(v, 4, axis=2)
+    # repeat_heads gives out[h] = in[h // 4]; grouped layout expects the
+    # same ordering (q reshaped (KV, G))
+    rep = full_attention(q, k_rep, v_rep, causal=True)
+    assert np.allclose(np.asarray(grouped), np.asarray(rep), atol=1e-5)

@@ -1,0 +1,46 @@
+"""Reconfigurability regression suite: ops added AFTER the engine was built
+must run on the unchanged datapath (engine + Pallas kernel)."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import affine as af
+from repro.core.engine import apply_map
+from repro.kernels.tm_affine import plan_of, tm_affine_call
+
+
+@given(st.integers(1, 3), st.integers(1, 3), st.integers(0, 2),
+       st.integers(0, 2))
+@settings(max_examples=20, deadline=None)
+def test_strided_slice_map(sy, sx, oy, ox):
+    H, W, C = 12, 16, 4
+    OH = (H - oy + sy - 1) // sy
+    OW = (W - ox + sx - 1) // sx
+    m = af.strided_slice_map((H, W, C), (oy, ox, 0), (sy, sx, 1), (OH, OW, C))
+    rng = np.random.RandomState(0)
+    x = rng.rand(H, W, C).astype(np.float32)
+    got = np.asarray(apply_map(m, jnp.asarray(x)))
+    assert np.array_equal(got, x[oy::sy, ox::sx, :][:OH, :OW])
+
+
+def test_strided_slice_on_pallas_kernel():
+    m = af.strided_slice_map((64, 128, 8), (0, 0, 0), (1, 1, 1), (64, 128, 8))
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.rand(64, 128, 8).astype(np.float32))
+    out = tm_affine_call(x, m, interpret=True)
+    assert np.array_equal(np.asarray(out), np.asarray(x))
+    assert plan_of(m) is not None  # identity stride lifts to block mode
+
+
+def test_strided_slice_composes_with_transpose():
+    """New op participates in fusion like any Table II op."""
+    t = af.transpose_map((8, 12, 4))
+    s = af.strided_slice_map((12, 8, 4), (0, 0, 0), (2, 2, 1), (6, 4, 4))
+    fused = af.compose_maps(s, t)
+    assert fused is not None
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.rand(8, 12, 4).astype(np.float32))
+    two_pass = apply_map(s, apply_map(t, x))
+    one_pass = apply_map(fused, x)
+    assert np.array_equal(np.asarray(two_pass), np.asarray(one_pass))

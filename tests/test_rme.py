@@ -1,0 +1,80 @@
+"""RME assemble/evaluate vs numpy; MoE dispatch properties."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import rme
+
+
+@given(st.integers(4, 64), st.integers(1, 32), st.floats(0.1, 0.9))
+@settings(max_examples=30, deadline=None)
+def test_assemble_matches_numpy(n, cap, p):
+    rng = np.random.RandomState(n * cap)
+    x = rng.rand(n, 3).astype(np.float32)
+    mask = rng.rand(n) < p
+    packed, cnt = rme.assemble(jnp.asarray(x), jnp.asarray(mask), cap)
+    want = x[mask][:cap]
+    assert int(cnt) == min(mask.sum(), cap)
+    assert np.allclose(np.asarray(packed)[:int(cnt)], want)
+    assert np.allclose(np.asarray(packed)[int(cnt):], 0.0)
+
+
+def test_assemble_static_lane_mask(rng):
+    x = rng.rand(4, 8).astype(np.float32)
+    mask = np.array([1, 0, 1, 1, 0, 0, 1, 0], bool)
+    got = np.asarray(rme.assemble_static(jnp.asarray(x), mask))
+    assert np.allclose(got, x[:, mask])
+
+
+@given(st.integers(8, 64), st.integers(1, 16))
+@settings(max_examples=30, deadline=None)
+def test_assemble_indices(n, cap):
+    rng = np.random.RandomState(n + cap)
+    mask = rng.rand(n) < 0.5
+    idx, cnt = rme.assemble_indices(jnp.asarray(mask), cap)
+    want = np.nonzero(mask)[0][:cap]
+    assert int(cnt) == min(mask.sum(), cap)
+    assert np.array_equal(np.asarray(idx)[:int(cnt)], want)
+    assert (np.asarray(idx)[int(cnt):] == n).all()  # sentinel padding
+
+
+def test_evaluate_threshold(rng):
+    x = rng.rand(32, 5).astype(np.float32)
+    rows, idx, cnt = rme.evaluate(jnp.asarray(x), 0.6, 16, cmp="gt",
+                                  score_index=2)
+    mask = x[:, 2] > 0.6
+    assert int(cnt) == min(mask.sum(), 16)
+    assert np.allclose(np.asarray(rows)[:int(cnt)], x[mask][:16])
+
+
+def test_evaluate_topk(rng):
+    x = rng.rand(32, 4).astype(np.float32)
+    rows, idx = rme.evaluate_topk(jnp.asarray(x), 5, score_index=1)
+    order = np.argsort(-x[:, 1])[:5]
+    assert np.allclose(np.asarray(rows), x[order])
+
+
+@given(st.integers(2, 8), st.integers(8, 64))
+@settings(max_examples=25, deadline=None)
+def test_dispatch_tokens_properties(E, T):
+    rng = np.random.RandomState(E * T)
+    expert_of = rng.randint(0, E, size=T).astype(np.int32)
+    cap = max(int(np.ceil(T / E)) + 2, 1)
+    idx, counts = rme.dispatch_tokens(jnp.asarray(expert_of), E, cap)
+    idx, counts = np.asarray(idx), np.asarray(counts)
+    for e in range(E):
+        want = np.nonzero(expert_of == e)[0][:cap]
+        got = idx[e][idx[e] < T]
+        assert counts[e] == min((expert_of == e).sum(), cap)
+        assert np.array_equal(got[:counts[e]], want[:counts[e]])
+
+
+def test_dispatch_equals_vmapped_assemble():
+    """dispatch_tokens == paper's assemble scheme applied per expert."""
+    expert_of = jnp.asarray([0, 1, 0, 2, 1, 0], jnp.int32)
+    idx, counts = rme.dispatch_tokens(expert_of, 3, 4)
+    for e in range(3):
+        ref_idx, ref_cnt = rme.assemble_indices(expert_of == e, 4)
+        assert np.array_equal(np.asarray(idx[e]), np.asarray(ref_idx))
+        assert int(counts[e]) == int(ref_cnt)

@@ -1,0 +1,133 @@
+"""Every TM operator vs an independent numpy reference."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tm_ops
+
+
+@pytest.fixture
+def x4(rng):
+    return jnp.asarray(rng.rand(2, 4, 6, 8).astype(np.float32))
+
+
+def test_transpose(x4):
+    assert np.allclose(tm_ops.transpose(x4), np.transpose(np.asarray(x4), (0, 2, 1, 3)))
+
+
+def test_rot90(x4):
+    a = np.asarray(x4)
+    ref = np.stack([np.rot90(a[b], axes=(0, 1)) for b in range(a.shape[0])])
+    assert np.allclose(tm_ops.rot90(x4), ref)
+
+
+def test_pixel_shuffle_semantics(x4):
+    a = np.asarray(x4)
+    B, H, W, Cs2 = a.shape
+    s, C = 2, Cs2 // 4
+    got = np.asarray(tm_ops.pixel_shuffle(x4, s))
+    for b, y, x, c in [(0, 0, 0, 0), (1, 7, 11, 1), (0, 3, 5, 1)]:
+        assert got[b, y, x, c] == a[b, y // s, x // s, c * s * s + (y % s) * s + (x % s)]
+
+
+def test_pixel_shuffle_unshuffle_roundtrip(x4):
+    assert np.allclose(tm_ops.pixel_unshuffle(tm_ops.pixel_shuffle(x4, 2), 2), x4)
+
+
+def test_upsample(x4):
+    a = np.asarray(x4)
+    assert np.allclose(tm_ops.upsample(x4, 3), a.repeat(3, 1).repeat(3, 2))
+
+
+def test_split_route_roundtrip(x4):
+    parts = tm_ops.split(x4, 4)
+    assert all(p.shape == (2, 4, 6, 2) for p in parts)
+    assert np.allclose(tm_ops.route(parts), x4)
+
+
+def test_route_mixed_widths(rng):
+    xs = [jnp.asarray(rng.rand(3, 4, c).astype(np.float32)) for c in (2, 5, 1)]
+    got = tm_ops.route(xs)
+    ref = np.concatenate([np.asarray(x) for x in xs], axis=-1)
+    assert np.allclose(got, ref)
+
+
+@pytest.mark.parametrize("kh,kw,stride,pad", [(3, 3, 1, 1), (3, 3, 2, 1),
+                                              (2, 2, 2, 0), (5, 5, 1, 2)])
+def test_img2col(rng, kh, kw, stride, pad):
+    from numpy.lib.stride_tricks import sliding_window_view
+    a = rng.rand(8, 10, 4).astype(np.float32)
+    got = np.asarray(tm_ops.img2col(jnp.asarray(a), kh, kw, stride, pad))
+    pa = np.pad(a, ((pad, pad), (pad, pad), (0, 0)))
+    win = sliding_window_view(pa, (kh, kw), axis=(0, 1))[::stride, ::stride]
+    ref = win.transpose(0, 1, 3, 4, 2).reshape(got.shape)
+    assert np.allclose(got, ref)
+
+
+def test_rearrange_groups_and_pad(rng):
+    a = rng.rand(4, 8, 3).astype(np.float32)
+    got = np.asarray(tm_ops.rearrange(jnp.asarray(a), 4, 16))
+    assert got.shape == (4, 2, 16)
+    for y in range(4):
+        for xo in range(2):
+            for c in range(12):
+                assert got[y, xo, c] == a[y, xo * 4 + c // 3, c % 3]
+            assert (got[y, xo, 12:] == 0).all()  # channel pad reads fill
+
+
+def test_rearrange_identity_group(rng):
+    a = rng.rand(4, 4, 3).astype(np.float32)
+    got = np.asarray(tm_ops.rearrange(jnp.asarray(a), 1, 16))
+    assert got.shape == (4, 4, 16)
+    assert np.allclose(got[..., :3], a) and (got[..., 3:] == 0).all()
+
+
+def test_resize_bilinear_matches_theory(rng):
+    # constant image resizes to the same constant
+    a = np.full((8, 8, 3), 2.5, np.float32)
+    got = np.asarray(tm_ops.resize_bilinear(jnp.asarray(a), 5, 13))
+    assert np.allclose(got, 2.5, atol=1e-6)
+    # downscale by 2 of a 2x2 checker = mean
+    a = np.zeros((4, 4, 1), np.float32)
+    a[::2, ::2] = 1.0; a[1::2, 1::2] = 1.0
+    got = np.asarray(tm_ops.resize_bilinear(jnp.asarray(a), 2, 2))
+    assert np.allclose(got, 0.5, atol=1e-6)
+
+
+def test_repeat_heads(rng):
+    a = rng.rand(2, 4, 8).astype(np.float32)
+    got = np.asarray(tm_ops.repeat_heads(jnp.asarray(a), 3, axis=1))
+    assert np.allclose(got, np.repeat(a, 3, axis=1))
+
+
+@given(st.permutations(list(range(4))))
+@settings(max_examples=12, deadline=None)
+def test_permute_property(perm):
+    rng = np.random.RandomState(1)
+    a = rng.rand(2, 3, 4, 5).astype(np.float32)
+    got = np.asarray(tm_ops.permute(jnp.asarray(a), perm))
+    assert np.allclose(got, a.transpose(*perm))
+
+
+def test_bboxcal(rng):
+    pred = rng.rand(64, 6).astype(np.float32)
+    rows, idx, cnt = tm_ops.bboxcal(jnp.asarray(pred), 0.5, 32)
+    mask = pred[:, 4] >= 0.5
+    want = pred[mask][:32]
+    assert int(cnt) == min(mask.sum(), 32)
+    assert np.allclose(np.asarray(rows)[:int(cnt)], want)
+    assert np.array_equal(np.asarray(idx)[:int(cnt)], np.nonzero(mask)[0][:32])
+
+
+def test_nms_suppresses_overlaps():
+    boxes = jnp.asarray([[0., 0., 2., 2.], [0.1, 0.1, 2., 2.], [5., 5., 1., 1.]])
+    scores = jnp.asarray([0.9, 0.8, 0.7])
+    keep, cnt = tm_ops.nms(boxes, scores, iou_threshold=0.5, max_out=3)
+    assert int(cnt) == 2
+    assert set(np.asarray(keep)[:2].tolist()) == {0, 2}
+
+
+def test_add_is_elementwise(x4):
+    assert np.allclose(tm_ops.add(x4, x4), 2 * np.asarray(x4))
