@@ -29,6 +29,10 @@ def main(argv=None) -> None:
             csv.append(f"tm/{r['op']},{r['standalone_us']:.1f},"
                        f"speedup={r['speedup']:.2f};traffic_red="
                        f"{r['traffic_reduction']:.2f}")
+        for r in tm_operators.pipeline_rows(scale=args.scale):
+            csv.append(f"pipeline/{r['program']},0,"
+                       f"speedup={r['pipeline_speedup']:.2f};e2e_red="
+                       f"{r['latency_reduction']:.3f}")
         print()
 
     if "applications" not in args.skip:

@@ -15,6 +15,10 @@ analogue measured here, per operator at (scaled) Table III shapes:
 
 Columns: op, shape, standalone_us, fused_marginal_us, speedup,
 bytes_standalone, bytes_fused_extra, traffic_reduction.
+
+``pipeline_rows`` adds the paper's *system-level* figure (Fig. 5 / the 34.6%
+e2e claim): the scheduler's cycle model for multi-instruction TM programs,
+comparing unpipelined vs double-buffered vs output-forwarded schedules.
 """
 
 from __future__ import annotations
@@ -29,6 +33,8 @@ from benchmarks.common import time_fn
 from repro.core import affine as af
 from repro.core import tm_ops
 from repro.core.engine import apply_map
+from repro.core.instr import EwOp, RMEConfig, TMInstr, TMOpcode, TMProgram
+from repro.core.schedule import CycleParams, schedule
 
 # Table III shapes, scaled by `scale` to keep CPU wall times sane.
 OPS = [
@@ -103,6 +109,82 @@ def run(scale: float = 0.25, reps: int = 5):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# pipeline-schedule benchmark (double buffering + output forwarding)
+# ---------------------------------------------------------------------------
+
+def _superres_tail(H: int, W: int, C: int) -> tuple[TMProgram, dict]:
+    """EDSR-style tail: transpose -> pixel-shuffle -> residual add."""
+    m1 = af.transpose_map((H, W, C))
+    m2 = af.pixel_shuffle_map((W, H, C), 2)
+    m3 = af.identity_map((W * 2, H * 2, C // 4))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "t", map_=m1),
+         TMInstr(TMOpcode.COARSE, ("t",), "up", map_=m2),
+         TMInstr(TMOpcode.COARSE, ("up", "skip"), "y", map_=m3, ew=EwOp.ADD)],
+        inputs=("x", "skip"), outputs=("y",))
+    return prog, {"x": (H, W, C), "skip": (W * 2, H * 2, C // 4)}
+
+
+def _detect_tail(H: int, W: int, C: int, cap: int) -> tuple[TMProgram, dict]:
+    """YOLO-style tail: rearrange -> img2col-format head -> bboxcal filter."""
+    m1 = af.rearrange_map((H, W * 4, C), 4, 2 * C * 4)
+    pred_rows = H * W
+    m2 = af.MixedRadixMap(
+        out_shape=(pred_rows, 2 * C * 4), in_shape=(H, W, 2 * C * 4),
+        splits=(af.DigitSplit(0, W),),
+        affine=af.AffineMap.make([[1, 0, 0], [0, 0, 1], [0, 1, 0]]))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("img",), "re", map_=m1),
+         TMInstr(TMOpcode.COARSE, ("re",), "pred", map_=m2),
+         TMInstr(TMOpcode.FINE_EVALUATE, ("pred",), "boxes",
+                 rme=RMEConfig(scheme="evaluate", threshold=0.5, cmp="ge",
+                               score_index=4, capacity=cap))],
+        inputs=("img",), outputs=("boxes",))
+    return prog, {"img": (H, W * 4, C)}
+
+
+PIPELINES = [
+    ("superres_tail", lambda s: _superres_tail(
+        max(32, int(448 * s) // 16 * 16), max(32, int(448 * s) // 16 * 16), 16)),
+    ("detect_tail", lambda s: _detect_tail(
+        max(16, int(448 * s) // 16 * 16), max(16, int(448 * s) // 16 * 16),
+        3, 256)),
+]
+
+
+def pipeline_rows(scale: float = 0.25,
+                  params: CycleParams | None = None) -> list[dict]:
+    rows = []
+    for name, mk in PIPELINES:
+        prog, shapes = mk(scale)
+        rep = schedule(prog, shapes, params)
+        rows.append({
+            "program": name, "n_instr": len(prog.instrs),
+            "forwards": len(rep.forwards),
+            "unpipelined": rep.unpipelined_cycles,
+            "double_buffered": rep.pipelined_cycles,
+            "forwarded": rep.forwarded_cycles,
+            "db_speedup": rep.double_buffer_speedup,
+            "pipeline_speedup": rep.pipeline_speedup,
+            "latency_reduction": 1 - rep.forwarded_cycles / rep.unpipelined_cycles,
+        })
+    return rows
+
+
+def pipeline_main(scale: float = 0.25) -> list[dict]:
+    rows = pipeline_rows(scale=scale)
+    print("# tm_pipeline (double buffering + output forwarding cycle model)")
+    print(f"{'program':16s}{'instrs':>7s}{'fwd':>5s}{'unpiped':>12s}"
+          f"{'dbuf':>12s}{'fwded':>12s}{'speedup':>9s}{'e2e_red':>9s}")
+    for r in rows:
+        print(f"{r['program']:16s}{r['n_instr']:>7d}{r['forwards']:>5d}"
+              f"{r['unpipelined']:>12.0f}{r['double_buffered']:>12.0f}"
+              f"{r['forwarded']:>12.0f}{r['pipeline_speedup']:>9.2f}"
+              f"{r['latency_reduction']:>9.2%}")
+    return rows
+
+
 def main(scale: float = 0.25):
     rows = run(scale=scale)
     print("# tm_operators (Fig. 8 / Table III analogue), scale=%.2f" % scale)
@@ -112,6 +194,8 @@ def main(scale: float = 0.25):
         print(f"{r['op']:16s}{r['shape']:>16s}{r['standalone_us']:>15.1f}"
               f"{r['fused_marginal_us']:>12.1f}{r['speedup']:>9.2f}"
               f"{r['traffic_reduction']:>12.2%}")
+    print()
+    pipeline_main(scale=scale)
     return rows
 
 

@@ -4,12 +4,15 @@ Public surface:
   affine    — AffineMap / MixedRadixMap / Table II operator library
   engine    — apply_map: the reconfigurable address-generation datapath
   instr     — TMOpcode / TMInstr / TMProgram (RISC-inspired encoding)
-  executor  — 8-stage execution model (reference + fused backends)
+  executor  — 8-stage execution model (reference / fused / pallas backends)
+  dispatch  — kernel-dispatch registry (TMInstr -> Pallas kernel lowering)
+  schedule  — pipeline scheduler (double buffering + output forwarding model)
   rme       — reconfigurable masking engine (assemble / evaluate)
   tm_ops    — functional per-operator API
-  fusion    — near-memory copy elision by map composition
+  fusion    — near-memory copy elision by map composition + forwarding edges
   forwarding— output forwarding (TM in producer epilogues)
 """
 
-from repro.core import affine, engine, fusion, instr, rme, tm_ops  # noqa: F401
+from repro.core import (affine, dispatch, engine, fusion, instr, rme,  # noqa: F401
+                        schedule, tm_ops)
 from repro.core.executor import TMExecutor  # noqa: F401

@@ -566,6 +566,41 @@ def identity_map(shape: tuple[int, ...]) -> MixedRadixMap:
     )
 
 
+def batch_extend_map(m: MixedRadixMap,
+                     batch_shape: tuple[int, ...]) -> MixedRadixMap:
+    """Lift a core map over leading batch axes: identity ⊗ m.
+
+    The batched map's digit vector is ``(batch coords, core digits)`` — every
+    core digit index shifts by ``len(batch_shape)`` (splits move to shifted
+    axes; remainders still append after all output coords, which is exactly
+    ``+B`` positions later).  This lets the Pallas backend execute batched
+    programs through the unmodified kernels: the batch axes become extra grid
+    dimensions / gather rows, no vmap required.
+    """
+    B = len(batch_shape)
+    if B == 0:
+        return m
+    n_out = len(m.out_shape)
+    n_dig = n_out + len(m.splits)
+    A = [[Frac(0)] * (B + n_dig) for _ in range(B + len(m.in_shape))]
+    b = [Frac(0)] * (B + len(m.in_shape))
+    for i in range(B):  # batch coords pass through
+        A[i][i] = Frac(1)
+    for i, (row, off) in enumerate(zip(m.affine.A, m.affine.b)):
+        for j, v in enumerate(row):
+            A[B + i][B + j] = v
+        b[B + i] = off
+    return MixedRadixMap(
+        out_shape=batch_shape + m.out_shape,
+        in_shape=batch_shape + m.in_shape,
+        splits=tuple(DigitSplit(sp.axis + B, sp.radix) for sp in m.splits),
+        affine=AffineMap(tuple(tuple(r) for r in A), tuple(b)),
+        fill=m.fill,
+        oob_possible=m.oob_possible,
+        digit_bounds=tuple((d + B, bound) for d, bound in m.digit_bounds),
+    )
+
+
 def compose_maps(outer: MixedRadixMap, inner: MixedRadixMap) -> MixedRadixMap | None:
     """Fuse two gather maps into one (outer applied after inner, i.e. the data
     flows inner -> outer; the composed gather is inner_map ∘ outer_map on

@@ -1,0 +1,123 @@
+"""Kernel-dispatch registry — lowering TM instructions onto Pallas kernels.
+
+The TMU decodes each instruction's register contents and drives one of its
+datapaths; the TPU-native analogue is *lowering*: each :class:`TMInstr` is
+matched against a registry of kernel rules (populated by the kernel packages
+under :mod:`repro.kernels` at import time) and executed by the first rule
+that claims it.  Instructions no rule claims fall back to the generic engine
+(:func:`repro.core.engine.apply_map` et al.) — exactly like a TMU raising a
+configuration it does not support to the host.
+
+Every lowering decision is recorded as a :class:`Lowering` in a
+:class:`LoweringReport`, so tests and benchmarks can assert *which* datapath
+ran (block-mode DMA, gather kernel, RME compaction, …), not just that the
+numbers agree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+from repro.core.instr import TMInstr
+
+
+@dataclasses.dataclass(frozen=True)
+class Lowering:
+    """One instruction's lowering decision."""
+
+    dst: str
+    opcode: str
+    path: str        # e.g. "pallas.block", "pallas.gather+ew", "reference.coarse"
+    kernel: str = ""  # registry rule that claimed the instruction ("" = fallback)
+    reason: str = ""  # why the fallback was taken ("" when a kernel ran)
+
+    @property
+    def is_pallas(self) -> bool:
+        return self.path.startswith("pallas.")
+
+
+@dataclasses.dataclass
+class LoweringReport:
+    """Per-instruction lowering decisions for one executor run."""
+
+    backend: str
+    records: list[Lowering] = dataclasses.field(default_factory=list)
+
+    def paths(self) -> list[str]:
+        return [r.path for r in self.records]
+
+    def counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for r in self.records:
+            out[r.path] = out.get(r.path, 0) + 1
+        return out
+
+    def pallas_fraction(self) -> float:
+        if not self.records:
+            return 0.0
+        return sum(r.is_pallas for r in self.records) / len(self.records)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelRule:
+    """One registry entry.
+
+    ``matches(ins, srcs, batch_dims)`` returns the lowering path string when
+    the rule can execute the instruction (None otherwise); ``run`` executes
+    it.  ``priority`` orders rules (higher first) so specialised kernels
+    (img2col, resize) outrank the generic tm_affine gather.
+    """
+
+    name: str
+    matches: Callable[[TMInstr, Sequence[jnp.ndarray], int], str | None]
+    run: Callable[[TMInstr, Sequence[jnp.ndarray], int, bool], jnp.ndarray]
+    priority: int = 0
+
+
+_RULES: list[KernelRule] = []
+_REGISTERED = False
+
+
+def register_rule(name: str, matches, run, priority: int = 0) -> None:
+    """Register a kernel rule (called by kernel packages at import time)."""
+    global _RULES
+    _RULES = [r for r in _RULES if r.name != name]  # idempotent re-import
+    _RULES.append(KernelRule(name, matches, run, priority))
+    _RULES.sort(key=lambda r: -r.priority)
+
+
+def _ensure_registered() -> None:
+    """Import the kernel packages so their ops modules self-register."""
+    global _REGISTERED
+    if _REGISTERED:
+        return
+    import repro.kernels.img2col.ops    # noqa: F401
+    import repro.kernels.resize.ops     # noqa: F401
+    import repro.kernels.rme_gather.ops  # noqa: F401
+    import repro.kernels.tm_affine.ops  # noqa: F401
+    _REGISTERED = True
+
+
+def rules() -> list[KernelRule]:
+    _ensure_registered()
+    return list(_RULES)
+
+
+def lower_instr(ins: TMInstr, srcs: Sequence[jnp.ndarray], batch_dims: int,
+                interpret: bool) -> tuple[jnp.ndarray, Lowering] | None:
+    """Lower one instruction through the registry.
+
+    Returns ``(value, lowering)`` from the first matching rule, or None when
+    no rule claims the instruction (caller falls back to the engine).
+    """
+    _ensure_registered()
+    for rule in _RULES:
+        path = rule.matches(ins, srcs, batch_dims)
+        if path is not None:
+            val = rule.run(ins, srcs, batch_dims, interpret)
+            return val, Lowering(dst=ins.dst, opcode=ins.opcode.value,
+                                 path=path, kernel=rule.name)
+    return None

@@ -24,6 +24,11 @@ import jax.numpy as jnp
 from repro.core.affine import MixedRadixMap
 from repro.core.spec import row_major_strides
 
+# the element-wise stage's vector ops, keyed by EwOp.value — the single
+# table shared by the reference executor and the Pallas kernel epilogues
+EW_FNS = {"add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply,
+          "max": jnp.maximum}
+
 
 def _row_int_form(row, off) -> tuple[tuple[int, ...], int, int]:
     """(numerators, offset_numerator, common_denominator) for one affine row."""
@@ -87,6 +92,18 @@ def apply_map(m: MixedRadixMap, x: jnp.ndarray, *, batch_dims: int = 0) -> jnp.n
     if m.oob_possible:
         fill = jnp.asarray(m.fill, dtype=x.dtype)
         out = jnp.where(valid, out, fill)
+    return out
+
+
+def route_gather(maps, xs, *, batch_dims: int = 0) -> jnp.ndarray:
+    """Multi-band gather (paper Route): each map reads its source into its
+    band of the output; disjoint supports sum to the concat.  The canonical
+    band loop, shared by the executor's COARSE multi-map path and
+    :func:`repro.core.tm_ops.route`."""
+    out = None
+    for x, m in zip(xs, maps):
+        band = apply_map(m, x, batch_dims=batch_dims)
+        out = band if out is None else out + band
     return out
 
 

@@ -17,10 +17,14 @@ Backends:
     "HBM", like a CPU fallback / the paper's unfused baseline).
   * ``fused``     — run the fusion pass first (near-memory execution: elided
     intermediates never materialize), then execute.
+  * ``pallas``    — lower each instruction through the kernel-dispatch
+    registry (:mod:`repro.core.dispatch`) onto the hand-written Pallas
+    kernels; unsupported configurations fall back to the reference engine.
+    ``last_lowering`` records which path each instruction took.
 
-The executor itself is jit-compatible: running it under ``jax.jit`` stages
-the whole program into one XLA computation, which is the final TPU-native
-form (XLA then fuses the remaining gathers with neighbours).
+The reference/fused executors are jit-compatible: running them under
+``jax.jit`` stages the whole program into one XLA computation, which is the
+final TPU-native form (XLA then fuses the remaining gathers with neighbours).
 """
 
 from __future__ import annotations
@@ -31,34 +35,63 @@ from typing import Callable
 import jax.numpy as jnp
 
 from repro.core import rme
-from repro.core.engine import apply_map
+from repro.core.dispatch import Lowering, LoweringReport, lower_instr
+from repro.core.engine import EW_FNS, apply_map, route_gather
 from repro.core.fusion import FusionReport, fuse
 from repro.core.instr import EwOp, TMInstr, TMOpcode, TMProgram
 
-_EW: dict[EwOp, Callable] = {
-    EwOp.ADD: jnp.add,
-    EwOp.SUB: jnp.subtract,
-    EwOp.MUL: jnp.multiply,
-    EwOp.MAX: jnp.maximum,
-}
+_EW: dict[EwOp, Callable] = {op: EW_FNS[op.value] for op in EwOp}
+
+BACKENDS = ("reference", "fused", "pallas")
 
 
 @dataclasses.dataclass
 class TMExecutor:
-    backend: str = "fused"  # "reference" | "fused"
+    backend: str = "fused"  # "reference" | "fused" | "pallas"
+    interpret: bool = True  # Pallas interpreter mode (CPU-safe); False on TPU
     last_report: FusionReport | None = None
+    last_lowering: LoweringReport | None = None
+
+    def __post_init__(self):
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r}; expected one of {BACKENDS}")
 
     def __call__(self, prog: TMProgram, buffers: dict[str, jnp.ndarray],
                  *, batch_dims: int = 0) -> dict[str, jnp.ndarray]:
         if self.backend == "fused":
             prog, self.last_report = fuse(prog)
+        self.last_lowering = LoweringReport(backend=self.backend)
         bufs = dict(buffers)
         for ins in prog.instrs:  # Fetch
-            bufs[ins.dst] = self._exec(ins, bufs, batch_dims)  # Decode..Store
+            bufs[ins.dst] = self._dispatch(ins, bufs, batch_dims)
         missing = [o for o in prog.outputs if o not in bufs]
         if missing:
             raise KeyError(f"program did not produce outputs: {missing}")
         return {o: bufs[o] for o in prog.outputs}
+
+    def _dispatch(self, ins: TMInstr, bufs: dict, batch_dims: int) -> jnp.ndarray:
+        if self.backend == "pallas":
+            srcs = [bufs[s] for s in ins.srcs]  # Tensor Load
+            lowered = lower_instr(ins, srcs, batch_dims, self.interpret)
+            if lowered is not None:
+                val, rec = lowered
+                self.last_lowering.records.append(rec)
+                return val
+            # the registry cannot tell us *why* every rule declined; report
+            # the one observable condition without guessing at causes
+            reason = (f"no matching kernel rule (batch_dims={batch_dims})"
+                      if batch_dims else "no matching kernel rule")
+            val = self._exec(ins, bufs, batch_dims)
+            self.last_lowering.records.append(Lowering(
+                dst=ins.dst, opcode=ins.opcode.value,
+                path=f"reference.{ins.opcode.value}", reason=reason))
+            return val
+        val = self._exec(ins, bufs, batch_dims)
+        self.last_lowering.records.append(Lowering(
+            dst=ins.dst, opcode=ins.opcode.value,
+            path=f"reference.{ins.opcode.value}"))
+        return val
 
     # one instruction = Decode + Load + (fine|ew|coarse) + Store
     def _exec(self, ins: TMInstr, bufs: dict, batch_dims: int) -> jnp.ndarray:
@@ -69,10 +102,7 @@ class TMExecutor:
             return _EW[ins.ew](srcs[0], srcs[1])
         if ins.opcode == TMOpcode.COARSE:
             if ins.maps is not None:  # Route: band loop (Branch stage)
-                out = None
-                for x, m in zip(srcs, ins.maps):
-                    band = apply_map(m, x, batch_dims=batch_dims)
-                    out = band if out is None else out + band
+                out = route_gather(ins.maps, srcs, batch_dims=batch_dims)
                 if ins.ew is not None and len(srcs) > len(ins.maps):
                     out = _EW[ins.ew](out, srcs[-1])
                 return out
@@ -80,6 +110,9 @@ class TMExecutor:
             if ins.ew is not None:  # fused elementwise epilogue
                 out = _EW[ins.ew](out, srcs[1])
             return out
+        if ins.opcode == TMOpcode.RESIZE:
+            from repro.core.tm_ops import resize_bilinear
+            return resize_bilinear(srcs[0], ins.meta["out_h"], ins.meta["out_w"])
         if ins.opcode == TMOpcode.FINE_ASSEMBLE:
             cfg = ins.rme
             if cfg.lane_mask is not None:

@@ -38,8 +38,44 @@ class FusionReport:
         return 1.0 - self.bytes_after / self.bytes_before
 
 
-def _consumers(prog: TMProgram, name: str) -> list[int]:
-    return [i for i, ins in enumerate(prog.instrs) if name in ins.srcs]
+@dataclasses.dataclass(frozen=True)
+class ForwardEdge:
+    """Producer instruction ``producer`` streams committed output segments of
+    ``buffer`` directly into consumer instruction ``consumer``."""
+
+    producer: int
+    consumer: int
+    buffer: str
+
+
+def forwarding_edges(prog: TMProgram) -> list[ForwardEdge]:
+    """Cross-instruction output forwarding (paper Fig. 5c).
+
+    Where :func:`fuse` *elides* an intermediate by composing address maps,
+    forwarding is the weaker-but-universal form: any single-consumer
+    intermediate — composable or not — can be streamed segment-by-segment
+    into its consumer, so the consumer starts as soon as the producer commits
+    its first block iteration instead of after the full tensor lands.  The
+    schedule pass (:mod:`repro.core.schedule`) turns these edges into
+    overlapped start times; this function only identifies legality:
+
+      * the buffer is an intermediate (inputs/outputs must materialize), and
+      * it has exactly one consumer, downstream of the producer (a second
+        consumer would need the full tensor buffered anyway).
+    """
+    edges: list[ForwardEdge] = []
+    ext = set(prog.inputs) | set(prog.outputs)
+    for i, producer in enumerate(prog.instrs):
+        dst = producer.dst
+        if dst in ext:
+            continue
+        cons = prog.consumer_indices(dst)
+        if len(cons) != 1 or cons[0] <= i:
+            continue
+        if any(prog.instrs[k].dst == dst for k in range(i + 1, cons[0])):
+            continue  # rebound before the consumer: this write is stale
+        edges.append(ForwardEdge(producer=i, consumer=cons[0], buffer=dst))
+    return edges
 
 
 def _map_bytes(m: MixedRadixMap, itemsize: int = 4) -> int:

@@ -33,6 +33,7 @@ class TMOpcode(enum.Enum):
     FINE_EVALUATE = "fine_eval"  # RME evaluate: threshold filter -> stream
     ELEMENTWISE = "elementwise"  # Add / Sub / Mul / Max across 2 streams
     COPY = "copy"              # pure load->store (DMA passthrough)
+    RESIZE = "resize"          # fine-grained weighted 4-tap gather (paper Resize)
 
 
 class EwOp(enum.Enum):
@@ -68,6 +69,13 @@ class RMEConfig:
     def encode(self) -> dict:
         return dataclasses.asdict(self)
 
+    @staticmethod
+    def decode(d: dict) -> "RMEConfig":
+        d = dict(d)
+        if d.get("lane_mask") is not None:  # JSON round-trips tuples as lists
+            d["lane_mask"] = tuple(d["lane_mask"])
+        return RMEConfig(**d)
+
 
 @dataclasses.dataclass(frozen=True)
 class TMInstr:
@@ -96,6 +104,27 @@ class TMInstr:
             assert self.rme is not None
         if self.opcode == TMOpcode.ELEMENTWISE:
             assert self.ew is not None and len(self.srcs) == 2
+        if self.opcode == TMOpcode.RESIZE:
+            assert self.meta is not None and "out_h" in self.meta \
+                and "out_w" in self.meta
+
+    def active_stages(self) -> tuple[str, ...]:
+        """Which of the eight pipeline stages this instruction drives.
+
+        Fetch/Decode/Tensor Load/Tensor Store are always active; the middle
+        stages depend on the opcode.  The schedule pass charges per-stage
+        cycles only for active stages (paper Fig. 3)."""
+        mid: tuple[str, ...] = ()
+        if self.opcode == TMOpcode.COARSE:
+            mid = ("coarse",) + (("elementwise",) if self.ew is not None else ())
+            if self.maps is not None and len(self.maps) > 1:
+                mid = mid + ("branch",)  # band loop over the Route maps
+        elif self.opcode in (TMOpcode.FINE_ASSEMBLE, TMOpcode.FINE_EVALUATE,
+                             TMOpcode.RESIZE):
+            mid = ("fine",)
+        elif self.opcode == TMOpcode.ELEMENTWISE:
+            mid = ("elementwise",)
+        return ("fetch", "decode", "load") + mid + ("store",)
 
     def encode(self) -> dict:
         d: dict[str, Any] = {
@@ -123,7 +152,7 @@ class TMInstr:
             dst=d["dst"],
             map_=MixedRadixMap.decode(d["map"]) if "map" in d else None,
             maps=tuple(MixedRadixMap.decode(m) for m in d["maps"]) if "maps" in d else None,
-            rme=RMEConfig(**d["rme"]) if "rme" in d else None,
+            rme=RMEConfig.decode(d["rme"]) if "rme" in d else None,
             ew=EwOp(d["ew"]) if "ew" in d else None,
             meta=d.get("meta"),
         )
@@ -158,6 +187,9 @@ class TMProgram:
             inputs=tuple(d["inputs"]),
             outputs=tuple(d["outputs"]),
         )
+
+    def consumer_indices(self, name: str) -> list[int]:
+        return [i for i, ins in enumerate(self.instrs) if name in ins.srcs]
 
     def intermediates(self) -> list[str]:
         names: list[str] = []

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import affine as af
 from repro.core import rme
-from repro.core.engine import apply_map
+from repro.core.engine import apply_map, route_gather
 
 
 def _bd(x: jnp.ndarray, core_ndim: int) -> int:
@@ -71,13 +71,8 @@ def route(xs: Sequence[jnp.ndarray]) -> jnp.ndarray:
     """Channel concat — paper Route.  Gather-form: each band map reads its
     source; bands are summed (disjoint supports)."""
     b = _bd(xs[0], 3)
-    shapes = [x.shape[b:] for x in xs]
-    maps = af.route_maps(shapes)
-    out = None
-    for x, m in zip(xs, maps):
-        band = apply_map(m, x, batch_dims=b)
-        out = band if out is None else out + band
-    return out
+    maps = af.route_maps([x.shape[b:] for x in xs])
+    return route_gather(maps, xs, batch_dims=b)
 
 
 def add(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:

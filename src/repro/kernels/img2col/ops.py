@@ -1,4 +1,4 @@
-"""Jit'd wrappers for the img2col / conv kernels."""
+"""Jit'd wrappers for the img2col / conv kernels + dispatch registration."""
 
 from __future__ import annotations
 
@@ -6,6 +6,8 @@ from functools import partial
 
 import jax
 
+from repro.core.dispatch import register_rule
+from repro.core.instr import TMOpcode
 from repro.kernels.img2col.img2col import conv2d, img2col
 
 
@@ -17,3 +19,38 @@ def img2col_call(x, *, kh, kw, stride=1, pad=0, interpret=True):
 @partial(jax.jit, static_argnames=("stride", "pad", "interpret"))
 def conv2d_call(x, w, *, stride=1, pad=0, interpret=True):
     return conv2d(x, w, stride, pad, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-registry rule: COARSE instructions tagged with img2col metadata
+# run the slab kernel (on-chip patch assembly) instead of the generic gather.
+# ---------------------------------------------------------------------------
+
+def _img2col_matches(ins, srcs, batch_dims):
+    if ins.opcode != TMOpcode.COARSE or ins.ew is not None:
+        return None
+    cfg = (ins.meta or {}).get("img2col")
+    if cfg is None or batch_dims != 0 or len(srcs) != 1:
+        return None
+    if srcs[0].ndim != 3 or ins.map_ is None \
+            or srcs[0].shape != ins.map_.in_shape:
+        return None
+    # the map is ground truth, meta only a lowering hint: decline unless the
+    # hint reconstructs the map exactly (the generic gather then runs map_)
+    from repro.core.affine import img2col_map
+    expect = img2col_map(ins.map_.in_shape, cfg["kh"], cfg["kw"],
+                         cfg.get("stride", 1), cfg.get("pad", 0),
+                         fill=ins.map_.fill)
+    if expect != ins.map_:
+        return None
+    return "pallas.img2col"
+
+
+def _img2col_run(ins, srcs, batch_dims, interpret):
+    cfg = ins.meta["img2col"]
+    return img2col_call(srcs[0], kh=cfg["kh"], kw=cfg["kw"],
+                        stride=cfg.get("stride", 1), pad=cfg.get("pad", 0),
+                        interpret=interpret)
+
+
+register_rule("img2col", _img2col_matches, _img2col_run, priority=20)

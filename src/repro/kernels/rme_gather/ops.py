@@ -1,7 +1,11 @@
+"""Jit'd wrappers for the RME compaction kernels + dispatch registration."""
+
 from functools import partial
 
 import jax
 
+from repro.core.dispatch import register_rule
+from repro.core.instr import TMOpcode
 from repro.kernels.rme_gather.rme_gather import assemble, evaluate
 
 
@@ -15,3 +19,51 @@ def evaluate_call(x, threshold, *, capacity, cmp="ge", score_index=0,
 @partial(jax.jit, static_argnames=("capacity", "interpret"))
 def assemble_call(x, mask, *, capacity, interpret=True):
     return assemble(x, mask, capacity, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-registry rules: FINE instructions whose RME config the sort-based
+# compaction kernel supports (runtime predicate/mask, static capacity, 2-D
+# record stream).  Static lane masks and top-k fall back to the engine.
+# ---------------------------------------------------------------------------
+
+def _evaluate_matches(ins, srcs, batch_dims):
+    if ins.opcode != TMOpcode.FINE_EVALUATE or batch_dims != 0:
+        return None
+    cfg = ins.rme
+    if cfg.top_k is not None or cfg.capacity is None or cfg.threshold is None:
+        return None
+    if len(srcs) != 1 or srcs[0].ndim != 2:
+        return None
+    return "pallas.rme.evaluate"
+
+
+def _evaluate_run(ins, srcs, batch_dims, interpret):
+    rows, _, _ = evaluate_call(srcs[0], ins.rme.threshold,
+                               capacity=ins.rme.capacity, cmp=ins.rme.cmp,
+                               score_index=ins.rme.score_index,
+                               interpret=interpret)
+    return rows
+
+
+def _assemble_matches(ins, srcs, batch_dims):
+    if ins.opcode != TMOpcode.FINE_ASSEMBLE or batch_dims != 0:
+        return None
+    cfg = ins.rme
+    if cfg.lane_mask is not None or cfg.capacity is None:
+        return None
+    if len(srcs) != 2 or srcs[0].ndim != 2 or srcs[1].ndim != 1:
+        return None
+    return "pallas.rme.assemble"
+
+
+def _assemble_run(ins, srcs, batch_dims, interpret):
+    packed, _ = assemble_call(srcs[0], srcs[1],
+                              capacity=ins.rme.capacity, interpret=interpret)
+    return packed
+
+
+register_rule("rme_gather.evaluate", _evaluate_matches, _evaluate_run,
+              priority=10)
+register_rule("rme_gather.assemble", _assemble_matches, _assemble_run,
+              priority=10)

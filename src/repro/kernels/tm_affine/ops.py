@@ -1,13 +1,16 @@
-"""Jit'd public wrapper for the generic TM kernel."""
+"""Jit'd public wrappers for the generic TM kernel + dispatch registration."""
 
 from __future__ import annotations
 
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.affine import MixedRadixMap
+from repro.core.affine import MixedRadixMap, batch_extend_map
+from repro.core.dispatch import register_rule
+from repro.core.engine import EW_FNS
+from repro.core.instr import TMOpcode
 from repro.kernels.tm_affine.tm_affine import analyze_block_mode, tm_affine
 
 
@@ -17,6 +20,90 @@ def tm_affine_call(x: jnp.ndarray, m: MixedRadixMap, *, interpret: bool = True,
     return tm_affine(x, m, interpret=interpret, force_mode=force_mode)
 
 
+@partial(jax.jit, static_argnums=(2,),
+         static_argnames=("ew", "interpret", "force_mode"))
+def tm_affine_ew_call(x: jnp.ndarray, y: jnp.ndarray, m: MixedRadixMap, *,
+                      ew: str, interpret: bool = True,
+                      force_mode: str | None = None) -> jnp.ndarray:
+    """Map + fused element-wise epilogue: ``ew(apply_map(m, x), y)``."""
+    return tm_affine(x, m, interpret=interpret, force_mode=force_mode,
+                     y=y, ew=EW_FNS[ew])
+
+
 def plan_of(m: MixedRadixMap):
     """Expose the decode step (block plan or None) for tests/benchmarks."""
     return analyze_block_mode(m)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-registry rules: the generic coarse-grained datapath
+# ---------------------------------------------------------------------------
+
+# MixedRadixMap is frozen/hashable: memoize the batch lift and the decode
+# analysis so match + run share one computation per (map, batch) pair
+_lift_cached = lru_cache(maxsize=512)(batch_extend_map)
+_plan_cached = lru_cache(maxsize=512)(analyze_block_mode)
+
+
+def _lifted(ins, srcs, batch_dims) -> MixedRadixMap | None:
+    if ins.map_ is None:
+        return None
+    batch = srcs[0].shape[:batch_dims]
+    if srcs[0].shape[batch_dims:] != ins.map_.in_shape:
+        return None
+    return _lift_cached(ins.map_, batch)
+
+
+def _coarse_matches(ins, srcs, batch_dims):
+    if ins.opcode != TMOpcode.COARSE:
+        return None
+    m = _lifted(ins, srcs, batch_dims)
+    if m is None:
+        return None
+    mode = "block" if _plan_cached(m) is not None else "gather"
+    if ins.ew is not None:
+        # the kernel epilogue streams y in output layout — broadcastable
+        # operands are the engine's job, decline and fall back
+        if len(srcs) != 2 or srcs[1].shape != m.out_shape:
+            return None
+        return f"pallas.{mode}+ew"
+    if len(srcs) != 1:
+        return None
+    return f"pallas.{mode}"
+
+
+def _coarse_run(ins, srcs, batch_dims, interpret):
+    m = _lifted(ins, srcs, batch_dims)
+    if ins.ew is not None:
+        return tm_affine_ew_call(srcs[0], srcs[1], m, ew=ins.ew.value,
+                                 interpret=interpret)
+    return tm_affine_call(srcs[0], m, interpret=interpret)
+
+
+def _route_matches(ins, srcs, batch_dims):
+    if ins.opcode != TMOpcode.COARSE or ins.maps is None:
+        return None
+    n_band = len(ins.maps)
+    expected = n_band + (1 if ins.ew is not None else 0)
+    if len(srcs) != expected:
+        return None
+    for x, m in zip(srcs, ins.maps):
+        if x.shape[batch_dims:] != m.in_shape:
+            return None
+    return "pallas.route+ew" if ins.ew is not None else "pallas.route"
+
+
+def _route_run(ins, srcs, batch_dims, interpret):
+    # band loop (Branch stage): one kernel launch per band, disjoint supports
+    batch = srcs[0].shape[:batch_dims]
+    out = None
+    for x, m in zip(srcs, ins.maps):
+        band = tm_affine_call(x, _lift_cached(m, batch), interpret=interpret)
+        out = band if out is None else out + band
+    if ins.ew is not None:
+        out = EW_FNS[ins.ew.value](out, srcs[-1])
+    return out
+
+
+register_rule("tm_affine.route", _route_matches, _route_run, priority=10)
+register_rule("tm_affine", _coarse_matches, _coarse_run, priority=0)

@@ -59,8 +59,8 @@ class BlockPlan:
 def analyze_block_mode(m: MixedRadixMap,
                        block: tuple[int, ...] | None = None) -> BlockPlan | None:
     """Return a BlockPlan if the map is a signed permutation w/ liftable offsets."""
-    if m.splits or m.digit_bounds:
-        return None
+    if m.splits or m.digit_bounds or m.oob_possible:
+        return None  # block mode has no validity mask: OOB fill needs gather
     n_out, n_in = len(m.out_shape), len(m.in_shape)
     if n_out != n_in:
         return None
@@ -129,8 +129,9 @@ def _default_block(shape: tuple[int, ...]) -> tuple[int, ...]:
 # block-mode kernel
 # ---------------------------------------------------------------------------
 
-def _block_kernel(plan: BlockPlan):
-    def kernel(x_ref, o_ref):
+def _block_kernel(plan: BlockPlan, ew=None):
+    def kernel(x_ref, *rest):
+        o_ref = rest[-1]
         val = x_ref[...]
         # un-permute: out-block axis i <- in-block axis plan.perm[i]
         val = jnp.transpose(val, axes=plan.perm) if plan.perm != tuple(
@@ -138,12 +139,15 @@ def _block_kernel(plan: BlockPlan):
         for ax, s in enumerate(plan.sign):
             if s < 0:
                 val = jnp.flip(val, axis=ax)
+        if ew is not None:  # fused element-wise epilogue (same pipeline pass)
+            val = ew(val, rest[0][...])
         o_ref[...] = val
     return kernel
 
 
 def _block_call(x: jnp.ndarray, m: MixedRadixMap, plan: BlockPlan,
-                interpret: bool) -> jnp.ndarray:
+                interpret: bool, y: jnp.ndarray | None = None,
+                ew=None) -> jnp.ndarray:
     n = len(plan.grid)
 
     def in_index(*gidx):
@@ -164,30 +168,42 @@ def _block_call(x: jnp.ndarray, m: MixedRadixMap, plan: BlockPlan,
     for d in range(n):
         in_block[plan.src_axis[d]] = plan.block[d]
 
+    in_specs = [pl.BlockSpec(tuple(in_block), in_index)]
+    args = [x]
+    if y is not None:  # epilogue operand streams in output layout
+        in_specs.append(pl.BlockSpec(plan.block, lambda *g: g))
+        args.append(y)
     return pl.pallas_call(
-        _block_kernel(plan),
+        _block_kernel(plan, ew),
         grid=plan.grid,
-        in_specs=[pl.BlockSpec(tuple(in_block), in_index)],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(plan.block, lambda *g: g),
         out_shape=jax.ShapeDtypeStruct(m.out_shape, x.dtype),
         interpret=interpret,
-    )(x)
+    )(*args)
 
 
 # ---------------------------------------------------------------------------
 # gather-mode kernel
 # ---------------------------------------------------------------------------
 
-def _gather_kernel(x_ref, idx_ref, valid_ref, fill_ref, o_ref):
-    xf = x_ref[...].reshape(-1)
-    idx = idx_ref[...]
-    out = jnp.take(xf, idx.reshape(-1), axis=0).reshape(idx.shape)
-    valid = valid_ref[...]
-    o_ref[...] = jnp.where(valid, out, fill_ref[0].astype(out.dtype))
+def _gather_kernel(ew):
+    def kernel(x_ref, idx_ref, valid_ref, fill_ref, *rest):
+        o_ref = rest[-1]
+        xf = x_ref[...].reshape(-1)
+        idx = idx_ref[...]
+        out = jnp.take(xf, idx.reshape(-1), axis=0).reshape(idx.shape)
+        valid = valid_ref[...]
+        out = jnp.where(valid, out, fill_ref[0].astype(out.dtype))
+        if ew is not None:  # fused element-wise epilogue
+            out = ew(out, rest[0][...])
+        o_ref[...] = out
+    return kernel
 
 
 def _gather_call(x: jnp.ndarray, m: MixedRadixMap, interpret: bool,
-                 row_block: int = 256) -> jnp.ndarray:
+                 row_block: int = 256, y: jnp.ndarray | None = None,
+                 ew=None) -> jnp.ndarray:
     flat_idx, valid = gather_indices(m)  # folds to constants under jit
     rows = math.prod(m.out_shape[:-1]) if len(m.out_shape) > 1 else 1
     minor = m.out_shape[-1]
@@ -198,19 +214,24 @@ def _gather_call(x: jnp.ndarray, m: MixedRadixMap, interpret: bool,
         rb -= 1
     grid = (rows // rb,)
     fill = jnp.asarray([m.fill], dtype=x.dtype)
+    in_specs = [
+        pl.BlockSpec(x.shape, lambda i: (0,) * x.ndim),   # whole input slab
+        pl.BlockSpec((rb, minor), lambda i: (i, 0)),
+        pl.BlockSpec((rb, minor), lambda i: (i, 0)),
+        pl.BlockSpec((1,), lambda i: (0,)),
+    ]
+    args = [x, idx2, val2, fill]
+    if y is not None:
+        in_specs.append(pl.BlockSpec((rb, minor), lambda i: (i, 0)))
+        args.append(y.reshape(rows, minor))
     out = pl.pallas_call(
-        _gather_kernel,
+        _gather_kernel(ew),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec(x.shape, lambda i: (0,) * x.ndim),   # whole input slab
-            pl.BlockSpec((rb, minor), lambda i: (i, 0)),
-            pl.BlockSpec((rb, minor), lambda i: (i, 0)),
-            pl.BlockSpec((1,), lambda i: (0,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((rb, minor), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((rows, minor), x.dtype),
         interpret=interpret,
-    )(x, idx2, val2, fill)
+    )(*args)
     return out.reshape(m.out_shape)
 
 
@@ -220,10 +241,19 @@ def _gather_call(x: jnp.ndarray, m: MixedRadixMap, interpret: bool,
 
 def tm_affine(x: jnp.ndarray, m: MixedRadixMap, *, interpret: bool = True,
               block: tuple[int, ...] | None = None,
-              force_mode: str | None = None) -> jnp.ndarray:
-    """Execute a MixedRadixMap as a Pallas kernel (decode -> block|gather)."""
+              force_mode: str | None = None,
+              y: jnp.ndarray | None = None, ew=None) -> jnp.ndarray:
+    """Execute a MixedRadixMap as a Pallas kernel (decode -> block|gather).
+
+    ``y``/``ew``: optional fused element-wise epilogue — ``ew(map(x), y)``
+    computed inside the kernel while the output block is VMEM-resident
+    (``y`` must have ``m.out_shape``).
+    """
     assert x.shape == m.in_shape, (x.shape, m.in_shape)
+    assert (y is None) == (ew is None)
+    if y is not None:
+        assert y.shape == m.out_shape, (y.shape, m.out_shape)
     plan = None if force_mode == "gather" else analyze_block_mode(m, block)
     if plan is not None and force_mode != "gather":
-        return _block_call(x, m, plan, interpret)
-    return _gather_call(x, m, interpret)
+        return _block_call(x, m, plan, interpret, y=y, ew=ew)
+    return _gather_call(x, m, interpret, y=y, ew=ew)

@@ -142,6 +142,75 @@ def _symtab(instrs: list[Instr]) -> dict[str, str]:
 def analyze(text: str) -> CostTotals:
     comps = parse_module(text)
     memo: dict[str, CostTotals] = {}
+    uses_memo: dict[str, dict[str, list[Instr]]] = {}
+
+    def _uses_of(comp_name: str) -> dict[str, list[Instr]]:
+        """operand name -> consumer instrs (one entry per occurrence),
+        built once per computation (comps is immutable here)."""
+        cached = uses_memo.get(comp_name)
+        if cached is None:
+            cached = {}
+            for ins in comps.get(comp_name, []):
+                for o in re.findall(r"%([\w\.\-]+)", ins.args_str):
+                    cached.setdefault(o, []).append(ins)
+            uses_memo[comp_name] = cached
+        return cached
+
+    def _param_reads(comp_name: str, pidx: int, depth: int = 0) -> float | None:
+        """Bytes actually read of parameter ``pidx`` of ``comp_name``.
+
+        Follows consumers through bitcasts and through nested fusion/call
+        computations (newer XLA wraps the scan-body dynamic-slice in a
+        ``call -> fusion`` chain).  Returns None when any consumption path
+        reads the whole buffer.
+        """
+        if depth > 8:
+            return None
+        instrs = comps.get(comp_name, [])
+        if not instrs:
+            return None
+        uses = _uses_of(comp_name)
+        target = next((ins for ins in instrs if ins.op == "parameter"
+                       and ins.args_str.strip() == str(pidx)), None)
+        if target is None:
+            return None
+        total = 0.0
+        consumed = False
+        frontier = [target.name]
+        visited: set[str] = set()
+        while frontier:
+            nm = frontier.pop()
+            if nm in visited:
+                continue
+            visited.add(nm)
+            # uses lists a consumer once per operand occurrence; walk each
+            # consumer once but charge every operand position it reads nm at
+            seen_consumers: set[int] = set()
+            for u in uses.get(nm, []):
+                if id(u) in seen_consumers:
+                    continue
+                seen_consumers.add(id(u))
+                if u.op == "bitcast":
+                    frontier.append(u.name)
+                    continue
+                consumed = True
+                if u.op == "dynamic-slice":
+                    total += _bytes_of(u.result_type)
+                elif u.op in ("fusion", "call"):
+                    cm = _CALLS_RE.search(u.attrs) or _APPLY_RE.search(u.attrs)
+                    ops = re.findall(r"%([\w\.\-]+)", u.args_str)
+                    if cm is None or nm not in ops:
+                        return None
+                    for pos, o in enumerate(ops):
+                        if o != nm:
+                            continue
+                        sub = _param_reads(cm.group(1), pos, depth + 1)
+                        if sub is None:
+                            return None
+                        total += sub
+                else:
+                    return None
+        return total if consumed else 0.0
 
     def _fusion_bytes(comp_name: str, rbytes: int, obytes: int,
                       operand_names: list, sym: dict) -> float:
@@ -157,31 +226,13 @@ def analyze(text: str) -> CostTotals:
         if not instrs:
             return rbytes + obytes
         isym = {i.name: i for i in instrs}
-        # per-parameter consumption granularity
-        uses: dict[str, list[Instr]] = {}
-        for ins in instrs:
-            for o in re.findall(r"%([\w\.\-]+)", ins.args_str):
-                uses.setdefault(o, []).append(ins)
         total = 0.0
-        pidx = 0
         for ins in instrs:
             if ins.op != "parameter":
                 continue
-            pname = ins.name
             pb = _bytes_of(ins.result_type)
-            consumers = uses.get(pname, [])
-            # follow through bitcasts
-            expanded = []
-            for u in consumers:
-                if u.op == "bitcast":
-                    expanded.extend(uses.get(u.name, []))
-                else:
-                    expanded.append(u)
-            if expanded and all(u.op == "dynamic-slice" for u in expanded):
-                total += sum(_bytes_of(u.result_type) for u in expanded)
-            else:
-                total += pb
-            pidx += 1
+            sliced = _param_reads(comp_name, int(ins.args_str.strip() or 0))
+            total += pb if sliced is None else sliced
         # root: in-place DUS writes only the update region
         root = instrs[-1]
         seen = root

@@ -1,0 +1,233 @@
+"""Differential-testing harness: every paper operator as a TMProgram, run
+through all executor backends and checked for agreement.
+
+The harness is the safety net under the kernel-dispatch rewiring: each
+:class:`OpCase` builds a single-purpose program, and :func:`run_differential`
+executes it through the ``reference``, ``fused`` and ``pallas`` backends,
+asserting
+
+  * bit-exact agreement for integer dtypes and for pure data-movement float
+    ops (gathers never touch values), atol-bounded agreement for arithmetic
+    ops (resize);
+  * an invariant pallas lowering report — tests pin *which* datapath ran
+    (block-mode DMA, gather kernel, RME compaction, fallback), across all
+    dtypes, so a silent fallback is a test failure, not a perf mystery.
+
+Shapes are deliberately odd / non-tile-aligned where the op permits, to
+exercise the kernels' remainder handling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import affine as af
+from repro.core.executor import TMExecutor
+from repro.core.instr import EwOp, RMEConfig, TMInstr, TMOpcode, TMProgram
+
+ALL_DTYPES = ("int8", "int32", "bfloat16", "float32")
+FLOAT_DTYPES = ("bfloat16", "float32")
+BACKENDS = ("reference", "fused", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpCase:
+    """One paper operator expressed as a (program, input shapes) builder."""
+
+    name: str
+    build: Callable[[], tuple[TMProgram, dict[str, tuple[int, ...]]]]
+    expect_paths: tuple[str, ...]       # pallas lowering at batch_dims=0
+    dtypes: tuple[str, ...] = ALL_DTYPES
+    supports_batch: bool = True
+    exact: bool = True                  # bit-exact across backends
+    atol: float = 0.0                   # used when exact=False (float dtypes)
+    mask_inputs: tuple[str, ...] = ()   # inputs that must be boolean
+    scale: float = 100.0                # float payload range (thresholds are
+    #                                     integer-valued; arithmetic ops use
+    #                                     1.0 so atol is meaningful)
+
+
+def _single(name, m, **kw):
+    return TMProgram([TMInstr(TMOpcode.COARSE, ("x",), "y", map_=m, **kw)],
+                     inputs=("x",), outputs=("y",)), {"x": m.in_shape}
+
+
+def _transpose():
+    return _single("transpose", af.transpose_map((5, 7, 3)))
+
+
+def _rot90():
+    return _single("rot90", af.rot90_map((5, 7, 3)))
+
+
+def _pixel_shuffle():
+    return _single("ps", af.pixel_shuffle_map((6, 10, 8), 2))
+
+
+def _pixel_unshuffle():
+    return _single("pu", af.pixel_unshuffle_map((6, 10, 2), 2))
+
+
+def _upsample():
+    return _single("us", af.upsample_map((5, 7, 3), 2))
+
+
+def _split():
+    return _single("split", af.split_map((5, 7, 6), 3, 1))
+
+
+def _strided_slice():
+    m = af.strided_slice_map((5, 7, 3), (1, 2, 0), (2, 3, 1), (2, 2, 3))
+    return _single("slice", m)
+
+
+def _rearrange():
+    return _single("rearrange", af.rearrange_map((6, 8, 3), 4, 16))
+
+
+def _img2col():
+    m = af.img2col_map((8, 9, 3), 3, 3, 1, 1)
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "y", map_=m,
+                 meta={"img2col": {"kh": 3, "kw": 3, "stride": 1, "pad": 1}})],
+        inputs=("x",), outputs=("y",))
+    return prog, {"x": (8, 9, 3)}
+
+
+def _route():
+    maps = tuple(af.route_maps([(5, 7, 2), (5, 7, 3)]))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("a", "b"), "y", maps=maps)],
+        inputs=("a", "b"), outputs=("y",))
+    return prog, {"a": (5, 7, 2), "b": (5, 7, 3)}
+
+
+def _add():
+    # paper Add: identity layout map + element-wise stage in one instruction
+    m = af.identity_map((5, 7, 3))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x", "r"), "y", map_=m, ew=EwOp.ADD)],
+        inputs=("x", "r"), outputs=("y",))
+    return prog, {"x": (5, 7, 3), "r": (5, 7, 3)}
+
+
+def _bboxcal():
+    prog = TMProgram(
+        [TMInstr(TMOpcode.FINE_EVALUATE, ("p",), "y",
+                 rme=RMEConfig(scheme="evaluate", threshold=10.0, cmp="ge",
+                               score_index=4, capacity=8))],
+        inputs=("p",), outputs=("y",))
+    return prog, {"p": (33, 7)}
+
+
+def _assemble_runtime():
+    prog = TMProgram(
+        [TMInstr(TMOpcode.FINE_ASSEMBLE, ("x", "mask"), "y",
+                 rme=RMEConfig(scheme="assemble", capacity=8))],
+        inputs=("x", "mask"), outputs=("y",))
+    return prog, {"x": (21, 5), "mask": (21,)}
+
+
+def _assemble_static():
+    prog = TMProgram(
+        [TMInstr(TMOpcode.FINE_ASSEMBLE, ("x",), "y",
+                 rme=RMEConfig(scheme="assemble",
+                               lane_mask=(1, 0, 1, 1, 0, 0, 1)))],
+        inputs=("x",), outputs=("y",))
+    return prog, {"x": (5, 7)}
+
+
+def _resize():
+    prog = TMProgram(
+        [TMInstr(TMOpcode.RESIZE, ("x",), "y",
+                 meta={"out_h": 11, "out_w": 5})],
+        inputs=("x",), outputs=("y",))
+    return prog, {"x": (6, 9, 3)}
+
+
+def _chain():
+    m1 = af.transpose_map((4, 6, 8))
+    m2 = af.split_map((6, 4, 8), 2, 1)
+    m3 = af.transpose_map((6, 4, 4))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "a", map_=m1),
+         TMInstr(TMOpcode.COARSE, ("a",), "b", map_=m2),
+         TMInstr(TMOpcode.COARSE, ("b",), "y", map_=m3)],
+        inputs=("x",), outputs=("y",))
+    return prog, {"x": (4, 6, 8)}
+
+
+CASES = [
+    OpCase("transpose", _transpose, ("pallas.block",)),
+    OpCase("rot90", _rot90, ("pallas.block",)),
+    OpCase("pixelshuffle", _pixel_shuffle, ("pallas.gather",)),
+    OpCase("pixelunshuffle", _pixel_unshuffle, ("pallas.gather",)),
+    OpCase("upsample", _upsample, ("pallas.gather",)),
+    OpCase("split", _split, ("pallas.block",)),
+    OpCase("strided_slice", _strided_slice, ("pallas.gather",)),
+    OpCase("rearrange", _rearrange, ("pallas.gather",)),
+    OpCase("img2col", _img2col, ("pallas.img2col",)),
+    OpCase("route", _route, ("pallas.route",)),
+    OpCase("add", _add, ("pallas.block+ew",)),
+    OpCase("bboxcal", _bboxcal, ("pallas.rme.evaluate",),
+           supports_batch=False),
+    OpCase("assemble", _assemble_runtime, ("pallas.rme.assemble",),
+           supports_batch=False, mask_inputs=("mask",)),
+    OpCase("assemble_static", _assemble_static, ("reference.fine_asm",),
+           supports_batch=False),
+    OpCase("resize", _resize, ("pallas.resize",), dtypes=FLOAT_DTYPES,
+           exact=False, atol=1e-5, scale=1.0),
+    OpCase("chain", _chain,
+           ("pallas.block", "pallas.block", "pallas.block")),
+]
+
+CASES_BY_NAME = {c.name: c for c in CASES}
+
+
+def make_inputs(case: OpCase, shapes: dict, dtype: str, batch_dims: int,
+                rng: np.random.RandomState) -> dict[str, jnp.ndarray]:
+    batch = tuple(range(2, 2 + batch_dims))  # (2,), (2, 3), ...
+    bufs = {}
+    for name, core in shapes.items():
+        shape = batch + tuple(core)
+        if name in case.mask_inputs:
+            bufs[name] = jnp.asarray(rng.rand(*shape) > 0.5)
+        elif dtype.startswith("int"):
+            lo, hi = (-100, 100) if dtype != "int8" else (-99, 100)
+            bufs[name] = jnp.asarray(
+                rng.randint(lo, hi, size=shape).astype(dtype))
+        else:
+            # default scale ~[0, 100) so integer-valued thresholds discriminate
+            bufs[name] = jnp.asarray(
+                (rng.rand(*shape) * case.scale).astype(np.float32)).astype(dtype)
+    return bufs
+
+
+def assert_agree(case: OpCase, a: dict, b: dict, pair: str) -> None:
+    for k in a:
+        x = np.asarray(a[k], dtype=np.float64)
+        y = np.asarray(b[k], dtype=np.float64)
+        assert x.shape == y.shape, (case.name, pair, k, x.shape, y.shape)
+        if case.exact:
+            assert np.array_equal(x, y), (case.name, pair, k)
+        else:
+            np.testing.assert_allclose(x, y, atol=case.atol, rtol=0,
+                                       err_msg=f"{case.name}:{pair}:{k}")
+
+
+def run_differential(case: OpCase, dtype: str, batch_dims: int,
+                     rng: np.random.RandomState):
+    """Execute one case through every backend; return the pallas lowering."""
+    prog, shapes = case.build()
+    bufs = make_inputs(case, shapes, dtype, batch_dims, rng)
+    results = {}
+    executors = {b: TMExecutor(backend=b) for b in BACKENDS}
+    for b, ex in executors.items():
+        results[b] = ex(prog, bufs, batch_dims=batch_dims)
+    assert_agree(case, results["reference"], results["fused"], "ref/fused")
+    assert_agree(case, results["reference"], results["pallas"], "ref/pallas")
+    return executors["pallas"].last_lowering

@@ -3,6 +3,8 @@
 import numpy as np
 import pytest
 from fractions import Fraction
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import affine as af

@@ -1,0 +1,123 @@
+"""Differential tests: reference == fused == pallas for every paper operator,
+with pinned lowering paths, across dtypes / batch dims / odd shapes."""
+
+import numpy as np
+import pytest
+
+from tests.harness import ALL_DTYPES, CASES, CASES_BY_NAME, run_differential
+
+IDS = [c.name for c in CASES]
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(1234)
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_backends_agree_f32(case, rng):
+    dtype = "float32" if "float32" in case.dtypes else case.dtypes[-1]
+    report = run_differential(case, dtype, batch_dims=0, rng=rng)
+    assert tuple(report.paths()) == case.expect_paths, report.records
+
+
+@pytest.mark.parametrize("case", CASES, ids=IDS)
+def test_lowering_invariant_across_dtypes(case, rng):
+    """The decode step must depend on the instruction, never the payload
+    dtype: every dtype takes the identical lowering path."""
+    seen = {}
+    for dtype in case.dtypes:
+        report = run_differential(case, dtype, batch_dims=0, rng=rng)
+        seen[dtype] = tuple(report.paths())
+    assert all(p == case.expect_paths for p in seen.values()), seen
+
+
+@pytest.mark.parametrize("case", [c for c in CASES if c.supports_batch],
+                         ids=[c.name for c in CASES if c.supports_batch])
+@pytest.mark.parametrize("batch_dims", [1, 2])
+def test_backends_agree_batched(case, batch_dims, rng):
+    dtype = "float32" if "float32" in case.dtypes else case.dtypes[-1]
+    run_differential(case, dtype, batch_dims=batch_dims, rng=rng)
+
+
+@pytest.mark.parametrize("name", ["transpose", "pixelshuffle", "route"])
+def test_coarse_stays_on_pallas_when_batched(name, rng):
+    """Coarse ops lift over batch axes (identity ⊗ map) instead of falling
+    back: the batched program still runs on the Pallas datapath."""
+    case = CASES_BY_NAME[name]
+    prog, shapes = case.build()
+    from tests.harness import make_inputs
+    from repro.core.executor import TMExecutor
+    bufs = make_inputs(case, shapes, "float32", 1, rng)
+    ex = TMExecutor(backend="pallas")
+    ex(prog, bufs, batch_dims=1)
+    assert all(r.is_pallas for r in ex.last_lowering.records), \
+        ex.last_lowering.records
+
+
+def test_img2col_meta_inconsistent_with_map_falls_back(rng):
+    """The map is ground truth; a lowering hint that does not reconstruct it
+    must be declined (generic gather runs the map) — never silently wrong."""
+    from repro.core import affine as af
+    from repro.core.executor import TMExecutor
+    from repro.core.instr import TMInstr, TMOpcode, TMProgram
+    import jax.numpy as jnp
+
+    m = af.img2col_map((8, 9, 3), 3, 3, 1, 1)
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "y", map_=m,
+                 meta={"img2col": {"kh": 3, "kw": 3, "stride": 2, "pad": 1}})],
+        inputs=("x",), outputs=("y",))  # stride lies: map says 1, meta says 2
+    x = jnp.asarray(rng.rand(8, 9, 3).astype(np.float32))
+    ref = TMExecutor(backend="reference")(prog, {"x": x})["y"]
+    pal = TMExecutor(backend="pallas")
+    got = pal(prog, {"x": x})["y"]
+    assert pal.last_lowering.paths() == ["pallas.gather"]
+    assert np.array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_broadcastable_ew_operand_falls_back(rng):
+    """The kernel epilogue needs y in full output layout; a broadcastable
+    operand (legal on reference/fused via jnp semantics) must fall back,
+    not crash the pallas backend."""
+    from repro.core import affine as af
+    from repro.core.executor import TMExecutor
+    from repro.core.instr import EwOp, TMInstr, TMOpcode, TMProgram
+    import jax.numpy as jnp
+
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x", "b"), "y",
+                 map_=af.identity_map((4, 6, 3)), ew=EwOp.ADD)],
+        inputs=("x", "b"), outputs=("y",))
+    bufs = {"x": jnp.asarray(rng.rand(4, 6, 3).astype(np.float32)),
+            "b": jnp.asarray(rng.rand(1, 1, 3).astype(np.float32))}
+    ref = TMExecutor(backend="reference")(prog, bufs)["y"]
+    pal = TMExecutor(backend="pallas")
+    got = pal(prog, bufs)["y"]
+    assert not pal.last_lowering.records[0].is_pallas
+    assert np.array_equal(np.asarray(ref), np.asarray(got))
+
+
+def test_fallback_reason_reported(rng):
+    """Unlowered instructions carry a reason in the report."""
+    from repro.core.executor import TMExecutor
+    from repro.core.instr import RMEConfig, TMInstr, TMOpcode, TMProgram
+    import jax.numpy as jnp
+
+    prog = TMProgram(
+        [TMInstr(TMOpcode.FINE_EVALUATE, ("p",), "y",
+                 rme=RMEConfig(scheme="evaluate", top_k=4, capacity=8))],
+        inputs=("p",), outputs=("y",))  # top_k: no kernel rule supports it
+    ex = TMExecutor(backend="pallas")
+    ex(prog, {"p": jnp.asarray(rng.rand(16, 5).astype(np.float32))})
+    rec = ex.last_lowering.records[0]
+    assert not rec.is_pallas and rec.reason == "no matching kernel rule"
+
+
+def test_int_dtypes_bit_exact_everywhere(rng):
+    """Integer payloads must be bit-exact on every backend for every case
+    that admits them (gathers move bytes, never arithmetic)."""
+    for case in CASES:
+        for dtype in ("int8", "int32"):
+            if dtype in case.dtypes:
+                run_differential(case, dtype, batch_dims=0, rng=rng)

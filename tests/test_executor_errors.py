@@ -1,0 +1,67 @@
+"""Executor error paths + scatter-vs-gather Route equivalence."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import affine as af
+from repro.core.engine import apply_map, route_gather, scatter_accumulate
+from repro.core.executor import TMExecutor
+from repro.core.instr import TMInstr, TMOpcode, TMProgram
+
+
+def test_missing_output_buffer_raises_keyerror():
+    m = af.transpose_map((4, 6, 8))
+    prog = TMProgram([TMInstr(TMOpcode.COARSE, ("x",), "a", map_=m)],
+                     inputs=("x",), outputs=("never_written",))
+    x = jnp.zeros((4, 6, 8), jnp.float32)
+    with pytest.raises(KeyError, match="never_written"):
+        TMExecutor(backend="reference")(prog, {"x": x})
+
+
+def test_missing_source_buffer_raises_keyerror():
+    m = af.transpose_map((4, 6, 8))
+    prog = TMProgram([TMInstr(TMOpcode.COARSE, ("ghost",), "y", map_=m)],
+                     inputs=("x",), outputs=("y",))
+    with pytest.raises(KeyError):
+        TMExecutor(backend="reference")(prog, {"x": jnp.zeros((4, 6, 8))})
+
+
+def test_unknown_opcode_raises_valueerror():
+    """An opcode outside the enum (e.g. from a newer encoding) must fail
+    loudly, not silently produce garbage."""
+    ins = TMInstr("bogus_opcode", ("x",), "y")  # bypasses enum on purpose
+    prog = TMProgram([ins], inputs=("x",), outputs=("y",))
+    with pytest.raises(ValueError, match="unknown opcode"):
+        TMExecutor(backend="reference")(prog, {"x": jnp.zeros((4,))})
+
+
+def test_unknown_backend_rejected_at_construction():
+    with pytest.raises(ValueError, match="unknown backend"):
+        TMExecutor(backend="cuda")
+
+
+@pytest.mark.parametrize("batch_dims", [1, 2])
+def test_scatter_accumulate_matches_gather_route_batched(rng, batch_dims):
+    """Paper's scatter formulation == our gather formulation for Route, with
+    leading batch axes (the form the executor actually runs)."""
+    shapes = [(4, 6, 2), (4, 6, 3)]
+    maps = af.route_maps(shapes)
+    batch = tuple(range(2, 2 + batch_dims))
+    xs = [jnp.asarray(rng.rand(*batch, *s).astype(np.float32)) for s in shapes]
+
+    got_gather = route_gather(maps, xs, batch_dims=batch_dims)
+
+    # scatter form: each source writes its band through the band-extraction
+    # map's input coordinates (the paper's scatter-side address generator)
+    out = jnp.zeros(batch + (4, 6, 5), jnp.float32)
+    off = 0
+    for x, s in zip(xs, shapes):
+        extract = af.strided_slice_map((4, 6, 5), (0, 0, off), (1, 1, 1),
+                                       (4, 6, s[2]))
+        out = scatter_accumulate(extract, x, out, batch_dims=batch_dims)
+        off += s[2]
+    assert np.array_equal(np.asarray(got_gather), np.asarray(out))
+
+    want = jnp.concatenate(xs, axis=-1)
+    assert np.array_equal(np.asarray(got_gather), np.asarray(want))

@@ -1,0 +1,91 @@
+"""TMProgram.encode/decode round-trips over every opcode and config field."""
+
+import pytest
+
+from repro.core import affine as af
+from repro.core.instr import EwOp, RMEConfig, TMInstr, TMOpcode, TMProgram
+
+
+def _roundtrip(prog: TMProgram) -> TMProgram:
+    back = TMProgram.decode(prog.encode())
+    assert back.encode() == prog.encode()
+    return back
+
+
+INSTRS = {
+    "coarse_map": TMInstr(TMOpcode.COARSE, ("x",), "y",
+                          map_=af.transpose_map((4, 6, 8))),
+    "coarse_maps_route": TMInstr(
+        TMOpcode.COARSE, ("a", "b"), "y",
+        maps=tuple(af.route_maps([(4, 6, 2), (4, 6, 3)]))),
+    "coarse_ew_epilogue": TMInstr(
+        TMOpcode.COARSE, ("x", "r"), "y",
+        map_=af.identity_map((4, 6, 8)), ew=EwOp.MAX),
+    "coarse_splits_bounds": TMInstr(
+        TMOpcode.COARSE, ("x",), "y",
+        map_=af.rearrange_map((6, 8, 3), 4, 16)),
+    "coarse_meta": TMInstr(
+        TMOpcode.COARSE, ("x",), "y",
+        map_=af.img2col_map((8, 9, 3), 3, 3, 1, 1),
+        meta={"img2col": {"kh": 3, "kw": 3, "stride": 1, "pad": 1}}),
+    "fine_asm_lane_mask": TMInstr(
+        TMOpcode.FINE_ASSEMBLE, ("x",), "y",
+        rme=RMEConfig(scheme="assemble", lane_mask=(1, 0, 1, 1, 0))),
+    "fine_asm_runtime": TMInstr(
+        TMOpcode.FINE_ASSEMBLE, ("x", "m"), "y",
+        rme=RMEConfig(scheme="assemble", capacity=16)),
+    "fine_eval_threshold": TMInstr(
+        TMOpcode.FINE_EVALUATE, ("x",), "y",
+        rme=RMEConfig(scheme="evaluate", threshold=0.25, cmp="lt",
+                      score_index=3, capacity=32)),
+    "fine_eval_topk": TMInstr(
+        TMOpcode.FINE_EVALUATE, ("x",), "y",
+        rme=RMEConfig(scheme="evaluate", top_k=4, capacity=8, score_index=1)),
+    "elementwise": TMInstr(TMOpcode.ELEMENTWISE, ("a", "b"), "y", ew=EwOp.SUB),
+    "copy": TMInstr(TMOpcode.COPY, ("x",), "y"),
+    "resize": TMInstr(TMOpcode.RESIZE, ("x",), "y",
+                      meta={"out_h": 16, "out_w": 24}),
+}
+
+
+def test_every_opcode_covered():
+    assert {i.opcode for i in INSTRS.values()} == set(TMOpcode)
+
+
+@pytest.mark.parametrize("name", sorted(INSTRS), ids=sorted(INSTRS))
+def test_instr_roundtrip_identity(name):
+    """decode(encode(i)) reproduces the instruction *as a value* — frozen
+    dataclass equality, not just re-encoded string equality."""
+    ins = INSTRS[name]
+    prog = TMProgram([ins], inputs=tuple(ins.srcs), outputs=(ins.dst,))
+    back = _roundtrip(prog)
+    assert back.instrs[0] == ins
+    assert back.inputs == prog.inputs and back.outputs == prog.outputs
+
+
+def test_full_program_roundtrip():
+    prog = TMProgram(list(INSTRS.values()),
+                     inputs=("x", "a", "b", "m", "r"), outputs=("y",))
+    back = _roundtrip(prog)
+    assert back.instrs == prog.instrs
+
+
+def test_rme_lane_mask_type_survives():
+    """JSON turns tuples into lists; decode must restore the tuple so the
+    frozen config stays hashable and equality holds."""
+    cfg = RMEConfig(scheme="assemble", lane_mask=(1, 0, 1))
+    assert RMEConfig.decode(cfg.encode()) == cfg
+    assert isinstance(RMEConfig.decode(cfg.encode()).lane_mask, tuple)
+
+
+def test_decoded_program_executes():
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.core.executor import TMExecutor
+
+    prog = TMProgram([INSTRS["coarse_map"]], inputs=("x",), outputs=("y",))
+    back = TMProgram.decode(prog.encode())
+    x = jnp.asarray(np.random.RandomState(0).rand(4, 6, 8).astype(np.float32))
+    a = TMExecutor(backend="reference")(prog, {"x": x})["y"]
+    b = TMExecutor(backend="reference")(back, {"x": x})["y"]
+    assert np.array_equal(np.asarray(a), np.asarray(b))

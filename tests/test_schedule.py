@@ -1,0 +1,158 @@
+"""Pipeline scheduler: segmentation, cycle model, forwarding legality."""
+
+import pytest
+
+from repro.core import affine as af
+from repro.core.fusion import forwarding_edges
+from repro.core.instr import EwOp, RMEConfig, TMInstr, TMOpcode, TMProgram
+from repro.core.schedule import CycleParams, infer_shapes, schedule
+
+
+def _chain3():
+    m1 = af.transpose_map((64, 64, 32))
+    m2 = af.pixel_shuffle_map((64, 64, 32), 2)
+    m3 = af.transpose_map((128, 128, 8))
+    return TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "a", map_=m1),
+         TMInstr(TMOpcode.COARSE, ("a",), "b", map_=m2),
+         TMInstr(TMOpcode.COARSE, ("b",), "y", map_=m3)],
+        inputs=("x",), outputs=("y",))
+
+
+def test_pipelined_strictly_below_unpipelined():
+    """Acceptance: for a >=3-instruction program the pipelined schedule beats
+    the serialized one — double buffering alone, and more with forwarding."""
+    rep = schedule(_chain3(), {"x": (64, 64, 32)})
+    assert rep.pipelined_cycles < rep.unpipelined_cycles
+    assert rep.forwarded_cycles < rep.pipelined_cycles
+    assert rep.pipeline_speedup > 1.0
+
+
+def test_forwarding_edges_single_consumer_only():
+    m = af.transpose_map((8, 8, 4))
+    mt = af.transpose_map((8, 8, 4))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "a", map_=m),
+         TMInstr(TMOpcode.COARSE, ("a",), "b", map_=mt),
+         TMInstr(TMOpcode.COARSE, ("a", "b"), "y",
+                 map_=af.identity_map((8, 8, 4)), ew=EwOp.ADD)],
+        inputs=("x",), outputs=("y",))
+    edges = forwarding_edges(prog)
+    # "a" has two consumers -> not forwardable; "b" has one -> forwardable
+    assert [(e.producer, e.consumer, e.buffer) for e in edges] == [(1, 2, "b")]
+
+
+def test_forwarding_edges_skip_stale_writer():
+    """When a buffer is rebound before its consumer, only the live (last)
+    write may forward — an edge from the overwritten producer is illegal."""
+    m = af.transpose_map((8, 8, 4))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "t", map_=m),
+         TMInstr(TMOpcode.COARSE, ("x",), "t", map_=m),
+         TMInstr(TMOpcode.COARSE, ("t",), "y", map_=af.transpose_map((8, 8, 4)))],
+        inputs=("x",), outputs=("y",))
+    edges = forwarding_edges(prog)
+    assert [(e.producer, e.consumer) for e in edges] == [(1, 2)]
+
+
+def test_forwarding_never_beats_critical_path():
+    """A forwarded consumer still cannot finish before the producer's last
+    segment has arrived: forwarded >= producer pipelined time."""
+    rep = schedule(_chain3(), {"x": (64, 64, 32)})
+    t0 = rep.timings[0]
+    assert rep.forwarded_cycles >= t0.pipelined_cycles
+
+
+def test_independent_instructions_get_no_free_parallelism():
+    """With no forwarding edges the simulated schedule must equal the
+    double-buffered serial one — a single TM engine issues in order, so
+    'forwarding speedup' can never come from plain instruction parallelism."""
+    m = af.transpose_map((64, 64, 32))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "a", map_=m),
+         TMInstr(TMOpcode.COARSE, ("x",), "b", map_=m)],
+        inputs=("x",), outputs=("a", "b"))
+    rep = schedule(prog, {"x": (64, 64, 32)})
+    assert rep.forwards == []
+    assert rep.forwarded_cycles == rep.pipelined_cycles
+
+
+def test_rebound_buffer_dependency_honoured():
+    """A consumer of a buffer that a *later* instruction rebinds must still
+    wait for the earlier producer (most-recent-write-before semantics)."""
+    m = af.transpose_map((64, 64, 32))
+    mt = af.transpose_map((64, 64, 32))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "t", map_=m),
+         TMInstr(TMOpcode.COARSE, ("t",), "u", map_=mt),
+         TMInstr(TMOpcode.COARSE, ("x",), "t", map_=m)],
+        inputs=("x",), outputs=("u", "t"))
+    rep = schedule(prog, {"x": (64, 64, 32)})
+    # t and u are outputs -> no forwarding edges -> fully serial schedule
+    assert rep.forwards == []
+    assert rep.forwarded_cycles == rep.pipelined_cycles
+
+
+def test_single_segment_degenerates_to_serial():
+    """Tensors smaller than one segment get no double-buffering win."""
+    m = af.transpose_map((4, 4, 2))
+    prog = TMProgram([TMInstr(TMOpcode.COARSE, ("x",), "y", map_=m)],
+                     inputs=("x",), outputs=("y",))
+    rep = schedule(prog, {"x": (4, 4, 2)})
+    assert rep.timings[0].n_segments == 1
+    assert rep.pipelined_cycles == rep.unpipelined_cycles
+
+
+def test_segment_count_scales_with_params():
+    prog = _chain3()
+    small = schedule(prog, {"x": (64, 64, 32)},
+                     CycleParams(segment_bytes=4096))
+    large = schedule(prog, {"x": (64, 64, 32)},
+                     CycleParams(segment_bytes=65536))
+    assert small.timings[0].n_segments > large.timings[0].n_segments
+    # finer segmentation -> earlier first commit -> better forwarding overlap
+    assert small.pipeline_speedup > large.pipeline_speedup
+
+
+def test_infer_shapes_all_opcodes():
+    maps = tuple(af.route_maps([(4, 4, 2), (4, 4, 2)]))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("a", "b"), "cat", maps=maps),
+         TMInstr(TMOpcode.COPY, ("cat",), "c"),
+         TMInstr(TMOpcode.ELEMENTWISE, ("c", "c"), "e", ew=EwOp.ADD),
+         TMInstr(TMOpcode.RESIZE, ("e",), "r", meta={"out_h": 8, "out_w": 8}),
+         TMInstr(TMOpcode.FINE_ASSEMBLE, ("flat", "mask"), "as",
+                 rme=RMEConfig(scheme="assemble", capacity=6)),
+         TMInstr(TMOpcode.FINE_EVALUATE, ("flat",), "ev",
+                 rme=RMEConfig(scheme="evaluate", threshold=0.5, capacity=3))],
+        inputs=("a", "b", "flat", "mask"), outputs=("r", "as", "ev"))
+    shapes = infer_shapes(prog, {"a": (4, 4, 2), "b": (4, 4, 2),
+                                 "flat": (16, 5), "mask": (16,)})
+    assert shapes["cat"] == (4, 4, 4)
+    assert shapes["c"] == (4, 4, 4)
+    assert shapes["e"] == (4, 4, 4)
+    assert shapes["r"] == (8, 8, 4)
+    assert shapes["as"] == (6, 5)
+    assert shapes["ev"] == (3, 5)
+
+
+def test_infer_shapes_undeclared_buffer_raises():
+    m = af.transpose_map((4, 4, 2))
+    prog = TMProgram([TMInstr(TMOpcode.COARSE, ("ghost",), "y", map_=m)],
+                     inputs=("x",), outputs=("y",))
+    with pytest.raises(KeyError):
+        infer_shapes(prog, {"x": (4, 4, 2)})
+
+
+def test_active_stages():
+    m = af.identity_map((4, 4, 2))
+    coarse_ew = TMInstr(TMOpcode.COARSE, ("x", "y"), "z", map_=m, ew=EwOp.ADD)
+    assert "coarse" in coarse_ew.active_stages()
+    assert "elementwise" in coarse_ew.active_stages()
+    fine = TMInstr(TMOpcode.FINE_EVALUATE, ("x",), "z",
+                   rme=RMEConfig(scheme="evaluate", threshold=0.0, capacity=4))
+    assert "fine" in fine.active_stages()
+    assert "coarse" not in fine.active_stages()
+    route = TMInstr(TMOpcode.COARSE, ("a", "b"), "z",
+                    maps=tuple(af.route_maps([(4, 4, 2), (4, 4, 2)])))
+    assert "branch" in route.active_stages()
