@@ -1,0 +1,105 @@
+"""Compiler end-to-end benchmark — the perf trajectory of tm_compile.
+
+Compiles the demo programs (models.cnn.superres_tail / espcn / yolo_neck /
+detect_tail) and records, per program:
+
+  * trace stats (TM instrs, TPU nodes, matched primitives)
+  * pass stats (map compositions, epilogue sinks, copies elided, RME
+    legalizations)
+  * the scheduled cycle model: unpipelined vs double-buffered vs
+    partitioned+forwarded, and the end-to-end latency reduction
+  * scratch allocation (allocated vs naive bytes)
+  * wall time of one pallas-backend execution (interpret mode — a smoke
+    number, not a TPU measurement)
+
+Emits ``BENCH_compiler_e2e.json`` in the working directory so CI archives
+one point of the trajectory per commit.
+
+    PYTHONPATH=src python benchmarks/compiler_e2e.py
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.compiler import tm_compile
+from repro.models import cnn
+
+
+def _demos(rng):
+    x = jnp.asarray(rng.rand(2, 32, 32, 32).astype(np.float32))
+    skip = jnp.asarray(rng.rand(2, 64, 64, 8).astype(np.float32))
+    yield "superres_tail", cnn.superres_tail, (x, skip)
+
+    p = cnn.init_espcn(jax.random.PRNGKey(0), s=2)
+    img = jnp.asarray(rng.rand(2, 24, 24, 3).astype(np.float32))
+    yield "espcn", (lambda a: cnn.espcn(p, a)), (img,)
+
+    u = jnp.asarray(rng.rand(2, 16, 16, 32).astype(np.float32))
+    sk = jnp.asarray(rng.rand(2, 32, 32, 16).astype(np.float32))
+    yield "yolo_neck", cnn.yolo_neck, (u, sk)
+
+    pred = jnp.asarray(rng.rand(4, 1024, 85).astype(np.float32) * 100)
+    yield "detect_tail", (lambda q: cnn.detect_tail(q, 50.0, 128)), (pred,)
+
+
+def run() -> list[dict]:
+    rng = np.random.RandomState(0)
+    rows = []
+    for name, fn, args in _demos(rng):
+        compiled = tm_compile(fn, *args)
+        ref = fn(*args)
+        t0 = time.perf_counter()
+        got = compiled(*args, backend="pallas")
+        wall = time.perf_counter() - t0
+        exact = bool(np.array_equal(
+            np.asarray(ref, dtype=np.float64),
+            np.asarray(got, dtype=np.float64)))
+        pr = compiled.partition_report
+        rows.append({
+            "program": name,
+            "tm_instrs": sum(len(p.instrs) for p in compiled.tm_programs),
+            "tpu_nodes": len(compiled.graph.tpu_nodes()),
+            "matched_prims": sorted(compiled.matched_prims),
+            "compositions": compiled.pass_report.compositions,
+            "epilogues_sunk": compiled.pass_report.epilogues_sunk,
+            "copies_elided": compiled.pass_report.copies_elided,
+            "rme_legalized": compiled.pass_report.rme_legalized,
+            "unpipelined_cycles": pr.unpipelined_cycles,
+            "double_buffered_cycles": pr.pipelined_cycles,
+            "forwarded_cycles": pr.forwarded_cycles,
+            "forwarding_edges": pr.forwarding_edges,
+            "latency_reduction": pr.latency_reduction,
+            "scratch_bytes": compiled.scratch_plan.total_bytes,
+            "scratch_naive_bytes": compiled.scratch_plan.naive_bytes,
+            "pallas_exact": exact,
+            "pallas_wall_s": wall,
+        })
+    return rows
+
+
+def main() -> list[dict]:
+    rows = run()
+    print("# compiler_e2e (tm_compile: unpipelined vs partitioned+forwarded)")
+    print(f"{'program':16s}{'tm':>4s}{'tpu':>5s}{'fuse':>6s}{'sink':>6s}"
+          f"{'unpiped':>12s}{'fwded':>12s}{'e2e_red':>9s}{'exact':>7s}")
+    for r in rows:
+        print(f"{r['program']:16s}{r['tm_instrs']:>4d}{r['tpu_nodes']:>5d}"
+              f"{r['compositions']:>6d}{r['epilogues_sunk']:>6d}"
+              f"{r['unpipelined_cycles']:>12.0f}{r['forwarded_cycles']:>12.0f}"
+              f"{r['latency_reduction']:>9.2%}{str(r['pallas_exact']):>7s}")
+    with open("BENCH_compiler_e2e.json", "w") as f:
+        json.dump({"benchmark": "compiler_e2e", "rows": rows}, f, indent=2)
+    print("\nwrote BENCH_compiler_e2e.json")
+    if not all(r["pallas_exact"] for r in rows):
+        raise SystemExit("compiled pallas outputs diverged from reference")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

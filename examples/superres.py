@@ -1,10 +1,13 @@
 """Super-resolution (the paper's flagship application, EDSR/ESPCN) with the
-two TMU system-level tricks made visible:
+TMU system-level tricks made visible:
 
   * near-memory fusion — the whole network in one jit vs per-op execution;
   * output forwarding — the final projection's PixelShuffle applied at
     matmul tile-commit time by the Pallas ``matmul_tm`` kernel (paper
-    Fig. 5c), validated against the unfused reference.
+    Fig. 5c), validated against the unfused reference;
+  * the compiler — ``tm_compile`` lowers the plain-jax tail into a
+    scheduled TMProgram (map-composition fusion + epilogue sinking +
+    output forwarding), printing the pass pipeline it ran.
 
     PYTHONPATH=src python examples/superres.py
 """
@@ -15,6 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.compiler import tm_compile
 from repro.kernels.matmul_tm import (matmul_pixel_shuffle_call,
                                      matmul_pixel_shuffle_ref)
 from repro.models import cnn
@@ -43,6 +47,22 @@ def main():
     assert np.allclose(np.asarray(y_fwd), np.asarray(y_ref), atol=1e-4)
     print(f"output forwarding: matmul -> ({H*s}, {W*s}, {C}) image written "
           f"directly at tile commit (0 extra HBM round-trips), matches ref")
+
+    # -- the compiler: plain jax -> scheduled TMProgram -----------------
+    print("\n== tm_compile(superres_tail) ==")
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.rand(2, 32, 32, 32).astype(np.float32))
+    skip = jnp.asarray(rng.rand(2, 64, 64, 8).astype(np.float32))
+    compiled = tm_compile(cnn.superres_tail, x, skip)
+    print(compiled.report())
+    ref = cnn.superres_tail(x, skip)
+    for backend in ("reference", "fused", "pallas"):
+        got = compiled(x, skip, backend=backend)
+        assert np.array_equal(np.asarray(got), np.asarray(ref)), backend
+    pr = compiled.partition_report
+    print(f"compiled tail bit-exact on all 3 backends; cycle model "
+          f"{pr.unpipelined_cycles:.0f} -> {pr.forwarded_cycles:.0f} "
+          f"({pr.latency_reduction:.1%} e2e latency reduction)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,15 @@
+"""repro.compiler — jaxpr -> TM IR -> optimization passes -> scheduled TMProgram.
+
+The lowering pipeline that turns a plain JAX function into the paper's
+system-level execution form: tensor-manipulation work on the TMU datapath,
+compute on the TPU, forwarded edges overlapping the two.
+
+    from repro.compiler import tm_compile
+    compiled = tm_compile(fn, *example_args)
+    y = compiled(*args, backend="pallas")
+    print(compiled.report())
+"""
+
+from repro.compiler.api import CompiledTMProgram, tm_compile
+
+__all__ = ["CompiledTMProgram", "tm_compile"]

@@ -1,0 +1,117 @@
+"""``tm_compile`` — trace a JAX function into an optimized, scheduled program.
+
+    compiled = tm_compile(fn, *example_args)
+    y = compiled(*args)                      # bit-exact vs fn(*args)
+    y = compiled(*args, backend="pallas")    # TM phases on the Pallas kernels
+    print(compiled.report())                 # trace/pass/partition/scratch
+
+The compiled object executes the partitioned graph phase by phase: opaque
+TPU nodes re-bind their jaxpr equations (XLA's job), TMU phases run through
+the :class:`~repro.core.executor.TMExecutor` on any of the three backends —
+so one compilation is differential-testable across reference / fused /
+pallas exactly like a hand-written :class:`~repro.core.instr.TMProgram`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from repro.core.executor import TMExecutor
+from repro.core.dispatch import LoweringReport
+from repro.core.instr import TMProgram
+from repro.core.schedule import CycleParams
+from repro.core.tm_primitive import tag_tm_ops
+from repro.compiler.allocate import ScratchPlan, allocate
+from repro.compiler.ir import TMGraph, eval_tpu_node
+from repro.compiler.partition import PartitionReport, partition
+from repro.compiler.passes import PassReport, run_pipeline
+from repro.compiler.trace import graph_from_jaxpr
+
+
+@dataclasses.dataclass
+class CompiledTMProgram:
+    """A traced, optimized, partitioned and scheduled program."""
+
+    graph: TMGraph
+    pass_report: PassReport
+    partition_report: PartitionReport
+    scratch_plan: ScratchPlan
+    in_tree: Any
+    out_tree: Any
+    last_lowering: list[LoweringReport] = dataclasses.field(
+        default_factory=list)
+
+    # --- introspection ----------------------------------------------------
+    @property
+    def tm_programs(self) -> list[TMProgram]:
+        return [p.program for p in self.partition_report.tmu_phases]
+
+    @property
+    def matched_prims(self) -> set[str]:
+        return set(self.graph.matched_prims)
+
+    def report(self) -> str:
+        return "\n".join([
+            self.graph.summary(),
+            self.pass_report.summary(),
+            self.partition_report.summary(),
+            self.scratch_plan.summary(),
+        ])
+
+    # --- execution --------------------------------------------------------
+    def __call__(self, *args, backend: str = "fused",
+                 interpret: bool = True):
+        flat, tree = jax.tree_util.tree_flatten(args)
+        if tree != self.in_tree:
+            raise TypeError(f"argument structure {tree} does not match the "
+                            f"compiled structure {self.in_tree}")
+        if len(flat) != len(self.graph.inputs):
+            raise TypeError(f"expected {len(self.graph.inputs)} input "
+                            f"array(s), got {len(flat)}")
+        env: dict[str, Any] = dict(self.graph.consts)
+        for name, val in zip(self.graph.inputs, flat):
+            val = jax.numpy.asarray(val)
+            want = self.graph.buffers[name]
+            if tuple(val.shape) != want.shape or val.dtype != want.dtype:
+                raise TypeError(
+                    f"input {name!r}: {val.dtype}{tuple(val.shape)} does "
+                    f"not match compiled {want.dtype}{want.shape}; "
+                    f"recompile with tm_compile for new shapes/dtypes")
+            env[name] = val
+        self.last_lowering = []
+        for phase in self.partition_report.phases:
+            if phase.kind == "tpu":
+                for i in phase.node_indices:
+                    eval_tpu_node(self.graph.nodes[i], env)
+            else:
+                ex = TMExecutor(backend=backend, interpret=interpret)
+                bufs = {n: env[n] for n in phase.program.inputs}
+                env.update(ex(phase.program, bufs))
+                self.last_lowering.append(ex.last_lowering)
+        outs = [env[o] for o in self.graph.outputs]
+        return jax.tree_util.tree_unflatten(self.out_tree, outs)
+
+
+def tm_compile(fn, *example_args,
+               params: CycleParams | None = None) -> CompiledTMProgram:
+    """Trace ``fn`` at ``example_args`` and lower it through the pipeline:
+
+    jaxpr -> TM IR (trace) -> passes (map composition, copy elim, epilogue
+    sink, RME legalization) -> TPU/TMU partition + pipeline schedule ->
+    scratch allocation.
+    """
+    flat_in, in_tree = jax.tree_util.tree_flatten(example_args)
+    with tag_tm_ops():
+        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
+            *example_args)
+    out_tree = jax.tree_util.tree_structure(out_shape)
+    graph = graph_from_jaxpr(closed)
+    pass_report = run_pipeline(graph)
+    part = partition(graph, params)
+    scratch = allocate(graph, part, params)
+    return CompiledTMProgram(graph=graph, pass_report=pass_report,
+                             partition_report=part, scratch_plan=scratch,
+                             in_tree=in_tree, out_tree=out_tree)

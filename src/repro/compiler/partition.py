@@ -1,0 +1,101 @@
+"""TPU/TMU partitioning + schedule hookup.
+
+Splits the optimized :class:`~repro.compiler.ir.TMGraph` into *phases* —
+maximal runs of same-kind nodes in program order.  Each TMU phase becomes a
+:class:`~repro.core.instr.TMProgram` and is handed to the pipeline scheduler
+(:func:`repro.core.schedule.schedule`) together with the forwarding edges
+found by :func:`repro.core.fusion.forwarding_edges`, so the cycle model
+reports the paper's three-way comparison (serialized / double-buffered /
+output-forwarded) for the whole compiled program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.instr import TMProgram
+from repro.core.schedule import CycleParams, ScheduleReport, schedule
+from repro.compiler.ir import TMGraph
+
+
+@dataclasses.dataclass
+class Phase:
+    kind: str                      # "tpu" | "tmu"
+    node_indices: list[int]        # indices into graph.nodes
+    program: TMProgram | None = None       # tmu phases only
+    schedule: ScheduleReport | None = None  # tmu phases only
+
+
+@dataclasses.dataclass
+class PartitionReport:
+    phases: list[Phase]
+    unpipelined_cycles: float   # all TM work strictly serialized
+    pipelined_cycles: float     # double buffering within instructions
+    forwarded_cycles: float     # + output forwarding along streamable edges
+    forwarding_edges: int
+
+    @property
+    def tmu_phases(self) -> list[Phase]:
+        return [p for p in self.phases if p.kind == "tmu"]
+
+    @property
+    def latency_reduction(self) -> float:
+        if self.unpipelined_cycles == 0:
+            return 0.0
+        return 1.0 - self.forwarded_cycles / self.unpipelined_cycles
+
+    def summary(self) -> str:
+        kinds = "".join("T" if p.kind == "tpu" else "M" for p in self.phases)
+        return (f"phases [{kinds}] (T=TPU, M=TMU): "
+                f"{self.unpipelined_cycles:.0f} unpipelined -> "
+                f"{self.forwarded_cycles:.0f} forwarded TM cycles "
+                f"({self.latency_reduction:.1%} reduction, "
+                f"{self.forwarding_edges} forwarded edge(s))")
+
+
+def _phase_program(graph: TMGraph, indices: list[int]) -> TMProgram:
+    """Build the TMProgram of one TMU phase.
+
+    Inputs are buffers the phase reads but does not define; outputs are
+    buffers defined in the phase and read downstream (or graph outputs)."""
+    instrs = [graph.nodes[i].instr for i in indices]
+    defined = {ins.dst for ins in instrs}
+    reads: list[str] = []
+    for ins in instrs:
+        for s in ins.srcs:
+            if s not in defined and s not in reads:
+                reads.append(s)
+    last = max(indices)
+    outs = []
+    for ins in instrs:
+        used_later = any(ins.dst in graph.nodes[k].srcs
+                         for k in range(last + 1, len(graph.nodes)))
+        if (ins.dst in graph.outputs or used_later) and ins.dst not in outs:
+            outs.append(ins.dst)
+    return TMProgram(instrs, inputs=tuple(reads), outputs=tuple(outs))
+
+
+def partition(graph: TMGraph,
+              params: CycleParams | None = None) -> PartitionReport:
+    phases: list[Phase] = []
+    for i, node in enumerate(graph.nodes):
+        if phases and phases[-1].kind == node.kind:
+            phases[-1].node_indices.append(i)
+        else:
+            phases.append(Phase(kind=node.kind, node_indices=[i]))
+
+    unpiped = piped = fwded = 0.0
+    n_edges = 0
+    for ph in phases:
+        if ph.kind != "tmu":
+            continue
+        ph.program = _phase_program(graph, ph.node_indices)
+        shapes = {name: graph.shape(name) for name in ph.program.inputs}
+        ph.schedule = schedule(ph.program, shapes, params)
+        unpiped += ph.schedule.unpipelined_cycles
+        piped += ph.schedule.pipelined_cycles
+        fwded += ph.schedule.forwarded_cycles
+        n_edges += len(ph.schedule.forwards)
+    return PartitionReport(phases=phases, unpipelined_cycles=unpiped,
+                           pipelined_cycles=piped, forwarded_cycles=fwded,
+                           forwarding_edges=n_edges)

@@ -11,8 +11,12 @@ Public surface:
   tm_ops    — functional per-operator API
   fusion    — near-memory copy elision by map composition + forwarding edges
   forwarding— output forwarding (TM in producer epilogues)
+  tm_primitive — jaxpr tagging primitives (the compiler's trace hooks)
+
+The compiler built on top of this layer lives in :mod:`repro.compiler`
+(jaxpr -> TM IR -> passes -> partition/schedule -> ``tm_compile``).
 """
 
 from repro.core import (affine, dispatch, engine, fusion, instr, rme,  # noqa: F401
-                        schedule, tm_ops)
+                        schedule, tm_ops, tm_primitive)
 from repro.core.executor import TMExecutor  # noqa: F401

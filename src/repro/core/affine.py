@@ -558,6 +558,146 @@ def strided_slice_map(in_shape: tuple[int, ...], starts: Sequence[int],
     )
 
 
+def axis_permutation_map(in_shape: tuple[int, ...],
+                         perm: Sequence[int]) -> MixedRadixMap:
+    """lax.transpose as a coarse map: out axis ``i`` carries in axis ``perm[i]``."""
+    inv = [0] * len(perm)
+    for i, p in enumerate(perm):
+        inv[p] = i
+    return MixedRadixMap(
+        out_shape=tuple(in_shape[p] for p in perm), in_shape=tuple(in_shape),
+        splits=(), affine=AffineMap.permutation(inv),
+    )
+
+
+def flip_map(in_shape: tuple[int, ...], axes: Sequence[int]) -> MixedRadixMap:
+    """lax.rev: in[d] = (size_d - 1) - out[d] on flipped axes (Rot90's core)."""
+    n = len(in_shape)
+    axes = set(axes)
+    A = [[Frac(1 if i == j and i not in axes else
+               -1 if i == j else 0) for j in range(n)] for i in range(n)]
+    b = [Frac(in_shape[i] - 1) if i in axes else Frac(0) for i in range(n)]
+    return MixedRadixMap(
+        out_shape=tuple(in_shape), in_shape=tuple(in_shape), splits=(),
+        affine=AffineMap(tuple(tuple(r) for r in A), tuple(b)),
+    )
+
+
+def pad_map(in_shape: tuple[int, ...], lo: Sequence[int], hi: Sequence[int],
+            fill: float = 0.0) -> MixedRadixMap:
+    """lax.pad (no interior dilation): in = out - lo, OOB reads ``fill``.
+
+    Negative lo/hi (cropping) stay exact — they only shift the window."""
+    n = len(in_shape)
+    out_shape = tuple(s + l + h for s, l, h in zip(in_shape, lo, hi))
+    A = [[Frac(1 if i == j else 0) for j in range(n)] for i in range(n)]
+    b = [Frac(-l) for l in lo]
+    return MixedRadixMap(
+        out_shape=out_shape, in_shape=tuple(in_shape), splits=(),
+        affine=AffineMap(tuple(tuple(r) for r in A), tuple(b)), fill=fill,
+        oob_possible=any(l > 0 or h > 0 for l, h in zip(lo, hi)),
+    )
+
+
+def concat_maps(shapes: Sequence[tuple[int, ...]],
+                axis: int) -> list[MixedRadixMap]:
+    """lax.concatenate along any axis: one band map per input (generalizes
+    :func:`route_maps`, which is the channel-axis special case)."""
+    n = len(shapes[0])
+    total = sum(s[axis] for s in shapes)
+    out_shape = tuple(total if d == axis else shapes[0][d] for d in range(n))
+    maps, off = [], 0
+    for shp in shapes:
+        A = [[Frac(1 if i == j else 0) for j in range(n)] for i in range(n)]
+        b = [Frac(-off) if i == axis else Frac(0) for i in range(n)]
+        maps.append(MixedRadixMap(
+            out_shape=out_shape, in_shape=tuple(shp), splits=(),
+            affine=AffineMap(tuple(tuple(r) for r in A), tuple(b)),
+            oob_possible=True,  # out-of-band coords belong to other inputs
+        ))
+        off += shp[axis]
+    return maps
+
+
+def broadcast_map(in_shape: tuple[int, ...], out_shape: tuple[int, ...],
+                  bcast_dims: Sequence[int]) -> MixedRadixMap:
+    """lax.broadcast_in_dim as a fan-out gather: in[i] = out[bcast_dims[i]],
+    or the constant 0 where a size-1 input axis is stretched."""
+    n_in, n_out = len(in_shape), len(out_shape)
+    A = [[Frac(0)] * n_out for _ in range(n_in)]
+    for i, d in enumerate(bcast_dims):
+        if in_shape[i] == out_shape[d]:
+            A[i][d] = Frac(1)
+        # stretched (in size 1): row stays zero -> in coord 0 for every out
+    return MixedRadixMap(
+        out_shape=tuple(out_shape), in_shape=tuple(in_shape), splits=(),
+        affine=AffineMap(tuple(tuple(r) for r in A),
+                         tuple(Frac(0) for _ in range(n_in))),
+    )
+
+
+def reshape_map(in_shape: tuple[int, ...],
+                out_shape: tuple[int, ...]) -> MixedRadixMap | None:
+    """Row-major reshape as a mixed-radix map, when exactly representable.
+
+    Both shapes are refined to their *common factorization* (the merge of the
+    two suffix-product boundary sets).  Each output dim then splits into its
+    refined digits (radix registers) and each input coordinate is an integer
+    combination of digits (the (A, B) registers) — e.g. the reshape halves of
+    PixelShuffle/PixelUnshuffle fall out of this construction.  Returns None
+    when the boundary sets don't nest (a genuinely interleaving reshape, e.g.
+    (6, 4) -> (8, 3)), which a TMU would also split into two instructions.
+    """
+    import math
+    total = math.prod(in_shape)
+    if total != math.prod(out_shape) or total == 0 or not in_shape or not out_shape:
+        return None
+
+    def suffixes(shape):
+        out, acc = [], 1
+        for s in reversed(shape):
+            out.append(acc)
+            acc *= s
+        return list(reversed(out))  # suffixes[i] = prod(shape[i+1:])
+
+    in_suf, out_suf = suffixes(in_shape), suffixes(out_shape)
+    bounds = sorted(set(in_suf) | set(out_suf) | {1, total}, reverse=True)
+    radii = []
+    for a, b in zip(bounds, bounds[1:]):
+        if a % b:
+            return None  # boundaries don't nest: not mixed-radix representable
+        radii.append(a // b)
+    # refined factor k spans flat sizes (bounds[k], bounds[k+1]]
+    def run_of(left, right):  # dim spans [left, right) boundary values
+        return [k for k in range(len(radii))
+                if bounds[k] <= left and bounds[k + 1] >= right]
+
+    splits: list[DigitSplit] = []
+    digit_of: dict[int, int] = {}  # refined factor -> digit index
+    n_out = len(out_shape)
+    for j, (size, suf) in enumerate(zip(out_shape, out_suf)):
+        run = run_of(size * suf, suf)
+        if not run:
+            continue  # size-1 dim: its digit is unused
+        digit_of[run[0]] = j  # most-significant factor = final quotient
+        for k in reversed(run[1:]):  # least-significant remainder first
+            digit_of[k] = n_out + len(splits)
+            splits.append(DigitSplit(j, radii[k]))
+    n_dig = n_out + len(splits)
+    A = [[Frac(0)] * n_dig for _ in range(len(in_shape))]
+    for i, (size, suf) in enumerate(zip(in_shape, in_suf)):
+        stride = 1
+        for k in reversed(run_of(size * suf, suf)):
+            A[i][digit_of[k]] = Frac(stride)
+            stride *= radii[k]
+    return MixedRadixMap(
+        out_shape=tuple(out_shape), in_shape=tuple(in_shape),
+        splits=tuple(splits),
+        affine=AffineMap(tuple(tuple(r) for r in A),
+                         tuple(Frac(0) for _ in range(len(in_shape)))),
+    )
+
+
 def identity_map(shape: tuple[int, ...]) -> MixedRadixMap:
     n = len(shape)
     return MixedRadixMap(
@@ -654,10 +794,12 @@ def compose_maps(outer: MixedRadixMap, inner: MixedRadixMap) -> MixedRadixMap | 
             )
     if inner.splits == () and inner.affine.is_integral() and outer.affine.is_integral():
         # inner is a pure integral affine map: compose under outer's splits.
+        # outer.oob_possible is guarded False above, so the only live fill
+        # register is the inner one (e.g. pad's constant).
         aff = inner.affine.compose(outer.affine)
         return MixedRadixMap(
             out_shape=outer.out_shape, in_shape=inner.in_shape,
-            splits=outer.splits, affine=aff, fill=outer.fill,
+            splits=outer.splits, affine=aff, fill=inner.fill,
             oob_possible=inner.oob_possible or outer.oob_possible,
         )
     return None

@@ -33,6 +33,11 @@ class Lowering:
     path: str        # e.g. "pallas.block", "pallas.gather+ew", "reference.coarse"
     kernel: str = ""  # registry rule that claimed the instruction ("" = fallback)
     reason: str = ""  # why the fallback was taken ("" when a kernel ran)
+    segments: int | None = None  # kernel grid size (block iterations), when
+    #                              the rule reports it — equals the cycle
+    #                              model's count via schedule.map_segments /
+    #                              instr_segments (pass batch_shape for
+    #                              executor-level batch lifts)
 
     @property
     def is_pallas(self) -> bool:
@@ -75,17 +80,21 @@ class KernelRule:
     matches: Callable[[TMInstr, Sequence[jnp.ndarray], int], str | None]
     run: Callable[[TMInstr, Sequence[jnp.ndarray], int, bool], jnp.ndarray]
     priority: int = 0
+    # optional: report the grid size (block iterations) the kernel will run,
+    # so the lowering report can be checked against the schedule's cycle model
+    segments: Callable[[TMInstr, Sequence[jnp.ndarray], int], int] | None = None
 
 
 _RULES: list[KernelRule] = []
 _REGISTERED = False
 
 
-def register_rule(name: str, matches, run, priority: int = 0) -> None:
+def register_rule(name: str, matches, run, priority: int = 0,
+                  segments=None) -> None:
     """Register a kernel rule (called by kernel packages at import time)."""
     global _RULES
     _RULES = [r for r in _RULES if r.name != name]  # idempotent re-import
-    _RULES.append(KernelRule(name, matches, run, priority))
+    _RULES.append(KernelRule(name, matches, run, priority, segments))
     _RULES.sort(key=lambda r: -r.priority)
 
 
@@ -118,6 +127,8 @@ def lower_instr(ins: TMInstr, srcs: Sequence[jnp.ndarray], batch_dims: int,
         path = rule.matches(ins, srcs, batch_dims)
         if path is not None:
             val = rule.run(ins, srcs, batch_dims, interpret)
+            seg = (rule.segments(ins, srcs, batch_dims)
+                   if rule.segments is not None else None)
             return val, Lowering(dst=ins.dst, opcode=ins.opcode.value,
-                                 path=path, kernel=rule.name)
+                                 path=path, kernel=rule.name, segments=seg)
     return None

@@ -32,6 +32,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import rme
@@ -71,6 +72,12 @@ class TMExecutor:
         return {o: bufs[o] for o in prog.outputs}
 
     def _dispatch(self, ins: TMInstr, bufs: dict, batch_dims: int) -> jnp.ndarray:
+        # compiled programs pin per-instruction batch dims (the RME
+        # legalization pass); an executor-level batch lift composes on top
+        # (the caller's leading axes come before the instruction's own)
+        if ins.meta and "batch_dims" in ins.meta and ins.opcode in (
+                TMOpcode.FINE_ASSEMBLE, TMOpcode.FINE_EVALUATE):
+            batch_dims = batch_dims + ins.meta["batch_dims"]
         if self.backend == "pallas":
             srcs = [bufs[s] for s in ins.srcs]  # Tensor Load
             lowered = lower_instr(ins, srcs, batch_dims, self.interpret)
@@ -117,15 +124,24 @@ class TMExecutor:
             cfg = ins.rme
             if cfg.lane_mask is not None:
                 return rme.assemble_static(srcs[0], jnp.asarray(cfg.lane_mask, bool))
-            packed, _ = rme.assemble(srcs[0], srcs[1].astype(bool), cfg.capacity)
-            return packed
+            fn = lambda x, m: rme.assemble(x, m.astype(bool), cfg.capacity)[0]
+            return _vmap_leading(fn, batch_dims)(srcs[0], srcs[1])
         if ins.opcode == TMOpcode.FINE_EVALUATE:
             cfg = ins.rme
             if cfg.top_k is not None:
-                rows, _ = rme.evaluate_topk(srcs[0], cfg.top_k, cfg.capacity,
-                                            cfg.score_index)
-                return rows
-            rows, _, _ = rme.evaluate(srcs[0], cfg.threshold, cfg.capacity,
-                                      cmp=cfg.cmp, score_index=cfg.score_index)
-            return rows
+                fn = lambda x: rme.evaluate_topk(x, cfg.top_k, cfg.capacity,
+                                                 cfg.score_index)[0]
+            else:
+                fn = lambda x: rme.evaluate(x, cfg.threshold, cfg.capacity,
+                                            cmp=cfg.cmp,
+                                            score_index=cfg.score_index)[0]
+            return _vmap_leading(fn, batch_dims)(srcs[0])
         raise ValueError(f"unknown opcode {ins.opcode}")
+
+
+def _vmap_leading(fn: Callable, batch_dims: int) -> Callable:
+    """vmap ``fn`` over ``batch_dims`` leading axes of every argument — the
+    reference engine's batch lift for the fine-grained (RME) stage."""
+    for _ in range(batch_dims):
+        fn = jax.vmap(fn)
+    return fn

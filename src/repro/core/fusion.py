@@ -103,6 +103,11 @@ def fuse(prog: TMProgram, itemsize: int = 4) -> tuple[TMProgram, FusionReport]:
                 continue
             if producer.map_ is None:  # multi-map Route: not chain-fusable
                 continue
+            if producer.ew is not None:
+                # the epilogue operand is consumed in the producer's output
+                # layout; composing the consumer's map over it would need the
+                # operand re-mapped too — two instructions stay two
+                continue
             dst = producer.dst
             if dst in prog.outputs or dst in prog.inputs:
                 continue

@@ -27,6 +27,7 @@ executes; the constants are calibratable, the *ratios* are the deliverable
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 from repro.core.fusion import ForwardEdge, forwarding_edges
@@ -36,7 +37,13 @@ from repro.core.instr import TMInstr, TMOpcode, TMProgram
 @dataclasses.dataclass(frozen=True)
 class CycleParams:
     """Cycle-model constants (defaults loosely follow the paper's 40nm TMU:
-    a 128-bit AXI port and a 16-lane manipulation datapath)."""
+    a 128-bit AXI port and a 16-lane manipulation datapath).
+
+    ``segment_bytes`` is the shared ping-pong budget: at its *default* value
+    the Pallas kernels size their grids from the same plan, so model segment
+    counts equal kernel grids (``Lowering.segments``).  A custom value is a
+    what-if knob for the model only — the kernels keep launching at the
+    default until dispatch grows a params path (ROADMAP)."""
 
     bandwidth_bytes: float = 16.0   # bytes moved per cycle per direction
     lanes: float = 16.0             # elements manipulated per cycle
@@ -130,17 +137,116 @@ def _out_shape(ins: TMInstr, shapes: dict) -> tuple[int, ...]:
         return shapes[ins.srcs[0]]
     if ins.opcode == TMOpcode.RESIZE:
         src = shapes[ins.srcs[0]]
-        return (ins.meta["out_h"], ins.meta["out_w"]) + tuple(src[2:])
+        return tuple(src[:-3]) + (ins.meta["out_h"], ins.meta["out_w"], src[-1])
+    bd = (ins.meta or {}).get("batch_dims", 0)
     if ins.opcode == TMOpcode.FINE_ASSEMBLE:
         src = shapes[ins.srcs[0]]
         if ins.rme.lane_mask is not None:
             return tuple(src[:-1]) + (sum(1 for v in ins.rme.lane_mask if v),)
-        return (ins.rme.capacity,) + tuple(src[1:])
+        return tuple(src[:bd]) + (ins.rme.capacity,) + tuple(src[bd + 1:])
     if ins.opcode == TMOpcode.FINE_EVALUATE:
         src = shapes[ins.srcs[0]]
         cap = ins.rme.capacity if ins.rme.capacity is not None else ins.rme.top_k
-        return (cap,) + tuple(src[1:])
+        return tuple(src[:bd]) + (cap,) + tuple(src[bd + 1:])
     raise ValueError(f"unknown opcode {ins.opcode}")
+
+
+# ---------------------------------------------------------------------------
+# segmentation — the single source of truth shared with the Pallas kernels
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    """Row-wise segmentation of an output tensor (the block-iteration plan).
+
+    The tensor is viewed as (rows, minor) with ``minor`` the last axis; one
+    segment is ``row_block`` whole rows, sized to fit one ping-pong buffer
+    (``segment_bytes``).  ``row_block`` always divides ``rows``."""
+
+    rows: int
+    minor: int
+    row_block: int
+
+    @property
+    def n_segments(self) -> int:
+        return self.rows // self.row_block
+
+
+def plan_segments(out_shape: tuple[int, ...], itemsize: int = 4,
+                  segment_bytes: int | None = None) -> SegmentPlan:
+    """Segment an output tensor into block iterations.
+
+    This is THE segmentation: the cycle model charges per-segment stage
+    cycles from it, and the Pallas gather kernel sizes its grid with it
+    (:mod:`repro.kernels.tm_affine`), so the model's block counts and the
+    kernels' grids cannot drift apart."""
+    sb = segment_bytes if segment_bytes is not None else CycleParams().segment_bytes
+    minor = out_shape[-1] if out_shape else 1
+    rows = math.prod(out_shape[:-1]) if len(out_shape) > 1 else 1
+    per_row = max(1, minor * itemsize)
+    target = max(1, sb // per_row)
+    rb = min(target, rows)
+    while rows % rb:
+        rb -= 1
+    return SegmentPlan(rows=rows, minor=minor, row_block=rb)
+
+
+def instr_segments(ins: TMInstr, out_shape: tuple[int, ...],
+                   itemsize: int = 4,
+                   segment_bytes: int | None = None,
+                   batch_shape: tuple[int, ...] = ()) -> int:
+    """Number of block iterations one instruction executes.
+
+    COARSE instructions consult the Pallas kernel's own decode
+    (:func:`map_segments`: block-mode grids, else the row plan); multi-band
+    Route sums per-band launches; FINE (RME) instructions run one compaction
+    grid step per record stream (their ``meta['batch_dims']`` or
+    ``batch_shape``); everything else segments row-wise.
+
+    ``batch_shape`` models an *executor-level* batch lift (the
+    ``TMExecutor(..., batch_dims=k)`` call path): coarse maps are lifted
+    exactly like the kernel lifts them.  The schedule pass itself models the
+    program at its own rank (compiled programs carry batch axes inside their
+    maps), so it passes ``batch_shape=()``."""
+    sb = segment_bytes if segment_bytes is not None else CycleParams().segment_bytes
+    if ins.opcode == TMOpcode.COARSE and ins.maps is not None:
+        # multi-band Route: one kernel launch per band, each covering the
+        # full output (bands sum over disjoint supports) — segments add up
+        return sum(map_segments(m, itemsize, sb, batch_shape)
+                   for m in ins.maps)
+    if ins.opcode == TMOpcode.COARSE and ins.map_ is not None:
+        return map_segments(ins.map_, itemsize, sb, batch_shape)
+    if ins.opcode in (TMOpcode.FINE_ASSEMBLE, TMOpcode.FINE_EVALUATE):
+        # one compaction pass per record stream, batched or not
+        bd = (ins.meta or {}).get("batch_dims", 0)
+        return max(1, math.prod(batch_shape) * math.prod(out_shape[:bd]))
+    return plan_segments(batch_shape + tuple(out_shape), itemsize, sb).n_segments
+
+
+def map_segments(m, itemsize: int = 4, segment_bytes: int | None = None,
+                 batch_shape: tuple[int, ...] = ()) -> int:
+    """Grid size the tm_affine kernel launches for one map — THE shared
+    count: the kernel rules report it (``Lowering.segments``) and the cycle
+    model charges per-segment stage cycles from it.
+
+    The kernels always launch at the *default* segment budget; passing a
+    custom ``segment_bytes`` here (or custom :class:`CycleParams` to
+    :func:`schedule`) is a what-if model, not a kernel re-configuration."""
+    sb = segment_bytes if segment_bytes is not None else CycleParams().segment_bytes
+    return _map_segments_cached(m, itemsize, sb, tuple(batch_shape))
+
+
+@functools.lru_cache(maxsize=1024)
+def _map_segments_cached(m, itemsize: int, segment_bytes: int,
+                         batch_shape: tuple[int, ...]) -> int:
+    if batch_shape:
+        from repro.core.affine import batch_extend_map
+        m = batch_extend_map(m, batch_shape)
+    from repro.kernels.tm_affine.tm_affine import analyze_block_mode
+    plan = analyze_block_mode(m, segment_bytes=segment_bytes)
+    if plan is not None:
+        return math.prod(plan.grid)
+    return plan_segments(m.out_shape, itemsize, segment_bytes).n_segments
 
 
 # ---------------------------------------------------------------------------
@@ -151,7 +257,7 @@ def _timing(i: int, ins: TMInstr, shapes: dict, p: CycleParams) -> InstrTiming:
     in_elems = sum(math.prod(shapes[s]) for s in ins.srcs)
     out_elems = math.prod(shapes[ins.dst])
     out_bytes = out_elems * p.itemsize
-    n_seg = max(1, math.ceil(out_bytes / p.segment_bytes))
+    n_seg = instr_segments(ins, shapes[ins.dst], p.itemsize, p.segment_bytes)
     # the datapath touches every input and output element once; stage cycles
     # are charged only when the instruction drives that stage (paper Fig. 3)
     active = ins.active_stages()

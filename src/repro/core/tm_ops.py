@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core import affine as af
 from repro.core import rme
+from repro.core import tm_primitive
 from repro.core.engine import apply_map, route_gather
 
 
@@ -28,42 +29,50 @@ def _bd(x: jnp.ndarray, core_ndim: int) -> int:
     return x.ndim - core_ndim
 
 
+def _run_map(m: af.MixedRadixMap, x: jnp.ndarray, b: int) -> jnp.ndarray:
+    """Execute a coarse map — or, under :func:`tag_tm_ops`, leave a tagged
+    ``tm_map`` eqn in the jaxpr for the compiler to pattern-match."""
+    if tm_primitive.tagging():
+        return tm_primitive.bind_map(m, x, batch_dims=b)
+    return apply_map(m, x, batch_dims=b)
+
+
 # -- coarse-grained ---------------------------------------------------------
 
 def transpose(x: jnp.ndarray) -> jnp.ndarray:
     """(…, H, W, C) -> (…, W, H, C) — paper Transpose."""
     b = _bd(x, 3)
-    return apply_map(af.transpose_map(x.shape[b:]), x, batch_dims=b)
+    return _run_map(af.transpose_map(x.shape[b:]), x, b)
 
 
 def rot90(x: jnp.ndarray) -> jnp.ndarray:
     """90° CCW rotation of the spatial dims — paper Rot90."""
     b = _bd(x, 3)
-    return apply_map(af.rot90_map(x.shape[b:]), x, batch_dims=b)
+    return _run_map(af.rot90_map(x.shape[b:]), x, b)
 
 
 def pixel_shuffle(x: jnp.ndarray, s: int) -> jnp.ndarray:
     """(…, H, W, C·s²) -> (…, H·s, W·s, C) — paper PixelShuffle."""
     b = _bd(x, 3)
-    return apply_map(af.pixel_shuffle_map(x.shape[b:], s), x, batch_dims=b)
+    return _run_map(af.pixel_shuffle_map(x.shape[b:], s), x, b)
 
 
 def pixel_unshuffle(x: jnp.ndarray, s: int) -> jnp.ndarray:
     """(…, H·s, W·s, C) -> (…, H, W, C·s²) — paper PixelUnshuffle."""
     b = _bd(x, 3)
-    return apply_map(af.pixel_unshuffle_map(x.shape[b:], s), x, batch_dims=b)
+    return _run_map(af.pixel_unshuffle_map(x.shape[b:], s), x, b)
 
 
 def upsample(x: jnp.ndarray, s: int) -> jnp.ndarray:
     """Nearest-neighbour ×s upsample — paper Upsample."""
     b = _bd(x, 3)
-    return apply_map(af.upsample_map(x.shape[b:], s), x, batch_dims=b)
+    return _run_map(af.upsample_map(x.shape[b:], s), x, b)
 
 
 def split(x: jnp.ndarray, n: int) -> list[jnp.ndarray]:
     """Channel split into ``n`` equal parts — paper Split."""
     b = _bd(x, 3)
-    return [apply_map(af.split_map(x.shape[b:], n, p), x, batch_dims=b)
+    return [_run_map(af.split_map(x.shape[b:], n, p), x, b)
             for p in range(n)]
 
 
@@ -72,6 +81,8 @@ def route(xs: Sequence[jnp.ndarray]) -> jnp.ndarray:
     source; bands are summed (disjoint supports)."""
     b = _bd(xs[0], 3)
     maps = af.route_maps([x.shape[b:] for x in xs])
+    if tm_primitive.tagging():
+        return tm_primitive.bind_route(maps, xs, batch_dims=b)
     return route_gather(maps, xs, batch_dims=b)
 
 
@@ -84,34 +95,20 @@ def img2col(x: jnp.ndarray, kh: int, kw: int, stride: int = 1,
             pad: int = 0) -> jnp.ndarray:
     """(…, H, W, C) -> (…, OH·OW, KH·KW·C) patch matrix — paper Img2col."""
     b = _bd(x, 3)
-    return apply_map(af.img2col_map(x.shape[b:], kh, kw, stride, pad), x,
-                     batch_dims=b)
+    return _run_map(af.img2col_map(x.shape[b:], kh, kw, stride, pad), x, b)
 
 
 def rearrange(x: jnp.ndarray, group: int, pad_c: int) -> jnp.ndarray:
     """RGB-stream -> burst-friendly high-channel fmap — paper Rearrange."""
     b = _bd(x, 3)
-    return apply_map(af.rearrange_map(x.shape[b:], group, pad_c), x,
-                     batch_dims=b)
+    return _run_map(af.rearrange_map(x.shape[b:], group, pad_c), x, b)
 
 
 # -- generic sequence-model manipulations (same datapath) -------------------
 
 def permute(x: jnp.ndarray, perm: Sequence[int]) -> jnp.ndarray:
     """Arbitrary axis permutation as a coarse TM op (head-layout transposes)."""
-    m = af.MixedRadixMap(
-        out_shape=tuple(x.shape[p] for p in perm), in_shape=x.shape,
-        splits=(),
-        affine=af.AffineMap.permutation(_inv_perm(perm)),
-    )
-    return apply_map(m, x)
-
-
-def _inv_perm(perm: Sequence[int]) -> list[int]:
-    inv = [0] * len(perm)
-    for i, p in enumerate(perm):
-        inv[p] = i
-    return inv
+    return _run_map(af.axis_permutation_map(x.shape, perm), x, 0)
 
 
 def repeat_heads(x: jnp.ndarray, rep: int, axis: int) -> jnp.ndarray:
@@ -133,7 +130,7 @@ def repeat_heads(x: jnp.ndarray, rep: int, axis: int) -> jnp.ndarray:
         affine=af.AffineMap(tuple(tuple(r) for r in A),
                             tuple(af.Frac(0) for _ in range(n))),
     )
-    return apply_map(m, x)
+    return _run_map(m, x, 0)
 
 
 # -- fine-grained ------------------------------------------------------------
@@ -145,6 +142,12 @@ def resize_bilinear(x: jnp.ndarray, out_h: int, out_w: int) -> jnp.ndarray:
     each an affine gather (the RME's assemble of neighbouring bytes); the
     weights are the fractional parts — computed in one vector pass.
     """
+    if tm_primitive.tagging():
+        return tm_primitive.tm_resize_p.bind(x, out_h=out_h, out_w=out_w)
+    return _resize_bilinear_impl(x, out_h, out_w)
+
+
+def _resize_bilinear_impl(x: jnp.ndarray, out_h: int, out_w: int) -> jnp.ndarray:
     b = _bd(x, 3)
     H, W, C = x.shape[b:]
     ys = (jnp.arange(out_h, dtype=jnp.float32) + 0.5) * (H / out_h) - 0.5
@@ -178,6 +181,30 @@ def bboxcal(pred: jnp.ndarray, conf_threshold: float, capacity: int,
     """
     return rme.evaluate(pred, conf_threshold, capacity, cmp="ge",
                         score_index=score_index)
+
+
+def bboxcal_rows(pred: jnp.ndarray, conf_threshold: float, capacity: int,
+                 score_index: int = 4, cmp: str = "ge") -> jnp.ndarray:
+    """Bboxcal, rows-only form with leading batch axes.
+
+    ``pred``: (…, N, D) record streams; returns (…, capacity, D) packed
+    survivors per stream.  This is the form the compiler traces (one buffer
+    in, one buffer out — a FINE_EVALUATE instruction) and the batched RME
+    Pallas kernel executes.
+    """
+    if tm_primitive.tagging():
+        return tm_primitive.tm_evaluate_p.bind(
+            pred, threshold=float(conf_threshold), capacity=capacity,
+            cmp=cmp, score_index=score_index)
+    return _bboxcal_rows_impl(pred, conf_threshold, capacity, cmp, score_index)
+
+
+def _bboxcal_rows_impl(pred, threshold, capacity, cmp, score_index):
+    fn = lambda r: rme.evaluate(r, threshold, capacity, cmp=cmp,
+                                score_index=score_index)[0]
+    for _ in range(pred.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(pred)
 
 
 def nms(boxes: jnp.ndarray, scores: jnp.ndarray, iou_threshold: float,

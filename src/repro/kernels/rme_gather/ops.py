@@ -1,12 +1,14 @@
 """Jit'd wrappers for the RME compaction kernels + dispatch registration."""
 
+import math
 from functools import partial
 
 import jax
 
 from repro.core.dispatch import register_rule
 from repro.core.instr import TMOpcode
-from repro.kernels.rme_gather.rme_gather import assemble, evaluate
+from repro.kernels.rme_gather.rme_gather import (assemble, assemble_batched,
+                                                 evaluate, evaluate_batched)
 
 
 @partial(jax.jit, static_argnames=("capacity", "cmp", "score_index", "interpret"))
@@ -21,49 +23,91 @@ def assemble_call(x, mask, *, capacity, interpret=True):
     return assemble(x, mask, capacity, interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("capacity", "cmp", "score_index", "interpret"))
+def evaluate_batched_call(x, threshold, *, capacity, cmp="ge", score_index=0,
+                          interpret=True):
+    """(…, N, D) record streams: leading axes flatten onto the kernel grid."""
+    batch = x.shape[:-2]
+    rows, idx, cnt = evaluate_batched(
+        x.reshape((-1,) + x.shape[-2:]), threshold, capacity, cmp=cmp,
+        score_index=score_index, interpret=interpret)
+    return (rows.reshape(batch + rows.shape[1:]),
+            idx.reshape(batch + idx.shape[1:]),
+            cnt.reshape(batch))
+
+
+@partial(jax.jit, static_argnames=("capacity", "interpret"))
+def assemble_batched_call(x, mask, *, capacity, interpret=True):
+    batch = x.shape[:-2]
+    packed, cnt = assemble_batched(
+        x.reshape((-1,) + x.shape[-2:]), mask.reshape((-1,) + mask.shape[-1:]),
+        capacity, interpret=interpret)
+    return packed.reshape(batch + packed.shape[1:]), cnt.reshape(batch)
+
+
 # ---------------------------------------------------------------------------
 # dispatch-registry rules: FINE instructions whose RME config the sort-based
-# compaction kernel supports (runtime predicate/mask, static capacity, 2-D
-# record stream).  Static lane masks and top-k fall back to the engine.
+# compaction kernel supports (runtime predicate/mask, static capacity, record
+# streams with any number of leading batch axes — the batched kernels lift
+# the compaction grid over them).  Static lane masks and top-k fall back.
 # ---------------------------------------------------------------------------
 
 def _evaluate_matches(ins, srcs, batch_dims):
-    if ins.opcode != TMOpcode.FINE_EVALUATE or batch_dims != 0:
+    if ins.opcode != TMOpcode.FINE_EVALUATE:
         return None
     cfg = ins.rme
     if cfg.top_k is not None or cfg.capacity is None or cfg.threshold is None:
         return None
-    if len(srcs) != 1 or srcs[0].ndim != 2:
+    if len(srcs) != 1 or srcs[0].ndim != batch_dims + 2:
         return None
     return "pallas.rme.evaluate"
 
 
 def _evaluate_run(ins, srcs, batch_dims, interpret):
-    rows, _, _ = evaluate_call(srcs[0], ins.rme.threshold,
-                               capacity=ins.rme.capacity, cmp=ins.rme.cmp,
-                               score_index=ins.rme.score_index,
-                               interpret=interpret)
+    if batch_dims == 0:
+        rows, _, _ = evaluate_call(srcs[0], ins.rme.threshold,
+                                   capacity=ins.rme.capacity, cmp=ins.rme.cmp,
+                                   score_index=ins.rme.score_index,
+                                   interpret=interpret)
+        return rows
+    rows, _, _ = evaluate_batched_call(
+        srcs[0], ins.rme.threshold, capacity=ins.rme.capacity,
+        cmp=ins.rme.cmp, score_index=ins.rme.score_index, interpret=interpret)
     return rows
 
 
 def _assemble_matches(ins, srcs, batch_dims):
-    if ins.opcode != TMOpcode.FINE_ASSEMBLE or batch_dims != 0:
+    if ins.opcode != TMOpcode.FINE_ASSEMBLE:
         return None
     cfg = ins.rme
     if cfg.lane_mask is not None or cfg.capacity is None:
         return None
-    if len(srcs) != 2 or srcs[0].ndim != 2 or srcs[1].ndim != 1:
+    if len(srcs) != 2 or srcs[0].ndim != batch_dims + 2 \
+            or srcs[1].ndim != batch_dims + 1:
+        return None
+    if srcs[0].shape[:-1] != srcs[1].shape:
         return None
     return "pallas.rme.assemble"
 
 
 def _assemble_run(ins, srcs, batch_dims, interpret):
-    packed, _ = assemble_call(srcs[0], srcs[1],
-                              capacity=ins.rme.capacity, interpret=interpret)
+    if batch_dims == 0:
+        packed, _ = assemble_call(srcs[0], srcs[1],
+                                  capacity=ins.rme.capacity,
+                                  interpret=interpret)
+        return packed
+    packed, _ = assemble_batched_call(srcs[0], srcs[1],
+                                      capacity=ins.rme.capacity,
+                                      interpret=interpret)
     return packed
 
 
+def _rme_segments(ins, srcs, batch_dims):
+    # one grid step per record stream (the batched kernels' grid)
+    return max(1, math.prod(srcs[0].shape[:batch_dims]))
+
+
 register_rule("rme_gather.evaluate", _evaluate_matches, _evaluate_run,
-              priority=10)
+              priority=10, segments=_rme_segments)
 register_rule("rme_gather.assemble", _assemble_matches, _assemble_run,
-              priority=10)
+              priority=10, segments=_rme_segments)

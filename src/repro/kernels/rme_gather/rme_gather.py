@@ -22,8 +22,10 @@ def _evaluate_kernel(x_ref, thr_ref, o_ref, idx_ref, cnt_ref, *,
                      cmp: str, score_index: int, capacity: int):
     x = x_ref[...]                       # (N, D)
     n = x.shape[0]
-    scores = x[:, score_index]
     thr = thr_ref[0]
+    # compare at the promoted dtype (matches rme.evaluate's weak-typed
+    # python-float threshold: int records compare in float, not truncated)
+    scores = x[:, score_index].astype(thr.dtype)
     mask = {
         "ge": scores >= thr, "gt": scores > thr,
         "le": scores <= thr, "lt": scores < thr,
@@ -45,7 +47,7 @@ def evaluate(x: jnp.ndarray, threshold, capacity: int, *, cmp: str = "ge",
     N, D = x.shape
     kern = functools.partial(_evaluate_kernel, cmp=cmp,
                              score_index=score_index, capacity=capacity)
-    thr = jnp.asarray([threshold], dtype=x.dtype)
+    thr = jnp.asarray([threshold], dtype=jnp.result_type(x.dtype, threshold))
     return pl.pallas_call(
         kern,
         grid=(1,),
@@ -65,6 +67,60 @@ def evaluate(x: jnp.ndarray, threshold, capacity: int, *, cmp: str = "ge",
     )(x, thr)
 
 
+def _evaluate_batched_kernel(x_ref, thr_ref, o_ref, idx_ref, cnt_ref, *,
+                             cmp: str, score_index: int, capacity: int):
+    # one grid step = one record stream of the batch (block (1, N, D))
+    x = x_ref[0]
+    n = x.shape[0]
+    thr = thr_ref[0]
+    scores = x[:, score_index].astype(thr.dtype)  # promoted compare (see
+    #                                               _evaluate_kernel)
+    mask = {
+        "ge": scores >= thr, "gt": scores > thr,
+        "le": scores <= thr, "lt": scores < thr,
+    }[cmp]
+    order = jnp.argsort(jnp.where(mask, 0, 1), stable=True).astype(jnp.int32)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    take = order[:capacity]
+    rows = jnp.take(x, take, axis=0)
+    live = (jnp.arange(capacity) < cnt)
+    o_ref[0] = jnp.where(live[:, None], rows, jnp.zeros_like(rows))
+    idx_ref[0] = jnp.where(live, take, n).astype(jnp.int32)
+    cnt_ref[...] = jnp.minimum(cnt, capacity).reshape(1, 1)
+
+
+def evaluate_batched(x: jnp.ndarray, threshold, capacity: int, *,
+                     cmp: str = "ge", score_index: int = 0,
+                     interpret: bool = True):
+    """Batched evaluate: (B, N, D) -> (B, capacity, D) + idx + counts.
+
+    The compaction grid is lifted over the leading axis — one grid step per
+    record stream, each an independent sort-based compaction (the paper's
+    RME run once per stream, exactly like the unbatched kernel B times but
+    in one launch)."""
+    B, N, D = x.shape
+    kern = functools.partial(_evaluate_batched_kernel, cmp=cmp,
+                             score_index=score_index, capacity=capacity)
+    thr = jnp.asarray([threshold], dtype=jnp.result_type(x.dtype, threshold))
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, N, D), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1,), lambda b: (0,))],
+        out_specs=[
+            pl.BlockSpec((1, capacity, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, capacity), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, capacity, D), x.dtype),
+            jax.ShapeDtypeStruct((B, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, thr)
+
+
 def _assemble_kernel(x_ref, mask_ref, o_ref, cnt_ref, *, capacity: int):
     x = x_ref[...]
     mask = mask_ref[...] != 0
@@ -74,6 +130,40 @@ def _assemble_kernel(x_ref, mask_ref, o_ref, cnt_ref, *, capacity: int):
     live = (jnp.arange(capacity) < cnt)
     o_ref[...] = jnp.where(live[:, None], rows, jnp.zeros_like(rows))
     cnt_ref[...] = jnp.minimum(cnt, capacity).reshape(1)
+
+
+def _assemble_batched_kernel(x_ref, mask_ref, o_ref, cnt_ref, *,
+                             capacity: int):
+    x = x_ref[0]
+    mask = mask_ref[0] != 0
+    order = jnp.argsort(jnp.where(mask, 0, 1), stable=True).astype(jnp.int32)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    rows = jnp.take(x, order[:capacity], axis=0)
+    live = (jnp.arange(capacity) < cnt)
+    o_ref[0] = jnp.where(live[:, None], rows, jnp.zeros_like(rows))
+    cnt_ref[...] = jnp.minimum(cnt, capacity).reshape(1, 1)
+
+
+def assemble_batched(x: jnp.ndarray, mask: jnp.ndarray, capacity: int, *,
+                     interpret: bool = True):
+    """Batched assemble: (B, N, D) + (B, N) mask -> (B, capacity, D) + counts."""
+    B, N, D = x.shape
+    kern = functools.partial(_assemble_batched_kernel, capacity=capacity)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, N, D), lambda b: (b, 0, 0)),
+                  pl.BlockSpec((1, N), lambda b: (b, 0))],
+        out_specs=[
+            pl.BlockSpec((1, capacity, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, capacity, D), x.dtype),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, mask.astype(jnp.int32))
 
 
 def assemble(x: jnp.ndarray, mask: jnp.ndarray, capacity: int, *,

@@ -11,6 +11,7 @@ from repro.core.affine import MixedRadixMap, batch_extend_map
 from repro.core.dispatch import register_rule
 from repro.core.engine import EW_FNS
 from repro.core.instr import TMOpcode
+from repro.core.schedule import map_segments
 from repro.kernels.tm_affine.tm_affine import analyze_block_mode, tm_affine
 
 
@@ -80,6 +81,12 @@ def _coarse_run(ins, srcs, batch_dims, interpret):
     return tm_affine_call(srcs[0], m, interpret=interpret)
 
 
+def _coarse_segments(ins, srcs, batch_dims):
+    # the map is already batch-lifted, so this is exactly the grid the
+    # kernel launches — and exactly schedule's shared count (one source)
+    return map_segments(_lifted(ins, srcs, batch_dims))
+
+
 def _route_matches(ins, srcs, batch_dims):
     if ins.opcode != TMOpcode.COARSE or ins.maps is None:
         return None
@@ -105,5 +112,12 @@ def _route_run(ins, srcs, batch_dims, interpret):
     return out
 
 
-register_rule("tm_affine.route", _route_matches, _route_run, priority=10)
-register_rule("tm_affine", _coarse_matches, _coarse_run, priority=0)
+def _route_segments(ins, srcs, batch_dims):
+    batch = srcs[0].shape[:batch_dims]
+    return sum(map_segments(_lift_cached(m, batch)) for m in ins.maps)
+
+
+register_rule("tm_affine.route", _route_matches, _route_run, priority=10,
+              segments=_route_segments)
+register_rule("tm_affine", _coarse_matches, _coarse_run, priority=0,
+              segments=_coarse_segments)

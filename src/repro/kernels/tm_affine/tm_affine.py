@@ -32,6 +32,7 @@ from jax.experimental import pallas as pl
 
 from repro.core.affine import MixedRadixMap
 from repro.core.engine import gather_indices
+from repro.core.schedule import CycleParams, plan_segments
 
 
 # ---------------------------------------------------------------------------
@@ -57,8 +58,13 @@ class BlockPlan:
 
 
 def analyze_block_mode(m: MixedRadixMap,
-                       block: tuple[int, ...] | None = None) -> BlockPlan | None:
-    """Return a BlockPlan if the map is a signed permutation w/ liftable offsets."""
+                       block: tuple[int, ...] | None = None,
+                       segment_bytes: int | None = None) -> BlockPlan | None:
+    """Return a BlockPlan if the map is a signed permutation w/ liftable offsets.
+
+    ``segment_bytes`` bounds the block (one ping-pong buffer) — the same
+    constant the cycle model segments with (:class:`CycleParams`), so the
+    kernel grid and the schedule's block-iteration count agree."""
     if m.splits or m.digit_bounds or m.oob_possible:
         return None  # block mode has no validity mask: OOB fill needs gather
     n_out, n_in = len(m.out_shape), len(m.in_shape)
@@ -84,7 +90,7 @@ def analyze_block_mode(m: MixedRadixMap,
         sign[out_ax] = s
         offset[out_ax] = off
     if block is None:
-        block = _default_block(m.out_shape)
+        block = _default_block(m.out_shape, segment_bytes)
     grid = []
     for d, (size, bs) in enumerate(zip(m.out_shape, block)):
         if size % bs:
@@ -105,24 +111,45 @@ def analyze_block_mode(m: MixedRadixMap,
                      tuple(block), tuple(grid), tuple(src_axis))
 
 
-def _default_block(shape: tuple[int, ...]) -> tuple[int, ...]:
-    """(…, 8·k, 128·m)-aligned blocks, capped so the block fits VMEM."""
+def _default_block(shape: tuple[int, ...],
+                   segment_bytes: int | None = None) -> tuple[int, ...]:
+    """(…, 8·k, 128·m)-aligned blocks sized to one ping-pong segment.
+
+    The budget is ``CycleParams.segment_bytes`` — the block IS the schedule
+    pass's block iteration, so grid size == the cycle model's segment count.
+    Minor/sublane dims first, then leading dims grow greedily (largest
+    divisor that still fits), so small tensors collapse to a single block."""
+    budget = segment_bytes if segment_bytes is not None \
+        else CycleParams().segment_bytes
+    itemsize = 4
     blk = list(shape)
     if len(shape) >= 1:
         blk[-1] = min(shape[-1], 128) if shape[-1] % 128 == 0 or shape[-1] < 128 \
             else math.gcd(shape[-1], 128)
     if len(shape) >= 2:
-        target = 256
-        b = math.gcd(shape[-2], target)
-        blk[-2] = b if b > 0 else shape[-2]
-    # clamp leading dims to 1-block granularity while VMEM budget exceeded
-    itemsize = 4
-    budget = 4 * 1024 * 1024  # 4 MB per buffer => double buffering fits VMEM
+        blk[-2] = math.gcd(shape[-2], 256)
+        # gcd with 256 is a power of two: halving keeps it a divisor
+        while math.prod(blk[-2:]) * itemsize > budget and blk[-2] > 8:
+            blk[-2] //= 2
     for d in range(len(shape) - 3, -1, -1):
         blk[d] = 1
-    while math.prod(blk) * itemsize > budget and blk[-2] > 8:
-        blk[-2] //= 2
+    for d in range(len(shape) - 3, -1, -1):
+        cap = budget // max(1, math.prod(blk) * itemsize // max(1, blk[d]))
+        blk[d] = _largest_divisor_at_most(shape[d], cap)
     return tuple(blk)
+
+
+def _largest_divisor_at_most(n: int, cap: int) -> int:
+    if cap >= n:
+        return n
+    best, i = 1, 1
+    while i * i <= n:
+        if n % i == 0:
+            for k in (i, n // i):
+                if best < k <= cap:
+                    best = k
+        i += 1
+    return best
 
 
 # ---------------------------------------------------------------------------
@@ -202,14 +229,16 @@ def _gather_kernel(ew):
 
 
 def _gather_call(x: jnp.ndarray, m: MixedRadixMap, interpret: bool,
-                 row_block: int = 256, y: jnp.ndarray | None = None,
+                 row_block: int | None = None, y: jnp.ndarray | None = None,
                  ew=None) -> jnp.ndarray:
     flat_idx, valid = gather_indices(m)  # folds to constants under jit
-    rows = math.prod(m.out_shape[:-1]) if len(m.out_shape) > 1 else 1
-    minor = m.out_shape[-1]
+    # segmentation comes from the schedule pass — one grid step is one block
+    # iteration of the cycle model, by construction
+    seg = plan_segments(m.out_shape)
+    rows, minor = seg.rows, seg.minor
     idx2 = flat_idx.reshape(rows, minor)
     val2 = valid.reshape(rows, minor)
-    rb = min(row_block, rows)
+    rb = seg.row_block if row_block is None else min(row_block, rows)
     while rows % rb:
         rb -= 1
     grid = (rows // rb,)

@@ -131,6 +131,45 @@ def yolov3_tiny(p, img):
     return pred1, pred2
 
 
+# ===========================================================================
+# Compiler demo blocks — plain-jax model fragments that repro.compiler lowers
+# end to end (jaxpr -> TM IR -> passes -> scheduled TMProgram).  They are the
+# canonical tm_compile inputs used by examples/superres.py, the differential
+# harness, and benchmarks/compiler_e2e.py.
+# ===========================================================================
+
+def superres_tail(x, skip, s=2):
+    """EDSR/ESPCN tail written in *plain jax*: depth-to-space (the standard
+    reshape/transpose/reshape idiom), residual add, border crop, re-pad.
+
+    The compiler must rediscover the TMU form: the three layout eqns compose
+    into one PixelShuffle map, the residual sinks into its element-wise
+    epilogue, and the crop/pad stream behind it via output forwarding."""
+    B, H, W, C = x.shape
+    c = C // (s * s)
+    h = x.reshape(B, H, W, s, s, c)
+    h = jnp.transpose(h, (0, 1, 3, 2, 4, 5))
+    h = h.reshape(B, H * s, W * s, c)              # depth-to-space
+    h = h + skip                                   # residual (TM Add)
+    h = jax.lax.slice(h, (0, s, s, 0),
+                      (B, H * s - s, W * s - s, c))  # crop the border ring
+    return jnp.pad(h, ((0, 0), (1, 1), (1, 1), (0, 0)))  # re-pad for a conv
+
+
+def yolo_neck(u, skip):
+    """YOLOv3-Tiny neck fragment: TM Upsample + Route (jnp.concatenate)."""
+    u = tm_ops.upsample(u, 2)
+    return jnp.concatenate([u, skip], axis=-1)
+
+
+def detect_tail(pred, conf_threshold=0.5, capacity=64):
+    """Batched Bboxcal over raw head grids: (B, N, D) -> (B, capacity, D).
+
+    Compiles to one FINE_EVALUATE instruction whose batch the rme-legalize
+    pass pins onto the batched RME Pallas kernel."""
+    return tm_ops.bboxcal_rows(pred, conf_threshold, capacity, score_index=4)
+
+
 def yolo_postprocess(pred, conf_threshold=0.5, capacity=256,
                      iou_threshold=0.45, max_out=64):
     """Bboxcal (RME evaluate) + NMS over a raw head grid.

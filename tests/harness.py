@@ -173,10 +173,9 @@ CASES = [
     OpCase("img2col", _img2col, ("pallas.img2col",)),
     OpCase("route", _route, ("pallas.route",)),
     OpCase("add", _add, ("pallas.block+ew",)),
-    OpCase("bboxcal", _bboxcal, ("pallas.rme.evaluate",),
-           supports_batch=False),
+    OpCase("bboxcal", _bboxcal, ("pallas.rme.evaluate",)),
     OpCase("assemble", _assemble_runtime, ("pallas.rme.assemble",),
-           supports_batch=False, mask_inputs=("mask",)),
+           mask_inputs=("mask",)),
     OpCase("assemble_static", _assemble_static, ("reference.fine_asm",),
            supports_batch=False),
     OpCase("resize", _resize, ("pallas.resize",), dtypes=FLOAT_DTYPES,
@@ -231,3 +230,100 @@ def run_differential(case: OpCase, dtype: str, batch_dims: int,
     assert_agree(case, results["reference"], results["fused"], "ref/fused")
     assert_agree(case, results["reference"], results["pallas"], "ref/pallas")
     return executors["pallas"].last_lowering
+
+
+# ---------------------------------------------------------------------------
+# compiled-program differential cases: whole jax functions through
+# repro.compiler.tm_compile, executed on every backend and checked against
+# the uncompiled function — same dtype/batch/odd-shape discipline as above.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CompiledCase:
+    """One compiler demo: builds (fn, example_args) per shape variant."""
+
+    name: str
+    build: Callable  # (dtype, variant, rng) -> (fn, args tuple)
+    variants: tuple            # shape/batch variants (passed to build)
+    dtypes: tuple[str, ...] = ALL_DTYPES
+    exact: bool = True
+    atol: float = 0.0
+
+
+def _arr(rng, shape, dtype, scale=100.0):
+    if dtype.startswith("int"):
+        lo, hi = (-99, 100) if dtype == "int8" else (-100, 100)
+        return jnp.asarray(rng.randint(lo, hi, size=shape).astype(dtype))
+    return jnp.asarray((rng.rand(*shape) * scale).astype(np.float32)).astype(dtype)
+
+
+def _superres_case(dtype, variant, rng):
+    from repro.models.cnn import superres_tail
+    B, H, W, C = variant
+    s = 2
+    x = _arr(rng, (B, H, W, C), dtype)
+    skip = _arr(rng, (B, H * s, W * s, C // (s * s)), dtype)
+    return (lambda a, b: superres_tail(a, b, s=s)), (x, skip)
+
+
+def _espcn_case(dtype, variant, rng):
+    import jax
+    from repro.models import cnn
+    B, H, W = variant
+    p = cnn.init_espcn(jax.random.PRNGKey(0), s=2,
+                       dtype=jnp.dtype(dtype))
+    x = _arr(rng, (B, H, W, 3), dtype, scale=1.0)
+    return (lambda a: cnn.espcn(p, a)), (x,)
+
+
+def _neck_case(dtype, variant, rng):
+    from repro.models.cnn import yolo_neck
+    B, H, W, C = variant
+    u = _arr(rng, (B, H, W, C), dtype)
+    skip = _arr(rng, (B, H * 2, W * 2, C // 2), dtype)
+    return yolo_neck, (u, skip)
+
+
+def _detect_case(dtype, variant, rng):
+    from repro.models.cnn import detect_tail
+    batch, N, D = variant
+    pred = _arr(rng, batch + (N, D), dtype)
+    return (lambda p: detect_tail(p, 10.0, 16)), (pred,)
+
+
+COMPILED_CASES = [
+    # odd, non-tile-aligned spatial shapes on purpose
+    CompiledCase("superres_tail", _superres_case,
+                 variants=((1, 6, 10, 8), (3, 5, 7, 8), (2, 4, 4, 16))),
+    CompiledCase("espcn", _espcn_case,
+                 variants=((1, 10, 14), (2, 7, 9)),
+                 dtypes=FLOAT_DTYPES),
+    CompiledCase("yolo_neck", _neck_case,
+                 variants=((1, 5, 7, 6), (2, 4, 6, 8))),
+    CompiledCase("detect_tail", _detect_case,
+                 variants=(((2,), 33, 7), ((2, 3), 20, 6))),
+]
+
+COMPILED_CASES_BY_NAME = {c.name: c for c in COMPILED_CASES}
+
+
+def run_compiled_differential(case: CompiledCase, dtype: str, variant,
+                              rng: np.random.RandomState):
+    """Compile one demo and check every backend against the raw function."""
+    from repro.compiler import tm_compile
+
+    fn, args = case.build(dtype, variant, rng)
+    ref = fn(*args)
+    compiled = tm_compile(fn, *args)
+    for backend in BACKENDS:
+        got = compiled(*args, backend=backend)
+        x = np.asarray(ref, dtype=np.float64)
+        y = np.asarray(got, dtype=np.float64)
+        assert x.shape == y.shape, (case.name, backend, x.shape, y.shape)
+        if case.exact:
+            assert np.array_equal(x, y), (case.name, backend, dtype, variant)
+        else:
+            np.testing.assert_allclose(
+                x, y, atol=case.atol, rtol=0,
+                err_msg=f"{case.name}:{backend}:{dtype}")
+    return compiled

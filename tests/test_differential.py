@@ -114,6 +114,58 @@ def test_fallback_reason_reported(rng):
     assert not rec.is_pallas and rec.reason == "no matching kernel rule"
 
 
+def test_fuse_never_composes_through_epilogue(rng):
+    """Regression: a producer carrying an elementwise epilogue must NOT be
+    composed away — the epilogue operand lives in the producer's output
+    layout, so composing the consumer's map over it drops the addition."""
+    from repro.core import affine as af
+    from repro.core.executor import TMExecutor
+    from repro.core.instr import EwOp, TMInstr, TMOpcode, TMProgram
+    import jax.numpy as jnp
+
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x", "r"), "t",
+                 map_=af.identity_map((4, 4, 2)), ew=EwOp.ADD),
+         TMInstr(TMOpcode.COARSE, ("t",), "y",
+                 map_=af.transpose_map((4, 4, 2)))],
+        inputs=("x", "r"), outputs=("y",))
+    bufs = {"x": jnp.asarray(rng.rand(4, 4, 2).astype(np.float32)),
+            "r": jnp.asarray(rng.rand(4, 4, 2).astype(np.float32))}
+    ref = TMExecutor(backend="reference")(prog, bufs)["y"]
+    fus = TMExecutor(backend="fused")(prog, bufs)["y"]
+    assert np.array_equal(np.asarray(ref), np.asarray(fus))
+
+
+def test_fractional_threshold_int_records_agree(rng):
+    """Regression: the RME Pallas kernel used to cast the threshold to the
+    record dtype, truncating 10.5 -> 10 for integer streams and selecting
+    different survivors than the reference compare (which promotes)."""
+    from repro.core.executor import TMExecutor
+    from repro.core.instr import RMEConfig, TMInstr, TMOpcode, TMProgram
+    import jax.numpy as jnp
+
+    prog = TMProgram(
+        [TMInstr(TMOpcode.FINE_EVALUATE, ("p",), "y",
+                 rme=RMEConfig(scheme="evaluate", threshold=10.5, cmp="ge",
+                               score_index=0, capacity=4))],
+        inputs=("p",), outputs=("y",))
+    p = jnp.asarray([[10, 1], [11, 2], [12, 3], [9, 4]], dtype=jnp.int32)
+    ref = TMExecutor(backend="reference")(prog, {"p": p})["y"]
+    pal = TMExecutor(backend="pallas")
+    got = pal(prog, {"p": p})["y"]
+    assert pal.last_lowering.paths() == ["pallas.rme.evaluate"]
+    assert np.array_equal(np.asarray(ref), np.asarray(got))
+    # batched kernel path too
+    prog_b = TMProgram(
+        [TMInstr(TMOpcode.FINE_EVALUATE, ("p",), "y",
+                 rme=prog.instrs[0].rme, meta={"batch_dims": 1})],
+        inputs=("p",), outputs=("y",))
+    pb = jnp.stack([p, p[::-1]])
+    ref_b = TMExecutor(backend="reference")(prog_b, {"p": pb})["y"]
+    got_b = TMExecutor(backend="pallas")(prog_b, {"p": pb})["y"]
+    assert np.array_equal(np.asarray(ref_b), np.asarray(got_b))
+
+
 def test_int_dtypes_bit_exact_everywhere(rng):
     """Integer payloads must be bit-exact on every backend for every case
     that admits them (gathers move bytes, never arithmetic)."""

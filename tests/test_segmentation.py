@@ -1,0 +1,164 @@
+"""Schedule/kernel segmentation agreement — the drift fix.
+
+One segmentation function (`repro.core.schedule.plan_segments` /
+`instr_segments`) drives both the cycle model's block-iteration counts and
+the Pallas kernels' grids; these tests pin the two together through the
+public reports (Lowering.segments vs InstrTiming.n_segments)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import affine as af
+from repro.core.executor import TMExecutor
+from repro.core.instr import EwOp, TMInstr, TMOpcode, TMProgram
+from repro.core.schedule import (CycleParams, instr_segments, plan_segments,
+                                 schedule)
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(99)
+
+
+def _run_both(prog, shapes, rng):
+    bufs = {k: jnp.asarray(rng.rand(*v).astype(np.float32))
+            for k, v in shapes.items()}
+    ex = TMExecutor(backend="pallas")
+    ex(prog, bufs)
+    rep = schedule(prog, shapes)
+    return ex.last_lowering, rep
+
+
+def test_block_mode_grid_equals_cycle_model_segments(rng):
+    """Transpose (block mode): kernel grid size == schedule segment count."""
+    m = af.transpose_map((64, 64, 32))
+    prog = TMProgram([TMInstr(TMOpcode.COARSE, ("x",), "y", map_=m)],
+                     inputs=("x",), outputs=("y",))
+    lowering, rep = _run_both(prog, {"x": (64, 64, 32)}, rng)
+    rec = lowering.records[0]
+    assert rec.path == "pallas.block"
+    assert rec.segments == rep.timings[0].n_segments, (
+        rec.segments, rep.timings[0].n_segments)
+
+
+def test_gather_mode_grid_equals_cycle_model_segments(rng):
+    """PixelShuffle (gather mode): same agreement."""
+    m = af.pixel_shuffle_map((32, 32, 64), 2)
+    prog = TMProgram([TMInstr(TMOpcode.COARSE, ("x",), "y", map_=m)],
+                     inputs=("x",), outputs=("y",))
+    lowering, rep = _run_both(prog, {"x": (32, 32, 64)}, rng)
+    rec = lowering.records[0]
+    assert rec.path == "pallas.gather"
+    assert rec.segments == rep.timings[0].n_segments
+
+
+def test_chain_every_instruction_agrees(rng):
+    m1 = af.transpose_map((64, 64, 32))
+    m2 = af.pixel_shuffle_map((64, 64, 32), 2)
+    m3 = af.identity_map((128, 128, 8))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "a", map_=m1),
+         TMInstr(TMOpcode.COARSE, ("a",), "b", map_=m2),
+         TMInstr(TMOpcode.COARSE, ("b", "skip"), "y", map_=m3, ew=EwOp.ADD)],
+        inputs=("x", "skip"), outputs=("y",))
+    lowering, rep = _run_both(prog, {"x": (64, 64, 32),
+                                     "skip": (128, 128, 8)}, rng)
+    for rec, t in zip(lowering.records, rep.timings):
+        assert rec.segments is not None
+        assert rec.segments == t.n_segments, (rec, t)
+
+
+def test_route_bands_sum_segments(rng):
+    """Multi-band Route launches one kernel per band, each covering the full
+    output — the cycle model must count the same total (caught live: the
+    model used to count the output once)."""
+    maps = tuple(af.route_maps([(32, 32, 64), (32, 32, 64)]))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("a", "b"), "y", maps=maps)],
+        inputs=("a", "b"), outputs=("y",))
+    lowering, rep = _run_both(prog, {"a": (32, 32, 64),
+                                     "b": (32, 32, 64)}, rng)
+    rec = lowering.records[0]
+    assert rec.path == "pallas.route"
+    assert rec.segments == rep.timings[0].n_segments
+
+
+def test_batched_rme_segments_agree_with_cycle_model(rng):
+    from repro.core.instr import RMEConfig
+    prog = TMProgram(
+        [TMInstr(TMOpcode.FINE_EVALUATE, ("p",), "y",
+                 rme=RMEConfig(scheme="evaluate", threshold=50.0, cmp="ge",
+                               score_index=0, capacity=8),
+                 meta={"batch_dims": 1})],
+        inputs=("p",), outputs=("y",))
+    bufs = {"p": jnp.asarray(rng.rand(5, 33, 7).astype(np.float32) * 100)}
+    ex = TMExecutor(backend="pallas")
+    ex(prog, bufs)
+    rec = ex.last_lowering.records[0]
+    assert rec.path == "pallas.rme.evaluate"
+    assert rec.segments == 5  # one grid step per record stream
+    rep = schedule(prog, {"p": (5, 33, 7)})
+    assert rep.timings[0].n_segments == rec.segments
+
+
+def test_fine_meta_batch_composes_with_executor_batch(rng):
+    """Regression: an executor-level batch lift on top of an instruction's
+    own meta['batch_dims'] must compose (add), not be replaced — compiled
+    TMPrograms are advertised as runnable like hand-written ones."""
+    from repro.core.instr import RMEConfig
+    prog = TMProgram(
+        [TMInstr(TMOpcode.FINE_EVALUATE, ("p",), "y",
+                 rme=RMEConfig(scheme="evaluate", threshold=50.0, cmp="ge",
+                               score_index=0, capacity=4),
+                 meta={"batch_dims": 0})],
+        inputs=("p",), outputs=("y",))
+    p = jnp.asarray(rng.rand(3, 8, 2).astype(np.float32) * 100)
+    ref = TMExecutor(backend="reference")(prog, {"p": p}, batch_dims=1)["y"]
+    pal = TMExecutor(backend="pallas")(prog, {"p": p}, batch_dims=1)["y"]
+    assert ref.shape == (3, 4, 2)
+    assert np.array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_executor_batch_lift_segments_reconcile(rng):
+    """Executor-level batch (batch_dims=k) multiplies the kernel grid; the
+    cycle model reconciles through instr_segments(batch_shape=...)."""
+    m = af.transpose_map((64, 64, 32))
+    ins = TMInstr(TMOpcode.COARSE, ("x",), "y", map_=m)
+    prog = TMProgram([ins], inputs=("x",), outputs=("y",))
+    bufs = {"x": jnp.asarray(rng.rand(3, 64, 64, 32).astype(np.float32))}
+    ex = TMExecutor(backend="pallas")
+    ex(prog, bufs, batch_dims=1)
+    rec = ex.last_lowering.records[0]
+    assert rec.segments == instr_segments(ins, m.out_shape,
+                                          batch_shape=(3,))
+
+
+def test_plan_segments_row_block_divides_rows():
+    for shape in ((64, 64, 32), (7, 13, 3), (128, 128, 8), (33, 5)):
+        seg = plan_segments(shape)
+        assert seg.rows % seg.row_block == 0
+        assert seg.n_segments >= 1
+        # a segment never exceeds the ping-pong budget unless a single row
+        # already does
+        per_seg = seg.row_block * seg.minor * 4
+        assert per_seg <= max(CycleParams().segment_bytes, seg.minor * 4)
+
+
+def test_segment_budget_scales_inversely():
+    shape = (128, 128, 32)
+    small = plan_segments(shape, segment_bytes=4096)
+    large = plan_segments(shape, segment_bytes=65536)
+    assert small.n_segments > large.n_segments
+
+
+def test_instr_segments_consults_kernel_block_plan():
+    """COARSE block-mode maps segment by the kernel's grid, not the generic
+    row plan — the two sources cannot drift."""
+    import math
+    from repro.kernels.tm_affine.tm_affine import analyze_block_mode
+    m = af.transpose_map((64, 64, 32))
+    ins = TMInstr(TMOpcode.COARSE, ("x",), "y", map_=m)
+    plan = analyze_block_mode(m)
+    assert plan is not None
+    assert instr_segments(ins, m.out_shape) == math.prod(plan.grid)
