@@ -33,7 +33,13 @@ from repro.compiler.trace import graph_from_jaxpr
 
 @dataclasses.dataclass
 class CompiledTMProgram:
-    """A traced, optimized, partitioned and scheduled program."""
+    """A traced, optimized, partitioned and scheduled program.
+
+    ``params`` pins the cycle params the program was scheduled with; the TM
+    phases execute with the same params, so a custom segment budget
+    reconfigures the launched Pallas grids exactly as the model predicted
+    (the serving runtime's per-entry config selection pins the winner here).
+    """
 
     graph: TMGraph
     pass_report: PassReport
@@ -41,6 +47,7 @@ class CompiledTMProgram:
     scratch_plan: ScratchPlan
     in_tree: Any
     out_tree: Any
+    params: CycleParams | None = None
     last_lowering: list[LoweringReport] = dataclasses.field(
         default_factory=list)
 
@@ -62,8 +69,12 @@ class CompiledTMProgram:
         ])
 
     # --- execution --------------------------------------------------------
-    def __call__(self, *args, backend: str = "fused",
-                 interpret: bool = True):
+    # Split into bind_inputs / run_phase / outputs_from so the serving
+    # pipeline can interleave one program's phases with other requests'.
+
+    def bind_inputs(self, *args) -> dict[str, Any]:
+        """Validate ``args`` against the compiled signature; return the
+        initial buffer environment (consts + bound inputs)."""
         flat, tree = jax.tree_util.tree_flatten(args)
         if tree != self.in_tree:
             raise TypeError(f"argument structure {tree} does not match the "
@@ -81,18 +92,50 @@ class CompiledTMProgram:
                     f"not match compiled {want.dtype}{want.shape}; "
                     f"recompile with tm_compile for new shapes/dtypes")
             env[name] = val
-        self.last_lowering = []
-        for phase in self.partition_report.phases:
-            if phase.kind == "tpu":
-                for i in phase.node_indices:
-                    eval_tpu_node(self.graph.nodes[i], env)
-            else:
-                ex = TMExecutor(backend=backend, interpret=interpret)
-                bufs = {n: env[n] for n in phase.program.inputs}
-                env.update(ex(phase.program, bufs))
-                self.last_lowering.append(ex.last_lowering)
+        return env
+
+    def run_phase(self, phase, env: dict[str, Any], *,
+                  backend: str = "fused",
+                  interpret: bool = True) -> LoweringReport | None:
+        """Execute one partition phase against ``env`` (mutated in place).
+
+        Returns the TM phase's lowering report (None for TPU phases)."""
+        if phase.kind == "tpu":
+            for i in phase.node_indices:
+                eval_tpu_node(self.graph.nodes[i], env)
+            return None
+        ex = TMExecutor(backend=backend, interpret=interpret,
+                        params=self.params)
+        bufs = {n: env[n] for n in phase.program.inputs}
+        out, lowering, _ = ex.run(phase.program, bufs)
+        env.update(out)
+        return lowering
+
+    def outputs_from(self, env: dict[str, Any]):
         outs = [env[o] for o in self.graph.outputs]
         return jax.tree_util.tree_unflatten(self.out_tree, outs)
+
+    def run(self, *args, backend: str = "fused", interpret: bool = True,
+            ) -> tuple[Any, list[LoweringReport]]:
+        """Execute and return ``(outputs, per-TM-phase lowering reports)``.
+
+        Mutates no state on ``self`` — safe under concurrent callers (the
+        serving runtime's worker threads); :meth:`__call__` wraps this and
+        keeps ``last_lowering`` as an alias for the last call."""
+        env = self.bind_inputs(*args)
+        lowerings: list[LoweringReport] = []
+        for phase in self.partition_report.phases:
+            rep = self.run_phase(phase, env, backend=backend,
+                                 interpret=interpret)
+            if rep is not None:
+                lowerings.append(rep)
+        return self.outputs_from(env), lowerings
+
+    def __call__(self, *args, backend: str = "fused",
+                 interpret: bool = True):
+        out, lowerings = self.run(*args, backend=backend, interpret=interpret)
+        self.last_lowering = lowerings
+        return out
 
 
 def tm_compile(fn, *example_args,
@@ -114,4 +157,5 @@ def tm_compile(fn, *example_args,
     scratch = allocate(graph, part, params)
     return CompiledTMProgram(graph=graph, pass_report=pass_report,
                              partition_report=part, scratch_plan=scratch,
-                             in_tree=in_tree, out_tree=out_tree)
+                             in_tree=in_tree, out_tree=out_tree,
+                             params=params)

@@ -5,9 +5,9 @@ Walks a traced jaxpr and pattern-matches tensor-manipulation equations into
 (dot_general, conv, activations, …) as opaque :class:`~repro.compiler.ir.TPUNode`
 equations.  Two match sources:
 
-* **raw lax primitives** — transpose, reshape, squeeze, slice, pad,
-  concatenate, rev, broadcast_in_dim, copy, and same-shape elementwise
-  add/sub/mul/max, each rebuilt as an exact
+* **raw lax primitives** — transpose, reshape, squeeze, slice,
+  dynamic_slice (constant starts), pad, concatenate, rev, broadcast_in_dim,
+  copy, and same-shape elementwise add/sub/mul/max, each rebuilt as an exact
   :class:`~repro.core.affine.MixedRadixMap` (one TMU instruction's register
   contents);
 * **tagged tm_ops** — inside :func:`repro.core.tm_primitive.tag_tm_ops`,
@@ -44,8 +44,8 @@ _EW_PRIMS = {"add": EwOp.ADD, "sub": EwOp.SUB, "mul": EwOp.MUL,
 
 # primitives the matcher may claim (used for the pjit-inlining decision)
 _TM_PRIM_NAMES = frozenset({
-    "transpose", "reshape", "squeeze", "slice", "pad", "concatenate", "rev",
-    "broadcast_in_dim", "copy",
+    "transpose", "reshape", "squeeze", "slice", "dynamic_slice", "pad",
+    "concatenate", "rev", "broadcast_in_dim", "copy",
     "tm_map", "tm_route", "tm_resize", "tm_evaluate",
 }) | frozenset(_EW_PRIMS)
 
@@ -54,8 +54,14 @@ def _aval_shape(v) -> tuple[int, ...]:
     return tuple(int(d) for d in v.aval.shape)
 
 
-def _is_matchable(eqn) -> bool:
-    """Cheap shape-level predicate: could :func:`_match_tm` claim this eqn?"""
+def _is_matchable(eqn, strict: bool = False) -> bool:
+    """Cheap shape-level predicate: could :func:`_match_tm` claim this eqn?
+
+    ``strict`` is the pjit-inlining mode: a ``dynamic_slice`` counts only
+    when its starts are Literals, because a traced start can never match —
+    inlining a pjit on its account would explode one opaque XLA call into
+    per-eqn TPU nodes for nothing.  (At top level the gate stays permissive:
+    ``_match_tm``'s ``get_const`` also resolves const-folded starts.)"""
     name = eqn.primitive.name
     if name not in _TM_PRIM_NAMES:
         return False
@@ -64,12 +70,14 @@ def _is_matchable(eqn) -> bool:
         return (len(shapes) == 2 and shapes[0] == shapes[1]
                 and len(shapes[0]) >= 1
                 and eqn.invars[0].aval.dtype == eqn.invars[1].aval.dtype)
+    if name == "dynamic_slice" and strict:
+        return all(isinstance(v, Literal) for v in eqn.invars[1:])
     return True
 
 
 def _contains_tm(jaxpr) -> bool:
     for eqn in jaxpr.eqns:
-        if _is_matchable(eqn):
+        if _is_matchable(eqn, strict=True):
             return True
         if eqn.primitive.name == "pjit" and _contains_tm(eqn.params["jaxpr"].jaxpr):
             return True
@@ -129,6 +137,20 @@ def _match_tm(eqn, get_const):
         strides = eqn.params["strides"] or (1,) * len(starts)
         return {"map": af.strided_slice_map(in_shapes[0], starts, strides,
                                             out_shape)}
+    if name == "dynamic_slice":
+        starts = []
+        for v in eqn.invars[1:]:
+            c = v.val if isinstance(v, Literal) else get_const(v)
+            if c is None:
+                return None  # traced start index: not a register constant
+            starts.append(int(c))
+        sizes = tuple(int(s) for s in eqn.params["slice_sizes"])
+        # lax.dynamic_slice clamps each start so the window stays in bounds
+        starts = tuple(max(0, min(st, dim - sz))
+                       for st, dim, sz in zip(starts, in_shapes[0], sizes))
+        return {"map": af.strided_slice_map(in_shapes[0], starts,
+                                            (1,) * len(sizes), out_shape),
+                "keep_srcs": 1}  # start operands folded into the map offsets
     if name == "pad":
         cfg = eqn.params["padding_config"]
         if any(int(i) != 0 for _, _, i in cfg):

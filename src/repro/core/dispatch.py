@@ -70,19 +70,24 @@ class LoweringReport:
 class KernelRule:
     """One registry entry.
 
-    ``matches(ins, srcs, batch_dims)`` returns the lowering path string when
-    the rule can execute the instruction (None otherwise); ``run`` executes
-    it.  ``priority`` orders rules (higher first) so specialised kernels
-    (img2col, resize) outrank the generic tm_affine gather.
+    ``matches(ins, srcs, batch_dims, segment_bytes=None)`` returns the
+    lowering path string when the rule can execute the instruction (None
+    otherwise); ``run(ins, srcs, batch_dims, interpret, segment_bytes=None)``
+    executes it.  ``segment_bytes`` is the ping-pong buffer budget
+    (:class:`~repro.core.schedule.CycleParams.segment_bytes`); None means the
+    default — rules whose grids honour the budget re-segment from it, the
+    rest accept and ignore it.  ``priority`` orders rules (higher first) so
+    specialised kernels (img2col, resize) outrank the generic tm_affine
+    gather.
     """
 
     name: str
-    matches: Callable[[TMInstr, Sequence[jnp.ndarray], int], str | None]
-    run: Callable[[TMInstr, Sequence[jnp.ndarray], int, bool], jnp.ndarray]
+    matches: Callable[..., str | None]
+    run: Callable[..., jnp.ndarray]
     priority: int = 0
     # optional: report the grid size (block iterations) the kernel will run,
     # so the lowering report can be checked against the schedule's cycle model
-    segments: Callable[[TMInstr, Sequence[jnp.ndarray], int], int] | None = None
+    segments: Callable[..., int] | None = None
 
 
 _RULES: list[KernelRule] = []
@@ -116,18 +121,24 @@ def rules() -> list[KernelRule]:
 
 
 def lower_instr(ins: TMInstr, srcs: Sequence[jnp.ndarray], batch_dims: int,
-                interpret: bool) -> tuple[jnp.ndarray, Lowering] | None:
+                interpret: bool, segment_bytes: int | None = None,
+                ) -> tuple[jnp.ndarray, Lowering] | None:
     """Lower one instruction through the registry.
 
     Returns ``(value, lowering)`` from the first matching rule, or None when
     no rule claims the instruction (caller falls back to the engine).
+    ``segment_bytes`` propagates a custom ping-pong budget into the kernels
+    (None = the :class:`~repro.core.schedule.CycleParams` default), so a
+    non-default budget reconfigures the launched grids, not just the model.
     """
     _ensure_registered()
     for rule in _RULES:
-        path = rule.matches(ins, srcs, batch_dims)
+        path = rule.matches(ins, srcs, batch_dims, segment_bytes=segment_bytes)
         if path is not None:
-            val = rule.run(ins, srcs, batch_dims, interpret)
-            seg = (rule.segments(ins, srcs, batch_dims)
+            val = rule.run(ins, srcs, batch_dims, interpret,
+                           segment_bytes=segment_bytes)
+            seg = (rule.segments(ins, srcs, batch_dims,
+                                 segment_bytes=segment_bytes)
                    if rule.segments is not None else None)
             return val, Lowering(dst=ins.dst, opcode=ins.opcode.value,
                                  path=path, kernel=rule.name, segments=seg)

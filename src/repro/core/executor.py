@@ -40,6 +40,7 @@ from repro.core.dispatch import Lowering, LoweringReport, lower_instr
 from repro.core.engine import EW_FNS, apply_map, route_gather
 from repro.core.fusion import FusionReport, fuse
 from repro.core.instr import EwOp, TMInstr, TMOpcode, TMProgram
+from repro.core.schedule import CycleParams
 
 _EW: dict[EwOp, Callable] = {op: EW_FNS[op.value] for op in EwOp}
 
@@ -50,6 +51,10 @@ BACKENDS = ("reference", "fused", "pallas")
 class TMExecutor:
     backend: str = "fused"  # "reference" | "fused" | "pallas"
     interpret: bool = True  # Pallas interpreter mode (CPU-safe); False on TPU
+    # custom cycle params re-segment the launched Pallas grids (the ping-pong
+    # budget params.segment_bytes flows executor -> dispatch -> kernels); None
+    # keeps the shared default, so model and kernels still agree
+    params: CycleParams | None = None
     last_report: FusionReport | None = None
     last_lowering: LoweringReport | None = None
 
@@ -60,18 +65,37 @@ class TMExecutor:
 
     def __call__(self, prog: TMProgram, buffers: dict[str, jnp.ndarray],
                  *, batch_dims: int = 0) -> dict[str, jnp.ndarray]:
+        out, lowering, fusion = self.run(prog, buffers, batch_dims=batch_dims)
+        # convenience aliases for the *last* call — racy by construction
+        # under concurrent callers; threaded code must use run() instead
+        if fusion is not None:
+            self.last_report = fusion
+        self.last_lowering = lowering
+        return out
+
+    def run(self, prog: TMProgram, buffers: dict[str, jnp.ndarray],
+            *, batch_dims: int = 0,
+            ) -> tuple[dict[str, jnp.ndarray], LoweringReport,
+                       FusionReport | None]:
+        """Execute ``prog`` and return ``(outputs, lowering, fusion)``.
+
+        Unlike :meth:`__call__` this mutates no executor state — per-call
+        reports are returned, so one executor is safe to share across the
+        serving runtime's worker threads."""
+        fusion = None
         if self.backend == "fused":
-            prog, self.last_report = fuse(prog)
-        self.last_lowering = LoweringReport(backend=self.backend)
+            prog, fusion = fuse(prog)
+        lowering = LoweringReport(backend=self.backend)
         bufs = dict(buffers)
         for ins in prog.instrs:  # Fetch
-            bufs[ins.dst] = self._dispatch(ins, bufs, batch_dims)
+            bufs[ins.dst] = self._dispatch(ins, bufs, batch_dims, lowering)
         missing = [o for o in prog.outputs if o not in bufs]
         if missing:
             raise KeyError(f"program did not produce outputs: {missing}")
-        return {o: bufs[o] for o in prog.outputs}
+        return {o: bufs[o] for o in prog.outputs}, lowering, fusion
 
-    def _dispatch(self, ins: TMInstr, bufs: dict, batch_dims: int) -> jnp.ndarray:
+    def _dispatch(self, ins: TMInstr, bufs: dict, batch_dims: int,
+                  lowering: LoweringReport) -> jnp.ndarray:
         # compiled programs pin per-instruction batch dims (the RME
         # legalization pass); an executor-level batch lift composes on top
         # (the caller's leading axes come before the instruction's own)
@@ -80,22 +104,24 @@ class TMExecutor:
             batch_dims = batch_dims + ins.meta["batch_dims"]
         if self.backend == "pallas":
             srcs = [bufs[s] for s in ins.srcs]  # Tensor Load
-            lowered = lower_instr(ins, srcs, batch_dims, self.interpret)
+            sb = self.params.segment_bytes if self.params is not None else None
+            lowered = lower_instr(ins, srcs, batch_dims, self.interpret,
+                                  segment_bytes=sb)
             if lowered is not None:
                 val, rec = lowered
-                self.last_lowering.records.append(rec)
+                lowering.records.append(rec)
                 return val
             # the registry cannot tell us *why* every rule declined; report
             # the one observable condition without guessing at causes
             reason = (f"no matching kernel rule (batch_dims={batch_dims})"
                       if batch_dims else "no matching kernel rule")
             val = self._exec(ins, bufs, batch_dims)
-            self.last_lowering.records.append(Lowering(
+            lowering.records.append(Lowering(
                 dst=ins.dst, opcode=ins.opcode.value,
                 path=f"reference.{ins.opcode.value}", reason=reason))
             return val
         val = self._exec(ins, bufs, batch_dims)
-        self.last_lowering.records.append(Lowering(
+        lowering.records.append(Lowering(
             dst=ins.dst, opcode=ins.opcode.value,
             path=f"reference.{ins.opcode.value}"))
         return val

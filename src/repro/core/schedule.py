@@ -39,11 +39,13 @@ class CycleParams:
     """Cycle-model constants (defaults loosely follow the paper's 40nm TMU:
     a 128-bit AXI port and a 16-lane manipulation datapath).
 
-    ``segment_bytes`` is the shared ping-pong budget: at its *default* value
-    the Pallas kernels size their grids from the same plan, so model segment
-    counts equal kernel grids (``Lowering.segments``).  A custom value is a
-    what-if knob for the model only — the kernels keep launching at the
-    default until dispatch grows a params path (ROADMAP)."""
+    ``segment_bytes`` is the shared ping-pong budget: the Pallas kernels size
+    their grids from the same plan, so model segment counts equal kernel
+    grids (``Lowering.segments``).  A *custom* value reconfigures both sides:
+    pass the params to :class:`~repro.core.executor.TMExecutor` and the
+    budget flows through dispatch into the launched kernels, keeping model
+    and grids in lock-step (the serving runtime's per-entry config selection
+    relies on this)."""
 
     bandwidth_bytes: float = 16.0   # bytes moved per cycle per direction
     lanes: float = 16.0             # elements manipulated per cycle
@@ -229,9 +231,9 @@ def map_segments(m, itemsize: int = 4, segment_bytes: int | None = None,
     count: the kernel rules report it (``Lowering.segments``) and the cycle
     model charges per-segment stage cycles from it.
 
-    The kernels always launch at the *default* segment budget; passing a
-    custom ``segment_bytes`` here (or custom :class:`CycleParams` to
-    :func:`schedule`) is a what-if model, not a kernel re-configuration."""
+    A custom ``segment_bytes`` here models exactly the grid the kernels
+    launch when the same budget is plumbed through the executor
+    (``TMExecutor(params=CycleParams(segment_bytes=...))``)."""
     sb = segment_bytes if segment_bytes is not None else CycleParams().segment_bytes
     return _map_segments_cached(m, itemsize, sb, tuple(batch_shape))
 

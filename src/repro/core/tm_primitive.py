@@ -21,8 +21,9 @@ import contextlib
 import json
 
 import jax.core as jax_core
+import jax.numpy as jnp
 from jax.extend.core import Primitive
-from jax.interpreters import mlir
+from jax.interpreters import batching, mlir
 
 _TAGGING = False
 
@@ -83,6 +84,19 @@ def bind_map(m, x, batch_dims: int = 0):
     return tm_map_p.bind(x, map_json=encode_map(m), batch_dims=batch_dims)
 
 
+# vmap rule: move the mapped axis to the front and grow batch_dims — the
+# serving batcher's vmap lift then reaches the compiler as the same
+# batch_dims the trace matcher already lifts via batch_extend_map
+def _tm_map_batcher(args, dims, *, map_json, batch_dims):
+    (x,), (d,) = args, dims
+    x = batching.moveaxis(x, d, 0)
+    return tm_map_p.bind(x, map_json=map_json,
+                         batch_dims=batch_dims + 1), 0
+
+
+batching.primitive_batchers[tm_map_p] = _tm_map_batcher
+
+
 # ---------------------------------------------------------------------------
 # tm_route — multi-band coarse instruction (Route / concat)
 # ---------------------------------------------------------------------------
@@ -113,6 +127,19 @@ def bind_route(maps, xs, batch_dims: int = 0):
                            batch_dims=batch_dims)
 
 
+def _tm_route_batcher(args, dims, *, maps_json, batch_dims):
+    size = next(x.shape[d] for x, d in zip(args, dims)
+                if d is not batching.not_mapped)
+    xs = [jnp.broadcast_to(x[None], (size,) + x.shape)
+          if d is batching.not_mapped else batching.moveaxis(x, d, 0)
+          for x, d in zip(args, dims)]
+    return tm_route_p.bind(*xs, maps_json=maps_json,
+                           batch_dims=batch_dims + 1), 0
+
+
+batching.primitive_batchers[tm_route_p] = _tm_route_batcher
+
+
 # ---------------------------------------------------------------------------
 # tm_resize — fine-grained bilinear Resize
 # ---------------------------------------------------------------------------
@@ -134,6 +161,18 @@ tm_resize_p.def_impl(_tm_resize_impl)
 tm_resize_p.def_abstract_eval(_tm_resize_abstract)
 mlir.register_lowering(tm_resize_p, mlir.lower_fun(_tm_resize_impl,
                                                    multiple_results=False))
+
+
+# resize and evaluate operate on trailing core axes natively, so vmap is
+# just "mapped axis to the front"
+def _leading_axes_batcher(prim):
+    def batcher(args, dims, **params):
+        (x,), (d,) = args, dims
+        return prim.bind(batching.moveaxis(x, d, 0), **params), 0
+    return batcher
+
+
+batching.primitive_batchers[tm_resize_p] = _leading_axes_batcher(tm_resize_p)
 
 
 # ---------------------------------------------------------------------------
@@ -159,3 +198,5 @@ tm_evaluate_p.def_impl(_tm_evaluate_impl)
 tm_evaluate_p.def_abstract_eval(_tm_evaluate_abstract)
 mlir.register_lowering(tm_evaluate_p, mlir.lower_fun(_tm_evaluate_impl,
                                                      multiple_results=False))
+batching.primitive_batchers[tm_evaluate_p] = \
+    _leading_axes_batcher(tm_evaluate_p)

@@ -26,7 +26,7 @@ def conv2d_call(x, w, *, stride=1, pad=0, interpret=True):
 # run the slab kernel (on-chip patch assembly) instead of the generic gather.
 # ---------------------------------------------------------------------------
 
-def _img2col_matches(ins, srcs, batch_dims):
+def _img2col_matches(ins, srcs, batch_dims, segment_bytes=None):
     if ins.opcode != TMOpcode.COARSE or ins.ew is not None:
         return None
     cfg = (ins.meta or {}).get("img2col")
@@ -46,7 +46,7 @@ def _img2col_matches(ins, srcs, batch_dims):
     return "pallas.img2col"
 
 
-def _img2col_run(ins, srcs, batch_dims, interpret):
+def _img2col_run(ins, srcs, batch_dims, interpret, segment_bytes=None):
     cfg = ins.meta["img2col"]
     return img2col_call(srcs[0], kh=cfg["kh"], kw=cfg["kw"],
                         stride=cfg.get("stride", 1), pad=cfg.get("pad", 0),

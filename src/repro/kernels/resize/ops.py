@@ -18,7 +18,7 @@ def resize_call(x, *, out_h, out_w, interpret=True):
 # dispatch-registry rule: RESIZE instructions (meta carries out_h/out_w)
 # ---------------------------------------------------------------------------
 
-def _resize_matches(ins, srcs, batch_dims):
+def _resize_matches(ins, srcs, batch_dims, segment_bytes=None):
     if ins.opcode != TMOpcode.RESIZE or batch_dims != 0:
         return None
     if len(srcs) != 1 or srcs[0].ndim != 3:
@@ -26,7 +26,7 @@ def _resize_matches(ins, srcs, batch_dims):
     return "pallas.resize"
 
 
-def _resize_run(ins, srcs, batch_dims, interpret):
+def _resize_run(ins, srcs, batch_dims, interpret, segment_bytes=None):
     return resize_call(srcs[0], out_h=ins.meta["out_h"],
                        out_w=ins.meta["out_w"], interpret=interpret)
 

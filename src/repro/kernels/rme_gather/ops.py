@@ -52,7 +52,7 @@ def assemble_batched_call(x, mask, *, capacity, interpret=True):
 # the compaction grid over them).  Static lane masks and top-k fall back.
 # ---------------------------------------------------------------------------
 
-def _evaluate_matches(ins, srcs, batch_dims):
+def _evaluate_matches(ins, srcs, batch_dims, segment_bytes=None):
     if ins.opcode != TMOpcode.FINE_EVALUATE:
         return None
     cfg = ins.rme
@@ -63,7 +63,7 @@ def _evaluate_matches(ins, srcs, batch_dims):
     return "pallas.rme.evaluate"
 
 
-def _evaluate_run(ins, srcs, batch_dims, interpret):
+def _evaluate_run(ins, srcs, batch_dims, interpret, segment_bytes=None):
     if batch_dims == 0:
         rows, _, _ = evaluate_call(srcs[0], ins.rme.threshold,
                                    capacity=ins.rme.capacity, cmp=ins.rme.cmp,
@@ -76,7 +76,7 @@ def _evaluate_run(ins, srcs, batch_dims, interpret):
     return rows
 
 
-def _assemble_matches(ins, srcs, batch_dims):
+def _assemble_matches(ins, srcs, batch_dims, segment_bytes=None):
     if ins.opcode != TMOpcode.FINE_ASSEMBLE:
         return None
     cfg = ins.rme
@@ -90,7 +90,7 @@ def _assemble_matches(ins, srcs, batch_dims):
     return "pallas.rme.assemble"
 
 
-def _assemble_run(ins, srcs, batch_dims, interpret):
+def _assemble_run(ins, srcs, batch_dims, interpret, segment_bytes=None):
     if batch_dims == 0:
         packed, _ = assemble_call(srcs[0], srcs[1],
                                   capacity=ins.rme.capacity,
@@ -102,7 +102,7 @@ def _assemble_run(ins, srcs, batch_dims, interpret):
     return packed
 
 
-def _rme_segments(ins, srcs, batch_dims):
+def _rme_segments(ins, srcs, batch_dims, segment_bytes=None):
     # one grid step per record stream (the batched kernels' grid)
     return max(1, math.prod(srcs[0].shape[:batch_dims]))
 

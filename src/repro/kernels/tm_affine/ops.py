@@ -15,20 +15,24 @@ from repro.core.schedule import map_segments
 from repro.kernels.tm_affine.tm_affine import analyze_block_mode, tm_affine
 
 
-@partial(jax.jit, static_argnums=(1,), static_argnames=("interpret", "force_mode"))
+@partial(jax.jit, static_argnums=(1,),
+         static_argnames=("interpret", "force_mode", "segment_bytes"))
 def tm_affine_call(x: jnp.ndarray, m: MixedRadixMap, *, interpret: bool = True,
-                   force_mode: str | None = None) -> jnp.ndarray:
-    return tm_affine(x, m, interpret=interpret, force_mode=force_mode)
+                   force_mode: str | None = None,
+                   segment_bytes: int | None = None) -> jnp.ndarray:
+    return tm_affine(x, m, interpret=interpret, force_mode=force_mode,
+                     segment_bytes=segment_bytes)
 
 
 @partial(jax.jit, static_argnums=(2,),
-         static_argnames=("ew", "interpret", "force_mode"))
+         static_argnames=("ew", "interpret", "force_mode", "segment_bytes"))
 def tm_affine_ew_call(x: jnp.ndarray, y: jnp.ndarray, m: MixedRadixMap, *,
                       ew: str, interpret: bool = True,
-                      force_mode: str | None = None) -> jnp.ndarray:
+                      force_mode: str | None = None,
+                      segment_bytes: int | None = None) -> jnp.ndarray:
     """Map + fused element-wise epilogue: ``ew(apply_map(m, x), y)``."""
     return tm_affine(x, m, interpret=interpret, force_mode=force_mode,
-                     y=y, ew=EW_FNS[ew])
+                     y=y, ew=EW_FNS[ew], segment_bytes=segment_bytes)
 
 
 def plan_of(m: MixedRadixMap):
@@ -41,7 +45,7 @@ def plan_of(m: MixedRadixMap):
 # ---------------------------------------------------------------------------
 
 # MixedRadixMap is frozen/hashable: memoize the batch lift and the decode
-# analysis so match + run share one computation per (map, batch) pair
+# analysis so match + run share one computation per (map, batch, budget)
 _lift_cached = lru_cache(maxsize=512)(batch_extend_map)
 _plan_cached = lru_cache(maxsize=512)(analyze_block_mode)
 
@@ -55,13 +59,14 @@ def _lifted(ins, srcs, batch_dims) -> MixedRadixMap | None:
     return _lift_cached(ins.map_, batch)
 
 
-def _coarse_matches(ins, srcs, batch_dims):
+def _coarse_matches(ins, srcs, batch_dims, segment_bytes=None):
     if ins.opcode != TMOpcode.COARSE:
         return None
     m = _lifted(ins, srcs, batch_dims)
     if m is None:
         return None
-    mode = "block" if _plan_cached(m) is not None else "gather"
+    mode = ("block" if _plan_cached(m, None, segment_bytes) is not None
+            else "gather")
     if ins.ew is not None:
         # the kernel epilogue streams y in output layout — broadcastable
         # operands are the engine's job, decline and fall back
@@ -73,21 +78,24 @@ def _coarse_matches(ins, srcs, batch_dims):
     return f"pallas.{mode}"
 
 
-def _coarse_run(ins, srcs, batch_dims, interpret):
+def _coarse_run(ins, srcs, batch_dims, interpret, segment_bytes=None):
     m = _lifted(ins, srcs, batch_dims)
     if ins.ew is not None:
         return tm_affine_ew_call(srcs[0], srcs[1], m, ew=ins.ew.value,
-                                 interpret=interpret)
-    return tm_affine_call(srcs[0], m, interpret=interpret)
+                                 interpret=interpret,
+                                 segment_bytes=segment_bytes)
+    return tm_affine_call(srcs[0], m, interpret=interpret,
+                          segment_bytes=segment_bytes)
 
 
-def _coarse_segments(ins, srcs, batch_dims):
+def _coarse_segments(ins, srcs, batch_dims, segment_bytes=None):
     # the map is already batch-lifted, so this is exactly the grid the
     # kernel launches — and exactly schedule's shared count (one source)
-    return map_segments(_lifted(ins, srcs, batch_dims))
+    return map_segments(_lifted(ins, srcs, batch_dims),
+                        segment_bytes=segment_bytes)
 
 
-def _route_matches(ins, srcs, batch_dims):
+def _route_matches(ins, srcs, batch_dims, segment_bytes=None):
     if ins.opcode != TMOpcode.COARSE or ins.maps is None:
         return None
     n_band = len(ins.maps)
@@ -100,21 +108,23 @@ def _route_matches(ins, srcs, batch_dims):
     return "pallas.route+ew" if ins.ew is not None else "pallas.route"
 
 
-def _route_run(ins, srcs, batch_dims, interpret):
+def _route_run(ins, srcs, batch_dims, interpret, segment_bytes=None):
     # band loop (Branch stage): one kernel launch per band, disjoint supports
     batch = srcs[0].shape[:batch_dims]
     out = None
     for x, m in zip(srcs, ins.maps):
-        band = tm_affine_call(x, _lift_cached(m, batch), interpret=interpret)
+        band = tm_affine_call(x, _lift_cached(m, batch), interpret=interpret,
+                              segment_bytes=segment_bytes)
         out = band if out is None else out + band
     if ins.ew is not None:
         out = EW_FNS[ins.ew.value](out, srcs[-1])
     return out
 
 
-def _route_segments(ins, srcs, batch_dims):
+def _route_segments(ins, srcs, batch_dims, segment_bytes=None):
     batch = srcs[0].shape[:batch_dims]
-    return sum(map_segments(_lift_cached(m, batch)) for m in ins.maps)
+    return sum(map_segments(_lift_cached(m, batch),
+                            segment_bytes=segment_bytes) for m in ins.maps)
 
 
 register_rule("tm_affine.route", _route_matches, _route_run, priority=10,

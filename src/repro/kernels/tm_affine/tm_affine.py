@@ -230,11 +230,11 @@ def _gather_kernel(ew):
 
 def _gather_call(x: jnp.ndarray, m: MixedRadixMap, interpret: bool,
                  row_block: int | None = None, y: jnp.ndarray | None = None,
-                 ew=None) -> jnp.ndarray:
+                 ew=None, segment_bytes: int | None = None) -> jnp.ndarray:
     flat_idx, valid = gather_indices(m)  # folds to constants under jit
     # segmentation comes from the schedule pass — one grid step is one block
     # iteration of the cycle model, by construction
-    seg = plan_segments(m.out_shape)
+    seg = plan_segments(m.out_shape, segment_bytes=segment_bytes)
     rows, minor = seg.rows, seg.minor
     idx2 = flat_idx.reshape(rows, minor)
     val2 = valid.reshape(rows, minor)
@@ -271,18 +271,25 @@ def _gather_call(x: jnp.ndarray, m: MixedRadixMap, interpret: bool,
 def tm_affine(x: jnp.ndarray, m: MixedRadixMap, *, interpret: bool = True,
               block: tuple[int, ...] | None = None,
               force_mode: str | None = None,
-              y: jnp.ndarray | None = None, ew=None) -> jnp.ndarray:
+              y: jnp.ndarray | None = None, ew=None,
+              segment_bytes: int | None = None) -> jnp.ndarray:
     """Execute a MixedRadixMap as a Pallas kernel (decode -> block|gather).
 
     ``y``/``ew``: optional fused element-wise epilogue — ``ew(map(x), y)``
     computed inside the kernel while the output block is VMEM-resident
     (``y`` must have ``m.out_shape``).
+
+    ``segment_bytes``: custom ping-pong budget — resizes the block/gather
+    grids exactly like :class:`~repro.core.schedule.CycleParams` resizes the
+    cycle model's segments (None = the shared default).
     """
     assert x.shape == m.in_shape, (x.shape, m.in_shape)
     assert (y is None) == (ew is None)
     if y is not None:
         assert y.shape == m.out_shape, (y.shape, m.out_shape)
-    plan = None if force_mode == "gather" else analyze_block_mode(m, block)
+    plan = (None if force_mode == "gather"
+            else analyze_block_mode(m, block, segment_bytes))
     if plan is not None and force_mode != "gather":
         return _block_call(x, m, plan, interpret, y=y, ew=ew)
-    return _gather_call(x, m, interpret, y=y, ew=ew)
+    return _gather_call(x, m, interpret, y=y, ew=ew,
+                        segment_bytes=segment_bytes)

@@ -1,0 +1,33 @@
+"""``repro.serving`` — compile-cached, shape-bucketed TMU serving runtime.
+
+The paper keeps the TMU and TPU overlapped with ping-pong buffers inside one
+program; this subsystem applies the same scheme at *request* granularity:
+
+* :class:`TMServer` (server.py) — the request surface: futures in, batched
+  pipelined execution, bit-exact results out;
+* :class:`CompileCache` (cache.py) — LRU over
+  ``(fn, shapes, dtypes, backend, CycleParams)`` so ``tm_compile`` runs once
+  per shape class;
+* shape-bucketed micro-batching (batcher.py) — pad/coalesce/split around
+  the vmap batch lift;
+* :class:`RequestPipeline` (pipeline.py) — two engine threads (TMU/TPU)
+  double-buffering requests through the compiled phase chains;
+* :class:`ServerStats` (stats.py) — throughput/latency/overlap accounting.
+"""
+
+from repro.serving.batcher import (BucketKey, Request, bucket_size, coalesce,
+                                   split)
+from repro.serving.cache import CacheEntry, CacheKey, CompileCache
+from repro.serving.pipeline import PipelineJob, RequestPipeline
+from repro.serving.server import (ServerConfig, TMServer, predict_cycles,
+                                  predict_overlap, select_cycle_params)
+from repro.serving.stats import ServerStats
+
+__all__ = [
+    "BucketKey", "Request", "bucket_size", "coalesce", "split",
+    "CacheEntry", "CacheKey", "CompileCache",
+    "PipelineJob", "RequestPipeline",
+    "ServerConfig", "TMServer", "predict_cycles", "predict_overlap",
+    "select_cycle_params",
+    "ServerStats",
+]

@@ -1,0 +1,167 @@
+"""Compile cache — LRU over ``(fn, shapes, dtypes, backend, CycleParams)``.
+
+``tm_compile`` pays a trace + pass-pipeline + partition + allocation walk per
+shape class; under serving traffic the same shape classes recur forever, so
+the server compiles once per :class:`CacheKey` and replays the pinned
+:class:`~repro.compiler.api.CompiledTMProgram`.
+
+Key semantics:
+
+* **fn identity** — an explicit ``fn_key`` string when the caller provides
+  one, else ``(module, qualname, id(fn))``.  The entry keeps a strong
+  reference to ``fn``, so a cached ``id`` can never be recycled by the
+  allocator while the entry is alive (two different lambdas can therefore
+  never alias one entry).
+* **shapes/dtypes** — of the *flattened, batched* arguments (the bucketed
+  shape class, not the raw request).
+* **backend / params** — the *requested* execution config; the entry pins
+  the *selected* winner (config selection may sweep candidates at admission
+  and store its choice on the entry).
+
+Concurrent misses on one key de-duplicate: the first caller compiles, the
+rest wait on an in-flight event and count as hits (they never pay the
+compile).  Eviction is LRU by last access.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from collections import OrderedDict
+from typing import Any, Callable
+
+import jax
+
+from repro.core.schedule import CycleParams
+
+
+def fn_identity(fn: Callable, fn_key: Any = None) -> Any:
+    """THE fn-identity rule, shared by bucket keys and cache keys: an
+    explicit ``fn_key`` wins, else ``(module, qualname, id)`` (the id is
+    pinned by the entry's strong reference to ``fn``)."""
+    if fn_key is not None:
+        return fn_key
+    return (getattr(fn, "__module__", "?"),
+            getattr(fn, "__qualname__", repr(fn)), id(fn))
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheKey:
+    fn_key: Any                     # str | (module, qualname, id)
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[str, ...]
+    backend: str
+    params: CycleParams | None      # requested (None = auto/default)
+
+    @staticmethod
+    def for_call(fn, args, *, backend: str,
+                 params: CycleParams | None = None,
+                 fn_key: str | None = None) -> "CacheKey":
+        flat, _ = jax.tree_util.tree_flatten(args)
+        shapes = tuple(tuple(int(d) for d in getattr(a, "shape", ()))
+                       for a in flat)
+        dtypes = tuple(str(jax.numpy.asarray(a).dtype) for a in flat)
+        return CacheKey(fn_identity(fn, fn_key), shapes, dtypes, backend,
+                        params)
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One pinned compilation + the admission-time config decision."""
+
+    key: CacheKey
+    fn: Callable                    # strong ref: pins id(fn) while cached
+    compiled: Any                   # CompiledTMProgram
+    backend: str                    # selected (may differ from key.backend)
+    params: CycleParams | None      # selected cycle params (pinned winner)
+    selection: dict = dataclasses.field(default_factory=dict)
+    compile_s: float = 0.0
+    hits: int = 0
+
+
+class CompileCache:
+    """Thread-safe LRU compile cache with hit/miss/eviction stats."""
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: "OrderedDict[CacheKey, CacheEntry]" = OrderedDict()
+        self._inflight: dict[CacheKey, threading.Event] = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def keys(self) -> list[CacheKey]:
+        with self._lock:
+            return list(self._entries)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def get(self, key: CacheKey) -> CacheEntry | None:
+        """Plain lookup (counts a hit/miss; no compile, no de-dup)."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(key)
+            self.hits += 1
+            entry.hits += 1
+            return entry
+
+    def get_or_compile(self, key: CacheKey,
+                       build: Callable[[], CacheEntry],
+                       ) -> tuple[CacheEntry, bool]:
+        """Return ``(entry, was_hit)``; ``build()`` runs at most once per key
+        across concurrent callers (losers wait and count as hits)."""
+        while True:
+            with self._lock:
+                entry = self._entries.get(key)
+                if entry is not None:
+                    self._entries.move_to_end(key)
+                    self.hits += 1
+                    entry.hits += 1
+                    return entry, True
+                event = self._inflight.get(key)
+                if event is None:
+                    self._inflight[key] = threading.Event()
+                    self.misses += 1
+                    break
+            # another thread is compiling this key: wait, then re-check (the
+            # re-check counts the hit; a failed compile falls through to retry)
+            event.wait()
+        try:
+            entry = build()
+        except BaseException:
+            with self._lock:
+                self._inflight.pop(key).set()
+            raise
+        with self._lock:
+            self._entries[key] = entry
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+            self._inflight.pop(key).set()
+        return entry, False
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "entries": len(self._entries),
+                "capacity": self.capacity,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "hit_rate": (self.hits / (self.hits + self.misses)
+                             if (self.hits + self.misses) else 0.0),
+            }

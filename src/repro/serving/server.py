@@ -1,0 +1,406 @@
+"""``TMServer`` — compile-cached, shape-bucketed, pipelined TMU serving.
+
+The request path:
+
+1. ``submit(fn, *args)`` queues the call in its shape bucket
+   (:mod:`repro.serving.batcher`) and returns a future.
+2. The batcher thread coalesces up to ``max_batch`` same-bucket requests
+   (waiting at most ``batch_timeout_s`` for stragglers), pads the batch to a
+   power-of-two height, and admits it.
+3. Admission hits the compile cache (:mod:`repro.serving.cache`); a miss
+   compiles ``jax.vmap(fn)`` at the bucketed shape once via ``tm_compile``
+   and runs **config selection**: every candidate ``segment_bytes`` is swept
+   through the cycle model (re-partitioning is pure Python — no re-trace)
+   and the winner is pinned on the entry, so the entry's Pallas grids launch
+   at the budget the model chose.  When ``backend_candidates`` is set, each
+   candidate backend executes the admission batch once and the fastest is
+   pinned (a measured probe — the cycle model is backend-agnostic).
+4. The compiled program's phase chain becomes a
+   :class:`~repro.serving.pipeline.PipelineJob`: the TMU engine runs request
+   *i+1*'s manipulation phases while the TPU engine runs request *i*'s
+   opaque compute — the paper's ping-pong double buffering at request
+   granularity, with the cycle model's predicted overlap recorded next to
+   the measured one.
+5. Results are split back per request and futures resolve bit-exact with
+   direct ``fn(*args)`` calls.
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import dataclasses
+import threading
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.compiler.allocate import allocate
+from repro.compiler.api import CompiledTMProgram, tm_compile
+from repro.compiler.partition import partition
+from repro.core.executor import BACKENDS
+from repro.core.schedule import CycleParams
+from repro.serving.batcher import (BucketQueue, Request, bucket_size,
+                                   coalesce, split)
+from repro.serving.cache import (CacheEntry, CacheKey, CompileCache,
+                                 fn_identity)
+from repro.serving.pipeline import PipelineJob, RequestPipeline
+from repro.serving.stats import ServerStats
+
+DEFAULT_SEGMENT_CANDIDATES = (4096, 16384, 65536)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServerConfig:
+    """Serving knobs (all per-server, immutable once started)."""
+
+    backend: str = "fused"          # requested backend (cache-key component)
+    backend_candidates: tuple[str, ...] = ()  # non-empty: probe + pin winner
+    interpret: bool = True          # Pallas interpreter mode (CPU-safe)
+    max_batch: int = 8              # micro-batch height cap (power of two)
+    batch_timeout_s: float = 0.005  # max straggler wait before dispatch
+    cache_capacity: int = 32        # compile-cache entries (LRU)
+    pipeline_depth: int = 2         # in-flight jobs (2 = ping-pong pair)
+    segment_candidates: tuple[int, ...] = DEFAULT_SEGMENT_CANDIDATES
+    select_config: bool = True      # sweep segment_candidates at admission
+    launch_overhead_cycles: float = 32.0  # per-block-iteration sweep charge
+
+    def __post_init__(self):
+        for b in (self.backend,) + self.backend_candidates:
+            if b not in BACKENDS:
+                raise ValueError(f"unknown backend {b!r}; expected {BACKENDS}")
+        if self.max_batch < 1 or self.max_batch & (self.max_batch - 1):
+            raise ValueError(f"max_batch must be a power of two, "
+                             f"got {self.max_batch}")
+
+
+# ---------------------------------------------------------------------------
+# cycle-model scoring: config selection + predicted pipeline overlap
+# ---------------------------------------------------------------------------
+
+def select_cycle_params(graph, candidates: tuple[int, ...],
+                        launch_overhead_cycles: float = 32.0,
+                        ) -> tuple[CycleParams, Any, list[dict]]:
+    """Sweep ``segment_bytes`` candidates through the cycle model; return
+    ``(winner, its PartitionReport, per-candidate rows)``.
+
+    Partitioning is pure Python over the already-optimized graph, so the
+    sweep costs no re-trace; thanks to the executor→kernel budget plumbing
+    the winner also re-sizes the launched Pallas grids, keeping the model's
+    segment counts equal to the grids it scored.
+
+    Scoring charges ``launch_overhead_cycles`` per block iteration on top of
+    the model's forwarded cycles: the per-instruction model amortizes
+    fill/drain ever further as segments shrink, so without a per-launch
+    charge the sweep degenerates to the smallest candidate — which is not
+    how kernel launches behave."""
+    sweep = list(dict.fromkeys(candidates or ())) or \
+        [CycleParams().segment_bytes]
+    best: tuple[CycleParams, Any, float] | None = None
+    rows = []
+    for sb in sweep:
+        params = CycleParams(segment_bytes=int(sb))
+        part = partition(graph, params)
+        n_segs = sum(t.n_segments for ph in part.tmu_phases
+                     for t in ph.schedule.timings)
+        score = part.forwarded_cycles + launch_overhead_cycles * n_segs
+        rows.append({"segment_bytes": int(sb),
+                     "forwarded_cycles": part.forwarded_cycles,
+                     "unpipelined_cycles": part.unpipelined_cycles,
+                     "segments": n_segs, "score": score})
+        if best is None or score < best[2]:
+            best = (params, part, score)
+    return best[0], best[1], rows
+
+
+def predict_cycles(compiled: CompiledTMProgram) -> tuple[float, float]:
+    """(TMU cycles, TPU-proxy cycles) for one execution of ``compiled``.
+
+    TMU cycles are the scheduled (forwarded) cycle model; the TPU side has
+    no microarchitectural model here, so its proxy is the data-movement
+    floor — every opaque node's inputs+outputs through the same port."""
+    p = compiled.params or CycleParams()
+    tmu = compiled.partition_report.forwarded_cycles
+    tpu = 0.0
+    for node in compiled.graph.tpu_nodes():
+        elems = sum(
+            _size(compiled.graph.shape(n))
+            for n in tuple(node.src_names) + tuple(node.dst_names)
+            if n is not None)
+        tpu += elems * p.itemsize / p.bandwidth_bytes
+    return tmu, tpu
+
+
+def _size(shape: tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def predict_overlap(compiled: CompiledTMProgram) -> float:
+    """Steady-state fraction of busy time the two-engine pipeline hides:
+    serial = tmu+tpu per request, pipelined = max(tmu, tpu), hidden =
+    min/(tmu+tpu) — directly comparable to the measured overlap ratio."""
+    tmu, tpu = predict_cycles(compiled)
+    total = tmu + tpu
+    return min(tmu, tpu) / total if total > 0 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+
+class TMServer:
+    """Serve JAX functions through the TMU compile/execute stack.
+
+    Usage::
+
+        with TMServer(ServerConfig(max_batch=4)) as srv:
+            fut = srv.submit(my_fn, x)        # batched + pipelined
+            y = fut.result()                  # == my_fn(x), bit-exact
+            y2 = srv(my_fn, x2)               # synchronous convenience
+            print(srv.snapshot_stats())
+    """
+
+    def __init__(self, config: ServerConfig | None = None):
+        self.config = config or ServerConfig()
+        self.stats = ServerStats()
+        self.cache = CompileCache(capacity=self.config.cache_capacity)
+        self.pipeline = RequestPipeline(stats=self.stats,
+                                        depth=self.config.pipeline_depth)
+        self._queue = BucketQueue()
+        self._batcher: threading.Thread | None = None
+        self._admit_pool: concurrent.futures.ThreadPoolExecutor | None = None
+        self._stopping = False
+        self._started = False
+        self._outstanding = 0
+        self._idle = threading.Condition()
+
+    # --- lifecycle --------------------------------------------------------
+    def start(self) -> "TMServer":
+        if self._started:
+            return self
+        self._started = True
+        self._stopping = False
+        self.pipeline.start()
+        self._admit_pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=2, thread_name_prefix="tm-serve-admit")
+        self._batcher = threading.Thread(target=self._batch_loop,
+                                         name="tm-serve-batcher", daemon=True)
+        self._batcher.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain queued work, then stop the batcher, admission workers and
+        both engines."""
+        if not self._started:
+            return
+        with self._queue.nonempty:
+            self._stopping = True
+            self._queue.nonempty.notify_all()
+        self._batcher.join()
+        self._admit_pool.shutdown(wait=True)
+        self.pipeline.stop()
+        self._started = False
+
+    def __enter__(self) -> "TMServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # --- request surface --------------------------------------------------
+    def submit(self, fn: Callable, *args,
+               fn_key: str | None = None) -> concurrent.futures.Future:
+        """Queue ``fn(*args)``; the future resolves to exactly its result."""
+        req = Request(fn=fn, fn_key=fn_identity(fn, fn_key), args=args,
+                      future=concurrent.futures.Future())
+        with self._idle:
+            self._outstanding += 1
+        # the running-state check happens under the queue lock, so a push can
+        # never land after the batcher observed _stopping and drained
+        ok = self._queue.push(
+            req, allow=lambda: self._started and not self._stopping)
+        if not ok:
+            self._release(1)
+            raise RuntimeError("server is not running (use `with TMServer()`)")
+        self.stats.record_submit()
+        return req.future
+
+    def __call__(self, fn: Callable, *args, fn_key: str | None = None):
+        return self.submit(fn, *args, fn_key=fn_key).result()
+
+    def flush(self, timeout: float | None = None) -> bool:
+        """Block until every submitted request has resolved."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._idle:
+            while self._outstanding:
+                left = (None if deadline is None
+                        else max(0.0, deadline - time.monotonic()))
+                if left == 0.0:
+                    return False
+                self._idle.wait(timeout=0.05 if left is None
+                                else min(left, 0.05))
+            return True
+
+    def snapshot_stats(self) -> dict:
+        snap = self.stats.snapshot()
+        snap["cache"] = self.cache.snapshot()
+        return snap
+
+    # --- batcher thread ---------------------------------------------------
+    def _batch_loop(self) -> None:
+        cfg = self.config
+        q = self._queue
+        while True:
+            with q.nonempty:
+                while True:
+                    # a full batch anywhere dispatches immediately — never
+                    # held hostage by an older partial head's timeout
+                    batch = q.pop_full(cfg.max_batch)
+                    if batch:
+                        break
+                    head, _ = q.head_info()
+                    if head is None:
+                        if self._stopping:
+                            return
+                        q.nonempty.wait(timeout=0.05)
+                        continue
+                    deadline = head.t_submit + cfg.batch_timeout_s
+                    now = time.monotonic()
+                    if now >= deadline or self._stopping:
+                        batch = q.pop_bucket(cfg.max_batch)
+                        break
+                    q.nonempty.wait(timeout=min(deadline - now, 0.05))
+            # admission (compile on miss) runs off-thread so cold shape
+            # classes never stall dispatch of warm traffic
+            self._admit_pool.submit(self._process_batch, batch)
+
+    def _process_batch(self, batch: list[Request]) -> None:
+        cfg = self.config
+        # transition futures to RUNNING so a client cancel() can no longer
+        # race set_result(); drop requests cancelled while queued
+        live = []
+        t_now = time.monotonic()
+        for r in batch:
+            if r.future.set_running_or_notify_cancel():
+                live.append(r)
+            else:
+                self.stats.record_done(t_now - r.t_submit, cold=False,
+                                       failed=True)
+                self._release(1)
+        batch = live
+        if not batch:
+            return
+        n = len(batch)
+        try:
+            size = bucket_size(n, cfg.max_batch)
+            stacked, pad = coalesce(batch, size)
+            self.stats.record_batch(n, pad)
+            key = CacheKey.for_call(batch[0].fn, stacked,
+                                    backend=cfg.backend, params=None,
+                                    fn_key=batch[0].fn_key)
+            entry, hit = self.cache.get_or_compile(
+                key, lambda: self._build_entry(key, batch[0].fn, stacked))
+        except BaseException as e:  # noqa: BLE001 — delivered to futures
+            self._fail_batch(batch, e, cold=True)
+            return
+        compiled = entry.compiled
+        try:
+            env = compiled.bind_inputs(*stacked)
+        except BaseException as e:  # noqa: BLE001
+            self._fail_batch(batch, e, cold=not hit)
+            return
+        steps = []
+        for phase in compiled.partition_report.phases:
+            steps.append((
+                "tpu" if phase.kind == "tpu" else "tmu",
+                lambda ph=phase: self._run_phase(compiled, ph, env,
+                                                 entry.backend)))
+
+        def on_done(err: BaseException | None) -> None:
+            t_end = time.monotonic()
+            parts: list = []
+            if err is None:
+                try:
+                    parts = split(compiled.outputs_from(env), n)
+                except BaseException as e:  # noqa: BLE001 — futures must
+                    err = e                 # resolve no matter what
+            if err is not None:
+                for r in batch:
+                    r.future.set_exception(err)
+                    self.stats.record_done(t_end - r.t_submit,
+                                           cold=not hit, failed=True)
+            else:
+                for r, res in zip(batch, parts):
+                    r.future.set_result(res)
+                    self.stats.record_done(t_end - r.t_submit, cold=not hit)
+            self._release(n)
+
+        try:
+            self.pipeline.submit(PipelineJob(
+                steps=steps, on_done=on_done,
+                label=f"{batch[0].fn_key}x{size}"))
+        except BaseException as e:  # noqa: BLE001 — shutdown race
+            self._fail_batch(batch, e, cold=not hit)
+
+    def _run_phase(self, compiled: CompiledTMProgram, phase, env: dict,
+                   backend: str) -> None:
+        compiled.run_phase(phase, env, backend=backend,
+                           interpret=self.config.interpret)
+        # engine busy time must be compute, not async dispatch latency
+        if phase.kind == "tpu":
+            produced = [n for i in phase.node_indices
+                        for n in compiled.graph.nodes[i].dst_names]
+        else:
+            produced = list(phase.program.outputs)
+        jax.block_until_ready([env[name] for name in produced])
+
+    def _fail_batch(self, batch: list[Request], err: BaseException,
+                    *, cold: bool) -> None:
+        t_end = time.monotonic()
+        for r in batch:
+            r.future.set_exception(err)
+            self.stats.record_done(t_end - r.t_submit, cold=cold, failed=True)
+        self._release(len(batch))
+
+    def _release(self, n: int) -> None:
+        with self._idle:
+            self._outstanding -= n
+            self._idle.notify_all()
+
+    # --- admission: compile + per-entry config selection ------------------
+    def _build_entry(self, key: CacheKey, fn: Callable,
+                     stacked_args: tuple) -> CacheEntry:
+        cfg = self.config
+        t0 = time.perf_counter()
+        compiled = tm_compile(jax.vmap(fn), *stacked_args)
+        selection: dict = {}
+        if cfg.select_config:
+            params, part, rows = select_cycle_params(
+                compiled.graph, cfg.segment_candidates,
+                cfg.launch_overhead_cycles)
+            scratch = allocate(compiled.graph, part, params)
+            compiled = dataclasses.replace(
+                compiled, partition_report=part, scratch_plan=scratch,
+                params=params)
+            selection["segment_bytes"] = {
+                "winner": params.segment_bytes, "sweep": rows}
+        backend = cfg.backend
+        if cfg.backend_candidates:
+            walls: dict[str, float] = {}
+            for cand in dict.fromkeys(cfg.backend_candidates):
+                t = time.perf_counter()
+                jax.block_until_ready(
+                    compiled.run(*stacked_args, backend=cand,
+                                 interpret=cfg.interpret)[0])
+                walls[cand] = time.perf_counter() - t
+            backend = min(walls, key=walls.get)
+            selection["backend_probe_s"] = walls
+        overlap = predict_overlap(compiled)
+        self.stats.record_predicted_overlap(overlap)
+        selection["predicted_overlap"] = overlap
+        return CacheEntry(key=key, fn=fn, compiled=compiled, backend=backend,
+                          params=compiled.params, selection=selection,
+                          compile_s=time.perf_counter() - t0)

@@ -1,0 +1,162 @@
+"""Serving counters: batching, latency, and pipeline-overlap accounting.
+
+One :class:`ServerStats` instance is shared by the batcher, the compile
+cache, and the two pipeline engines; everything is guarded by a single lock
+(counts are tiny compared to the work they describe).  ``snapshot()`` returns
+a plain dict — the benchmark rows and the ``/stats`` surface of
+:class:`~repro.serving.server.TMServer`.
+
+Overlap accounting mirrors the paper's ping-pong measurement at request
+granularity: engines mark busy/idle transitions (``engine_begin`` /
+``engine_end``), and the stats accumulate time with ≥1 engine busy vs. time
+with both busy — so idle gaps between request arrivals never count against
+the pipeline.  The measured overlap ratio is the fraction of total busy
+time hidden by running the two engines concurrently (0 = fully serialized,
+→0.5 = perfectly overlapped equal stages).  The *predicted* ratio comes
+from the cycle model at admission time
+(:func:`repro.serving.server.predict_overlap`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+
+def _percentile(sorted_xs: list[float], q: float) -> float:
+    if not sorted_xs:
+        return 0.0
+    i = min(len(sorted_xs) - 1, int(q * (len(sorted_xs) - 1) + 0.5))
+    return sorted_xs[i]
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Mutable, lock-guarded serving counters."""
+
+    requests: int = 0
+    completed: int = 0
+    failed: int = 0
+    batches: int = 0
+    batched_requests: int = 0          # real rows across all batches
+    pad_rows: int = 0                  # synthetic rows added by bucketing
+
+    cold_latency_s: list = dataclasses.field(default_factory=list)
+    warm_latency_s: list = dataclasses.field(default_factory=list)
+
+    # pipeline engines: busy seconds, time >=1 / ==2 engines busy, and the
+    # activity span (first start .. last end; includes arrival gaps)
+    engine_busy_s: dict = dataclasses.field(
+        default_factory=lambda: {"tmu": 0.0, "tpu": 0.0})
+    any_busy_s: float = 0.0
+    both_busy_s: float = 0.0
+    span_start: float | None = None
+    span_end: float | None = None
+
+    predicted_overlap: list = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self._lock = threading.Lock()
+        self._active: dict[str, float] = {}   # kind -> begin timestamp
+        self._last_transition: float | None = None
+
+    # --- recording --------------------------------------------------------
+    def record_submit(self, n: int = 1) -> None:
+        with self._lock:
+            self.requests += n
+
+    def record_batch(self, size: int, pad: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self.batched_requests += size
+            self.pad_rows += pad
+
+    def record_done(self, latency_s: float, *, cold: bool,
+                    failed: bool = False) -> None:
+        with self._lock:
+            if failed:  # errors and cancels: counted, kept out of the
+                self.failed += 1  # serve-latency percentiles
+                return
+            self.completed += 1
+            (self.cold_latency_s if cold else
+             self.warm_latency_s).append(latency_s)
+
+    def _transition(self, now: float) -> None:
+        """Caller holds the lock: charge the elapsed slice to the current
+        concurrency level before the engine set changes."""
+        if self._last_transition is not None and self._active:
+            dt = now - self._last_transition
+            self.any_busy_s += dt
+            if len(self._active) >= 2:
+                self.both_busy_s += dt
+        self._last_transition = now
+
+    def engine_begin(self, kind: str) -> float:
+        now = time.monotonic()
+        with self._lock:
+            self._transition(now)
+            self._active[kind] = now
+            if self.span_start is None or now < self.span_start:
+                self.span_start = now
+        return now
+
+    def engine_end(self, kind: str) -> None:
+        now = time.monotonic()
+        with self._lock:
+            self._transition(now)
+            begin = self._active.pop(kind, now)
+            self.engine_busy_s[kind] += now - begin
+            if self.span_end is None or now > self.span_end:
+                self.span_end = now
+
+    def record_predicted_overlap(self, ratio: float) -> None:
+        with self._lock:
+            self.predicted_overlap.append(ratio)
+
+    # --- derived ----------------------------------------------------------
+    def overlap_ratio(self) -> float:
+        """Measured: fraction of engine busy time hidden by concurrency
+        (idle gaps between requests are excluded — only busy time counts)."""
+        with self._lock:
+            busy = self.any_busy_s + self.both_busy_s
+            if busy <= 0.0:
+                return 0.0
+            return self.both_busy_s / busy
+
+    def mean_batch_size(self) -> float:
+        with self._lock:
+            if not self.batches:
+                return 0.0
+            return self.batched_requests / self.batches
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            cold = sorted(self.cold_latency_s)
+            warm = sorted(self.warm_latency_s)
+            busy = dict(self.engine_busy_s)
+            span = (self.span_end - self.span_start
+                    if self.span_start is not None
+                    and self.span_end is not None else 0.0)
+            pred = (sum(self.predicted_overlap) / len(self.predicted_overlap)
+                    if self.predicted_overlap else 0.0)
+            snap = {
+                "requests": self.requests,
+                "completed": self.completed,
+                "failed": self.failed,
+                "batches": self.batches,
+                "batched_requests": self.batched_requests,
+                "pad_rows": self.pad_rows,
+                "mean_batch_size": (self.batched_requests / self.batches
+                                    if self.batches else 0.0),
+                "cold_latency_p50_s": _percentile(cold, 0.5),
+                "warm_latency_p50_s": _percentile(warm, 0.5),
+                "warm_latency_p95_s": _percentile(warm, 0.95),
+                "engine_busy_s": busy,
+                "any_busy_s": self.any_busy_s,
+                "both_busy_s": self.both_busy_s,
+                "pipeline_span_s": span,
+                "predicted_overlap": pred,
+            }
+        snap["overlap_ratio"] = self.overlap_ratio()
+        return snap

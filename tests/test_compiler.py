@@ -272,3 +272,58 @@ def test_pass_report_summary_prints_pipeline(rng):
     text = c.report()
     for token in ("compose-maps", "epilogue-sink", "phases", "scratch"):
         assert token in text, text
+
+
+# ---------------------------------------------------------------------------
+# dynamic_slice matching (constant starts)
+# ---------------------------------------------------------------------------
+
+def test_dynamic_slice_constant_starts_matches(rng):
+    x = jnp.asarray(rng.rand(5, 7, 3).astype(np.float32))
+    fn = lambda a: jax.lax.dynamic_slice(a, (1, 2, 0), (2, 3, 3))
+    c = tm_compile(fn, x)
+    assert "dynamic_slice" in c.matched_prims
+    (node,) = [n for n in c.graph.nodes if n.kind == "tmu"]
+    assert node.instr.opcode == TMOpcode.COARSE
+    assert len(node.instr.srcs) == 1  # start operands folded into the map
+    for backend in ("reference", "fused", "pallas"):
+        got = c(x, backend=backend)
+        assert np.array_equal(np.asarray(got), np.asarray(fn(x))), backend
+
+
+def test_dynamic_slice_clamps_out_of_range_starts(rng):
+    # lax clamps start 4 -> 3 (=5-2) and 6 -> 4 (=7-3); the map must agree
+    x = jnp.asarray(rng.rand(5, 7, 3).astype(np.float32))
+    fn = lambda a: jax.lax.dynamic_slice(a, (4, 6, 0), (2, 3, 3))
+    c = tm_compile(fn, x)
+    assert "dynamic_slice" in c.matched_prims
+    assert np.array_equal(np.asarray(c(x)), np.asarray(fn(x)))
+
+
+def test_dynamic_slice_traced_start_stays_opaque(rng):
+    x = jnp.asarray(rng.rand(5, 7, 3).astype(np.float32))
+    fn = lambda a, i: jax.lax.dynamic_slice(a, (i, 0, 0), (2, 3, 3))
+    c = tm_compile(fn, x, jnp.int32(1))
+    assert "dynamic_slice" not in c.matched_prims  # runtime start: TPU node
+    assert np.array_equal(np.asarray(c(x, jnp.int32(1))),
+                          np.asarray(fn(x, jnp.int32(1))))
+
+
+def test_traced_dynamic_slice_does_not_trigger_pjit_inlining(rng):
+    # a jitted block whose only TM-shaped eqn is a dynamic_slice with a
+    # traced start must stay one opaque TPU node (no per-eqn explosion)
+    x = jnp.asarray(rng.rand(6, 6).astype(np.float32))
+
+    @jax.jit
+    def inner(a, i):
+        h = jnp.dot(a, a)  # opaque compute, no other matchable eqns
+        return jax.lax.dynamic_slice(h, (i, 0), (2, 6))
+
+    c = tm_compile(lambda a, i: inner(a, i) + 0.0, x, jnp.int32(1))
+    assert "dynamic_slice" not in c.matched_prims
+    kinds = [n.kind for n in c.graph.nodes]
+    # the pjit stayed one opaque node (+ the outer scalar add): no explosion
+    assert kinds == ["tpu", "tpu"], kinds
+    got = c(x, jnp.int32(1))
+    assert np.array_equal(np.asarray(got),
+                          np.asarray(inner(x, jnp.int32(1)) + 0.0))

@@ -1,0 +1,393 @@
+"""Serving-runtime tests: cache, batcher, pipeline, TMServer soak.
+
+The acceptance bar: N threads x M mixed-shape requests through TMServer are
+bit-exact against direct ``fn`` calls on every executor backend; the compile
+cache's hit/eviction accounting is deterministic; bucket padding handles odd
+shapes; and a custom segment budget visibly reconfigures the Pallas grids.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import affine as af
+from repro.core.executor import BACKENDS, TMExecutor
+from repro.core.instr import TMInstr, TMOpcode, TMProgram
+from repro.core.schedule import CycleParams, map_segments
+from repro.serving import (CompileCache, CacheKey, PipelineJob,
+                           RequestPipeline, ServerConfig, ServerStats,
+                           TMServer, bucket_size, select_cycle_params)
+from repro.serving.batcher import coalesce, split, Request
+
+
+# module-level so every request shares one fn identity (one cache lineage)
+def _tm_fn(x, r):
+    h = jnp.transpose(x, (0, 2, 1))
+    h = h + r
+    h = jnp.flip(h, axis=1)
+    return jnp.pad(h, ((0, 0), (1, 1), (0, 0)))
+
+
+def _mk_args(rng, core):
+    b, h, w = core
+    x = jnp.asarray(rng.rand(b, h, w).astype(np.float32))
+    r = jnp.asarray(rng.rand(b, w, h).astype(np.float32))
+    return x, r
+
+
+# ---------------------------------------------------------------------------
+# compile cache
+# ---------------------------------------------------------------------------
+
+class _FakeEntry:
+    def __init__(self, tag):
+        self.tag = tag
+        self.hits = 0
+
+
+def _key(tag, shape=(4, 4)):
+    return CacheKey(fn_key=tag, shapes=(shape,), dtypes=("float32",),
+                    backend="fused", params=None)
+
+
+def test_cache_lru_eviction_and_stats():
+    cache = CompileCache(capacity=2)
+    a, b, c = _key("a"), _key("b"), _key("c")
+    for k in (a, b):
+        entry, hit = cache.get_or_compile(k, lambda k=k: _FakeEntry(k))
+        assert not hit
+    entry, hit = cache.get_or_compile(a, lambda: _FakeEntry("a2"))
+    assert hit and entry.tag is a  # original entry, not rebuilt
+    # c evicts b (a was just touched -> b is LRU)
+    cache.get_or_compile(c, lambda: _FakeEntry(c))
+    assert cache.evictions == 1
+    assert set(cache.keys()) == {a, c}
+    _, hit = cache.get_or_compile(b, lambda: _FakeEntry("b2"))
+    assert not hit  # b was evicted
+    assert cache.hits == 1 and cache.misses == 4
+    assert cache.hit_rate == pytest.approx(0.2)
+
+
+def test_cache_concurrent_misses_compile_once():
+    cache = CompileCache(capacity=4)
+    k = _key("shared")
+    built, results, barrier = [], [], threading.Barrier(4)
+
+    def worker():
+        barrier.wait()
+        def build():
+            built.append(1)
+            return _FakeEntry("x")
+        results.append(cache.get_or_compile(k, build))
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(built) == 1  # in-flight de-dup: one compile
+    assert len({id(e) for e, _ in results}) == 1
+    assert cache.misses == 1 and cache.hits == 3
+
+
+def test_cache_failed_build_not_cached():
+    cache = CompileCache(capacity=2)
+    k = _key("boom")
+    with pytest.raises(RuntimeError):
+        cache.get_or_compile(k, lambda: (_ for _ in ()).throw(
+            RuntimeError("compile failed")))
+    entry, hit = cache.get_or_compile(k, lambda: _FakeEntry("ok"))
+    assert not hit and entry.tag == "ok"
+
+
+# ---------------------------------------------------------------------------
+# batcher: bucket sizing, pad/coalesce/split on odd shapes
+# ---------------------------------------------------------------------------
+
+def test_bucket_size_rounds_to_power_of_two():
+    assert [bucket_size(n, 8) for n in (1, 2, 3, 4, 5, 7, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 8, 8]
+
+
+def test_coalesce_split_odd_shapes_roundtrip():
+    rng = np.random.RandomState(0)
+    reqs = [Request(fn=_tm_fn, fn_key="k", args=_mk_args(rng, (1, 3, 5)),
+                    future=None) for _ in range(3)]
+    stacked, pad = coalesce(reqs, 4)
+    assert pad == 1
+    assert stacked[0].shape == (4, 1, 3, 5) and stacked[1].shape == (4, 1, 5, 3)
+    # the pad row repeats the last real request
+    assert np.array_equal(np.asarray(stacked[0][3]), np.asarray(reqs[2].args[0]))
+    parts = split(stacked, 3)
+    for req, part in zip(reqs, parts):
+        assert np.array_equal(np.asarray(part[0]), np.asarray(req.args[0]))
+        assert np.array_equal(np.asarray(part[1]), np.asarray(req.args[1]))
+
+
+# ---------------------------------------------------------------------------
+# pipeline: per-job phase order, cross-job overlap admission
+# ---------------------------------------------------------------------------
+
+def test_pipeline_preserves_phase_order_and_drains():
+    log, lock = [], threading.Lock()
+    done = []
+
+    def step(tag):
+        def run():
+            with lock:
+                log.append(tag)
+        return run
+
+    pipe = RequestPipeline(stats=ServerStats(), depth=2)
+    pipe.start()
+    jobs = []
+    for j in range(4):
+        steps = [("tmu", step((j, 0))), ("tpu", step((j, 1))),
+                 ("tmu", step((j, 2)))]
+        jobs.append(PipelineJob(steps=steps,
+                                on_done=lambda err, j=j: done.append((j, err))))
+    for job in jobs:
+        pipe.submit(job)
+    pipe.stop()
+    assert sorted(done) == [(j, None) for j in range(4)]
+    for j in range(4):
+        mine = [t for t in log if t[0] == j]
+        assert mine == [(j, 0), (j, 1), (j, 2)]  # in-order phases per job
+
+
+def test_pipeline_reports_failure_once():
+    done = []
+    pipe = RequestPipeline(depth=2)
+    pipe.start()
+    pipe.submit(PipelineJob(
+        steps=[("tmu", lambda: None),
+               ("tpu", lambda: (_ for _ in ()).throw(ValueError("phase")))],
+        on_done=lambda err: done.append(err)))
+    pipe.stop()
+    assert len(done) == 1 and isinstance(done[0], ValueError)
+
+
+# ---------------------------------------------------------------------------
+# TMServer: padding, cache accounting, config selection
+# ---------------------------------------------------------------------------
+
+def test_server_pads_odd_batch_and_matches_direct_calls():
+    rng = np.random.RandomState(1)
+    reqs = [_mk_args(rng, (1, 3, 5)) for _ in range(3)]
+    cfg = ServerConfig(max_batch=4, batch_timeout_s=0.25)
+    with TMServer(cfg) as srv:
+        futs = [srv.submit(_tm_fn, *a) for a in reqs]
+        for args, fut in zip(reqs, futs):
+            got = np.asarray(fut.result(timeout=120))
+            assert np.array_equal(got, np.asarray(_tm_fn(*args)))
+        snap = srv.snapshot_stats()
+    assert snap["batches"] == 1          # coalesced within the timeout window
+    assert snap["pad_rows"] == 1         # 3 real rows padded to bucket 4
+    assert snap["cache"]["misses"] == 1
+
+
+def test_server_cache_hits_and_eviction():
+    rng = np.random.RandomState(2)
+    cfg = ServerConfig(max_batch=1, batch_timeout_s=0.0, cache_capacity=2,
+                       select_config=False)
+    shapes = [(1, 3, 4), (1, 3, 4), (1, 4, 6), (1, 2, 3), (1, 3, 4)]
+    with TMServer(cfg) as srv:
+        for core in shapes:  # sequential: deterministic LRU traffic
+            args = _mk_args(rng, core)
+            got = srv(_tm_fn, *args)
+            assert np.array_equal(np.asarray(got), np.asarray(_tm_fn(*args)))
+        snap = srv.snapshot_stats()["cache"]
+    # miss, hit, miss, miss(evicts (1,3,4)), miss(evicts (1,4,6))
+    assert snap["hits"] == 1
+    assert snap["misses"] == 4
+    assert snap["evictions"] == 2
+    assert snap["hit_rate"] == pytest.approx(0.2)
+
+
+def test_server_config_selection_pins_candidate():
+    rng = np.random.RandomState(3)
+    cfg = ServerConfig(max_batch=1, batch_timeout_s=0.0,
+                       segment_candidates=(2048, 16384))
+    with TMServer(cfg) as srv:
+        args = _mk_args(rng, (1, 8, 16))
+        srv(_tm_fn, *args)
+        (key,) = srv.cache.keys()
+        entry = srv.cache.get(key)
+    assert entry.params is not None
+    assert entry.params.segment_bytes in (2048, 16384)
+    sweep = entry.selection["segment_bytes"]["sweep"]
+    assert [r["segment_bytes"] for r in sweep] == [2048, 16384]
+    assert all("score" in r and "forwarded_cycles" in r for r in sweep)
+    assert entry.compiled.params == entry.params  # pinned into execution
+
+
+def test_select_cycle_params_prefers_lower_score():
+    from repro.compiler import tm_compile
+    rng = np.random.RandomState(4)
+    args = _mk_args(rng, (1, 8, 16))
+    compiled = tm_compile(_tm_fn, *args)
+    params, part, rows = select_cycle_params(compiled.graph, (1024, 16384))
+    best = min(rows, key=lambda r: r["score"])
+    assert params.segment_bytes == best["segment_bytes"]
+    assert part.forwarded_cycles == best["forwarded_cycles"]
+
+
+# ---------------------------------------------------------------------------
+# concurrent soak: N threads x M mixed-shape requests, every backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_server_concurrent_soak_bit_exact(backend):
+    n_threads, n_per_thread = 4, 5
+    cfg = ServerConfig(max_batch=2, batch_timeout_s=0.002, backend=backend)
+    cores = [(1, 3, 5), (2, 4, 6)]
+    failures = []
+    with TMServer(cfg) as srv:
+        def client(tid):
+            rng = np.random.RandomState(100 + tid)
+            for i in range(n_per_thread):
+                args = _mk_args(rng, cores[(tid + i) % len(cores)])
+                try:
+                    got = srv(_tm_fn, *args)
+                    want = _tm_fn(*args)
+                    if not np.array_equal(np.asarray(got), np.asarray(want)):
+                        failures.append((tid, i, "mismatch"))
+                except Exception as e:  # noqa: BLE001 — collected for assert
+                    failures.append((tid, i, repr(e)))
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        snap = srv.snapshot_stats()
+    assert not failures, failures[:3]
+    assert snap["completed"] == n_threads * n_per_thread
+    assert snap["failed"] == 0
+    # batching must actually coalesce under concurrency (not all singletons)
+    assert snap["batches"] <= snap["completed"]
+
+
+# ---------------------------------------------------------------------------
+# executor thread-safety + segment-budget plumbing (satellite regressions)
+# ---------------------------------------------------------------------------
+
+def _single_map_prog(m):
+    return TMProgram([TMInstr(TMOpcode.COARSE, ("x",), "y", map_=m)],
+                     inputs=("x",), outputs=("y",))
+
+
+def test_executor_run_returns_per_call_reports():
+    m = af.transpose_map((4, 6, 8))
+    prog = _single_map_prog(m)
+    x = jnp.arange(4 * 6 * 8, dtype=jnp.int32).reshape(4, 6, 8)
+    ex = TMExecutor(backend="pallas")
+    before = ex.last_lowering
+    out, lowering, fusion = ex.run(prog, {"x": x})
+    assert ex.last_lowering is before      # run() mutates no executor state
+    assert lowering.paths() == ["pallas.block"]
+    assert fusion is None                  # pallas backend: no fusion pass
+    ex(prog, {"x": x})
+    assert ex.last_lowering is not None    # __call__ keeps the alias
+
+
+def test_executor_shared_across_threads():
+    progs = {
+        "t": (_single_map_prog(af.transpose_map((4, 6, 8))), (4, 6, 8), 1),
+        "u": (_single_map_prog(af.upsample_map((4, 6, 2), 2)), (4, 6, 2), 1),
+    }
+    ex = TMExecutor(backend="pallas")
+    errors = []
+
+    def worker(name):
+        prog, shape, n_instr = progs[name]
+        x = jnp.arange(int(np.prod(shape)), dtype=jnp.int32).reshape(shape)
+        want = TMExecutor(backend="reference")(prog, {"x": x})["y"]
+        for _ in range(5):
+            out, lowering, _ = ex.run(prog, {"x": x})
+            if len(lowering.records) != n_instr:
+                errors.append(f"{name}: report length {len(lowering.records)}")
+            if lowering.records[0].dst != "y":
+                errors.append(f"{name}: foreign record {lowering.records[0]}")
+            if not np.array_equal(np.asarray(out["y"]), np.asarray(want)):
+                errors.append(f"{name}: wrong value")
+
+    threads = [threading.Thread(target=worker, args=(n,))
+               for n in ("t", "u") * 2]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:3]
+
+
+def test_segment_budget_reconfigures_pallas_grid():
+    m = af.pixel_shuffle_map((8, 16, 16), 2)  # gather-mode map
+    prog = _single_map_prog(m)
+    x = jnp.asarray(np.random.RandomState(0).randint(
+        -99, 100, m.in_shape).astype("int32"))
+    ref = TMExecutor(backend="reference")(prog, {"x": x})["y"]
+    seen = {}
+    for sb in (None, 1024):
+        params = None if sb is None else CycleParams(segment_bytes=sb)
+        ex = TMExecutor(backend="pallas", params=params)
+        out, lowering, _ = ex.run(prog, {"x": x})
+        rec = lowering.records[0]
+        assert rec.path == "pallas.gather"
+        want_segments = (map_segments(m) if sb is None
+                         else map_segments(m, segment_bytes=sb))
+        assert rec.segments == want_segments  # grid == cycle-model count
+        assert np.array_equal(np.asarray(out["y"]), np.asarray(ref))
+        seen[sb] = rec.segments
+    assert seen[1024] > seen[None]  # the budget actually re-sized the grid
+
+
+def test_compiled_program_run_is_pure():
+    from repro.compiler import tm_compile
+    rng = np.random.RandomState(5)
+    args = _mk_args(rng, (1, 4, 6))
+    compiled = tm_compile(_tm_fn, *args)
+    before = list(compiled.last_lowering)
+    out, lowerings = compiled.run(*args, backend="pallas")
+    assert compiled.last_lowering == before   # run() leaves state alone
+    assert lowerings and all(r.backend == "pallas" for r in lowerings)
+    assert np.array_equal(np.asarray(out), np.asarray(_tm_fn(*args)))
+    compiled(*args, backend="pallas")
+    assert compiled.last_lowering  # __call__ keeps the alias behaviour
+
+
+def test_cancelled_request_is_dropped_and_server_keeps_serving():
+    rng = np.random.RandomState(6)
+    cfg = ServerConfig(max_batch=4, batch_timeout_s=0.2)
+    with TMServer(cfg) as srv:
+        args = _mk_args(rng, (1, 3, 4))
+        fut = srv.submit(_tm_fn, *args)
+        assert fut.cancel()  # still queued: cancellable
+        # the engine threads must survive the cancelled future; later
+        # requests (same and different shape classes) still serve
+        args2 = _mk_args(rng, (1, 4, 5))
+        got = srv(_tm_fn, *args2)
+        assert np.array_equal(np.asarray(got), np.asarray(_tm_fn(*args2)))
+        assert srv.flush(timeout=30)  # cancelled row released its slot
+
+
+def test_submit_after_stop_raises_instead_of_hanging():
+    srv = TMServer(ServerConfig(max_batch=1)).start()
+    srv.stop()
+    with pytest.raises(RuntimeError):
+        srv.submit(_tm_fn, jnp.ones((1, 2, 3)), jnp.ones((1, 3, 2)))
+
+
+def test_snapshot_safe_while_engine_mid_phase():
+    stats = ServerStats()
+    stats.engine_begin("tmu")       # first phase still executing
+    snap = stats.snapshot()         # must not raise on span_end=None
+    assert snap["pipeline_span_s"] == 0.0
+    stats.engine_end("tmu")
+    assert stats.snapshot()["pipeline_span_s"] >= 0.0
