@@ -1,0 +1,177 @@
+"""Forwarding-chain benchmark — per-instruction vs chain-fused execution.
+
+Runs the three CNN demo blocks (superres_tail, yolo_neck, detect_tail) through
+``tm_compile`` and executes the TM phases on the pallas backend twice:
+
+* **unfused** — one kernel launch per instruction, every intermediate
+  round-tripping HBM (the per-instruction baseline);
+* **chained** — every forwardable chain as ONE segment-streaming megakernel
+  (``fuse_chains=True``), intermediates handed off through VMEM scratch.
+
+Emitted as ``BENCH_forwarding.json`` (archived per commit by CI): kernel
+launches, modeled HBM traffic (bytes every instruction moves through the
+port, minus the round trips chaining elides), wall time, and the cycle
+model's chained-vs-pipelined comparison.
+
+Acceptance gates (per block; interpret mode, so the launch/bytes gates carry
+the architectural signal and the wall gate guards the realized win):
+
+* chained execution must issue STRICTLY FEWER launches than unfused, and
+* chained wall time must beat unfused by >= 1.3x.
+
+    PYTHONPATH=src python benchmarks/forwarding_chains.py
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.compiler import tm_compile
+from repro.models import cnn
+
+MIN_SPEEDUP = 1.3
+WARMUP, ITERS = 3, 15
+
+
+def _blocks(rng):
+    def arr(s, scale=1.0):
+        return jnp.asarray((rng.rand(*s) * scale).astype(np.float32))
+
+    return [
+        ("superres_tail", (lambda a, b: cnn.superres_tail(a, b, s=2)),
+         (arr((4, 24, 40, 8)), arr((4, 48, 80, 2)))),
+        ("yolo_neck", cnn.yolo_neck,
+         (arr((2, 13, 13, 8)), arr((2, 26, 26, 4)))),
+        ("detect_tail", (lambda p: cnn.detect_tail_raw(p, 10.0, 16)),
+         (arr((8, 13, 13, 30), 100.0),)),
+    ]
+
+
+def _walls(compiled, args) -> tuple[float, float, float]:
+    """(unfused s, chained s, speedup) from interleaved paired sampling.
+
+    Unfused and chained calls alternate within one loop so load drift on a
+    shared CI runner hits both sides equally; the reported speedup is the
+    median of per-pair ratios (robust to scheduler jitter)."""
+    def run(fuse_chains):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jax.tree_util.tree_leaves(
+            compiled.run(*args, backend="pallas",
+                         fuse_chains=fuse_chains)[0]))
+        return time.perf_counter() - t0
+    for _ in range(WARMUP):
+        run(False), run(True)
+    pairs = [(run(False), run(True)) for _ in range(ITERS)]
+    unfused = float(np.median([u for u, _ in pairs]))
+    chained = float(np.median([c for _, c in pairs]))
+    speedup = float(np.median([u / c for u, c in pairs]))
+    return unfused, chained, speedup
+
+
+def _hbm_bytes(compiled, reports=None, itemsize: int = 4) -> int:
+    """Modeled HBM traffic of the TM phases: every instruction loads its
+    sources and stores its destination.  With ``reports`` (the chained run's
+    lowering reports), each REALIZED chain record elides both the store and
+    the reload of the intermediates its claimed run streamed — declined
+    chains get no credit, so the numbers describe what actually executed."""
+    graph = compiled.graph
+    total = 0
+    tm_phases = compiled.partition_report.tmu_phases
+    for pi, ph in enumerate(tm_phases):
+        instrs = ph.program.instrs
+        for ins in instrs:
+            for s in ins.srcs:
+                total += math.prod(graph.shape(s)) * itemsize
+            total += math.prod(graph.shape(ins.dst)) * itemsize
+        if reports is None:
+            continue
+        dst_index = {ins.dst: k for k, ins in enumerate(instrs)}
+        for rec in reports[pi].records:
+            if not rec.is_chain:
+                continue
+            last = dst_index[rec.dst]
+            # the claimed run's streamed intermediates: the dsts of its
+            # instructions except the final one
+            for k in range(last - rec.instrs + 1, last):
+                total -= 2 * math.prod(graph.shape(instrs[k].dst)) * itemsize
+    return total
+
+
+def bench_block(name, fn, args) -> dict:
+    ref = fn(*args)
+    compiled = tm_compile(fn, *args)
+    out_u, reps_u = compiled.run(*args, backend="pallas")
+    out_c, reps_c = compiled.run(*args, backend="pallas", fuse_chains=True)
+    for label, out in (("unfused", out_u), ("chained", out_c)):
+        assert np.array_equal(np.asarray(ref, dtype=np.float64),
+                              np.asarray(out, dtype=np.float64)), (
+            f"{name}:{label} diverged from the raw function")
+
+    launches_u = sum(r.launch_count() for r in reps_u)
+    launches_c = sum(r.launch_count() for r in reps_c)
+    chains = sum(r.chain_count() for r in reps_c)
+    part = compiled.partition_report
+    wall_u, wall_c, speedup = _walls(compiled, args)
+    row = {
+        "block": name,
+        "chains": chains,
+        "launches_unfused": launches_u,
+        "launches_chained": launches_c,
+        "hbm_bytes_unfused": _hbm_bytes(compiled),
+        "hbm_bytes_chained": _hbm_bytes(compiled, reports=reps_c),
+        "wall_unfused_s": wall_u,
+        "wall_chained_s": wall_c,
+        "speedup": speedup,
+        "model_pipelined_cycles": part.pipelined_cycles,
+        "model_chained_cycles": part.chained_cycles,
+        "model_launches_unfused": part.launches(chained=False),
+        "model_launches_chained": part.launches(chained=True),
+        "chain_reports": [r for ph in part.tmu_phases
+                          for r in (ph.schedule.chain_reports or [])],
+    }
+    print(f"  {name}: launches {launches_u}->{launches_c} "
+          f"({chains} chain(s)), hbm {row['hbm_bytes_unfused']}"
+          f"->{row['hbm_bytes_chained']} B, "
+          f"wall {wall_u * 1e3:.2f}->{wall_c * 1e3:.2f} ms "
+          f"({row['speedup']:.2f}x)")
+    return row
+
+
+def main() -> int:
+    rng = np.random.RandomState(0)
+    print("forwarding-chain benchmark (pallas, interpret mode)")
+    rows = [bench_block(name, fn, args) for name, fn, args in _blocks(rng)]
+    report = {"blocks": rows, "min_speedup_gate": MIN_SPEEDUP}
+    with open("BENCH_forwarding.json", "w") as f:
+        json.dump(report, f, indent=2)
+    print("wrote BENCH_forwarding.json")
+
+    failures = []
+    for row in rows:
+        if row["launches_chained"] >= row["launches_unfused"]:
+            failures.append(f"{row['block']}: launches not strictly fewer "
+                            f"({row['launches_unfused']} -> "
+                            f"{row['launches_chained']})")
+        if row["hbm_bytes_chained"] >= row["hbm_bytes_unfused"]:
+            failures.append(f"{row['block']}: no HBM traffic elided")
+        if row["speedup"] < MIN_SPEEDUP:
+            failures.append(f"{row['block']}: speedup {row['speedup']:.2f}x "
+                            f"< {MIN_SPEEDUP}x gate")
+    if failures:
+        print("GATE FAILED:")
+        for f_ in failures:
+            print(" -", f_)
+        return 1
+    print(f"gates passed: strictly fewer launches + >= {MIN_SPEEDUP}x "
+          f"wall-time on all blocks")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from repro.core.schedule import CycleParams
+from repro.core.schedule import CycleParams, ping_pong_shape
 from repro.compiler.ir import TMGraph
 from repro.compiler.partition import PartitionReport
 
@@ -32,6 +32,13 @@ class ScratchPlan:
     streamed: set[str]               # buffers held at 2-segment granularity
     naive_bytes: int                 # sum of full intermediate sizes
     itemsize: int = 4
+    # streamed buffer -> its (2, row_block, minor) ping-pong pair via the
+    # shared schedule.ping_pong_shape — the VMEM scratch sizing the chain
+    # megakernel's handoff uses (repro.kernels.tm_affine.chain allocates the
+    # pair on the chain output's plan; both sides bound one slot by the same
+    # two-segment budget), so slot accounting and kernel scratch agree
+    kernel_scratch_shapes: dict[str, tuple[int, int, int]] = \
+        dataclasses.field(default_factory=dict)
 
     @property
     def total_bytes(self) -> int:
@@ -71,10 +78,16 @@ def allocate(graph: TMGraph, part: PartitionReport | None = None,
             if d not in ext:
                 live[d] = (i, i)
 
+    scratch_shapes = {name: ping_pong_shape(graph.shape(name), itemsize,
+                                            p.segment_bytes)
+                      for name in streamed}
+
     def need_bytes(name: str) -> int:
         full = math.prod(graph.shape(name)) * itemsize
         if name in streamed:
-            return min(full, 2 * p.segment_bytes)
+            # two segments of this buffer's plan — the same sizing rule the
+            # chain kernel applies to its handoff scratch pair
+            return min(full, math.prod(scratch_shapes[name]) * itemsize)
         return full
 
     naive = sum(math.prod(graph.shape(n)) * itemsize for n in live)
@@ -101,4 +114,4 @@ def allocate(graph: TMGraph, part: PartitionReport | None = None,
             slot_free_at[best] = u
     return ScratchPlan(slot_of=slot_of, slot_bytes=slot_bytes,
                        streamed=streamed, naive_bytes=naive,
-                       itemsize=itemsize)
+                       itemsize=itemsize, kernel_scratch_shapes=scratch_shapes)

@@ -96,16 +96,20 @@ class CompiledTMProgram:
 
     def run_phase(self, phase, env: dict[str, Any], *,
                   backend: str = "fused",
-                  interpret: bool = True) -> LoweringReport | None:
+                  interpret: bool = True,
+                  fuse_chains: bool = False) -> LoweringReport | None:
         """Execute one partition phase against ``env`` (mutated in place).
 
-        Returns the TM phase's lowering report (None for TPU phases)."""
+        ``fuse_chains`` (pallas backend) executes each forwarding chain of
+        the phase as ONE segment-streaming kernel — the streamed buffers of
+        the scratch plan never materialize.  Returns the TM phase's lowering
+        report (None for TPU phases)."""
         if phase.kind == "tpu":
             for i in phase.node_indices:
                 eval_tpu_node(self.graph.nodes[i], env)
             return None
         ex = TMExecutor(backend=backend, interpret=interpret,
-                        params=self.params)
+                        params=self.params, fuse_chains=fuse_chains)
         bufs = {n: env[n] for n in phase.program.inputs}
         out, lowering, _ = ex.run(phase.program, bufs)
         env.update(out)
@@ -116,7 +120,7 @@ class CompiledTMProgram:
         return jax.tree_util.tree_unflatten(self.out_tree, outs)
 
     def run(self, *args, backend: str = "fused", interpret: bool = True,
-            ) -> tuple[Any, list[LoweringReport]]:
+            fuse_chains: bool = False) -> tuple[Any, list[LoweringReport]]:
         """Execute and return ``(outputs, per-TM-phase lowering reports)``.
 
         Mutates no state on ``self`` — safe under concurrent callers (the
@@ -126,14 +130,16 @@ class CompiledTMProgram:
         lowerings: list[LoweringReport] = []
         for phase in self.partition_report.phases:
             rep = self.run_phase(phase, env, backend=backend,
-                                 interpret=interpret)
+                                 interpret=interpret,
+                                 fuse_chains=fuse_chains)
             if rep is not None:
                 lowerings.append(rep)
         return self.outputs_from(env), lowerings
 
     def __call__(self, *args, backend: str = "fused",
-                 interpret: bool = True):
-        out, lowerings = self.run(*args, backend=backend, interpret=interpret)
+                 interpret: bool = True, fuse_chains: bool = False):
+        out, lowerings = self.run(*args, backend=backend, interpret=interpret,
+                                  fuse_chains=fuse_chains)
         self.last_lowering = lowerings
         return out
 

@@ -33,10 +33,18 @@ class PartitionReport:
     pipelined_cycles: float     # double buffering within instructions
     forwarded_cycles: float     # + output forwarding along streamable edges
     forwarding_edges: int
+    chained_cycles: float = 0.0  # forwarding REALIZED: chains as megakernels
+    forwarding_chains: int = 0
 
     @property
     def tmu_phases(self) -> list[Phase]:
         return [p for p in self.phases if p.kind == "tmu"]
+
+    def launches(self, *, chained: bool = False) -> int:
+        """Modeled kernel launches across all TM phases (chains collapse to
+        one launch each when ``chained``)."""
+        return sum(ph.schedule.launches(chained=chained)
+                   for ph in self.tmu_phases if ph.schedule is not None)
 
     @property
     def latency_reduction(self) -> float:
@@ -84,8 +92,8 @@ def partition(graph: TMGraph,
         else:
             phases.append(Phase(kind=node.kind, node_indices=[i]))
 
-    unpiped = piped = fwded = 0.0
-    n_edges = 0
+    unpiped = piped = fwded = chained = 0.0
+    n_edges = n_chains = 0
     for ph in phases:
         if ph.kind != "tmu":
             continue
@@ -95,7 +103,10 @@ def partition(graph: TMGraph,
         unpiped += ph.schedule.unpipelined_cycles
         piped += ph.schedule.pipelined_cycles
         fwded += ph.schedule.forwarded_cycles
+        chained += ph.schedule.chained_cycles
         n_edges += len(ph.schedule.forwards)
+        n_chains += len(ph.schedule.chains)
     return PartitionReport(phases=phases, unpipelined_cycles=unpiped,
                            pipelined_cycles=piped, forwarded_cycles=fwded,
-                           forwarding_edges=n_edges)
+                           forwarding_edges=n_edges, chained_cycles=chained,
+                           forwarding_chains=n_chains)

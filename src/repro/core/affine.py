@@ -46,6 +46,19 @@ def _as_frac_vector(vec: Sequence) -> tuple[Frac, ...]:
     return tuple(Frac(v) for v in vec)
 
 
+def memoized_hash(obj, *fields) -> int:
+    """Structural hash computed once per frozen instance.
+
+    Maps are hashed constantly (kernel-cache lookups, jit static args) and
+    Fraction.__hash__ is expensive (a modular pow per entry), so the frozen
+    dataclasses cache their hash in ``__dict__`` on first use."""
+    h = obj.__dict__.get("_hash")
+    if h is None:
+        h = hash(fields)
+        object.__setattr__(obj, "_hash", h)
+    return h
+
+
 @dataclasses.dataclass(frozen=True)
 class AffineMap:
     """Exact rational affine index map ``y = A @ x + b`` (paper Eq. 1).
@@ -58,6 +71,9 @@ class AffineMap:
 
     A: tuple[tuple[Frac, ...], ...]
     b: tuple[Frac, ...]
+
+    def __hash__(self):
+        return memoized_hash(self, self.A, self.b)
 
     # --- constructors -----------------------------------------------------
     @staticmethod
@@ -267,6 +283,11 @@ class MixedRadixMap:
     # mask registers).  Needed when a quotient digit over-covers (e.g.
     # Rearrange channel padding: group digit must stay < group).
     digit_bounds: tuple[tuple[int, int], ...] = ()
+
+    def __hash__(self):
+        return memoized_hash(self, self.out_shape, self.in_shape,
+                             self.splits, self.affine, self.fill,
+                             self.oob_possible, self.digit_bounds)
 
     def __post_init__(self):
         n_digits = len(self.out_shape) + len(self.splits)

@@ -26,11 +26,19 @@ from repro.core.instr import TMInstr
 
 @dataclasses.dataclass(frozen=True)
 class Lowering:
-    """One instruction's lowering decision."""
+    """One lowering decision — an instruction, or a fused forwarding chain.
+
+    ``launches`` makes kernel-launch accounting explicit (it used to be
+    implicit: one per record): a block/gather kernel is one launch, a
+    multi-band Route launches once per band, a reference fallback is one
+    engine pass, and a fused chain is ONE launch covering ``instrs``
+    instructions — the honest chained-vs-unchained comparison the
+    forwarding benchmark gates on.
+    """
 
     dst: str
     opcode: str
-    path: str        # e.g. "pallas.block", "pallas.gather+ew", "reference.coarse"
+    path: str        # e.g. "pallas.block", "pallas.chain", "reference.coarse"
     kernel: str = ""  # registry rule that claimed the instruction ("" = fallback)
     reason: str = ""  # why the fallback was taken ("" when a kernel ran)
     segments: int | None = None  # kernel grid size (block iterations), when
@@ -38,10 +46,16 @@ class Lowering:
     #                              model's count via schedule.map_segments /
     #                              instr_segments (pass batch_shape for
     #                              executor-level batch lifts)
+    launches: int = 1  # kernel launches (engine passes for fallbacks)
+    instrs: int = 1    # TM instructions this record covers (>1: fused chain)
 
     @property
     def is_pallas(self) -> bool:
         return self.path.startswith("pallas.")
+
+    @property
+    def is_chain(self) -> bool:
+        return self.instrs > 1
 
 
 @dataclasses.dataclass
@@ -64,6 +78,18 @@ class LoweringReport:
         if not self.records:
             return 0.0
         return sum(r.is_pallas for r in self.records) / len(self.records)
+
+    def launch_count(self) -> int:
+        """Total kernel launches (engine passes for fallbacks) this run."""
+        return sum(r.launches for r in self.records)
+
+    def instr_count(self) -> int:
+        """TM instructions executed (chain records cover several)."""
+        return sum(r.instrs for r in self.records)
+
+    def chain_count(self) -> int:
+        """Fused forwarding chains executed as single kernels."""
+        return sum(1 for r in self.records if r.is_chain)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,19 +114,49 @@ class KernelRule:
     # optional: report the grid size (block iterations) the kernel will run,
     # so the lowering report can be checked against the schedule's cycle model
     segments: Callable[..., int] | None = None
+    # optional: kernel launches this rule issues (default 1; Route launches
+    # one kernel per band)
+    launches: Callable[..., int] | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class ChainRule:
+    """One chain-registry entry — lowers a whole forwarding chain.
+
+    ``lower(instrs, srcs, batch_dims, interpret, segment_bytes=None)``
+    receives the chain's instruction run and each instruction's resolved
+    sources (``None`` in the slot of a chain-internal intermediate — it
+    never materializes).  It returns ``(value, path, segments)`` when the
+    rule can execute the chain as ONE kernel, None otherwise — a single
+    entry point so legality analysis runs once per call, not once per
+    matches/run/segments hook.
+    """
+
+    name: str
+    lower: Callable[..., tuple[jnp.ndarray, str, int | None] | None]
+    priority: int = 0
 
 
 _RULES: list[KernelRule] = []
+_CHAIN_RULES: list[ChainRule] = []
 _REGISTERED = False
 
 
 def register_rule(name: str, matches, run, priority: int = 0,
-                  segments=None) -> None:
+                  segments=None, launches=None) -> None:
     """Register a kernel rule (called by kernel packages at import time)."""
     global _RULES
     _RULES = [r for r in _RULES if r.name != name]  # idempotent re-import
-    _RULES.append(KernelRule(name, matches, run, priority, segments))
+    _RULES.append(KernelRule(name, matches, run, priority, segments, launches))
     _RULES.sort(key=lambda r: -r.priority)
+
+
+def register_chain_rule(name: str, lower, priority: int = 0) -> None:
+    """Register a chain rule (called by kernel packages at import time)."""
+    global _CHAIN_RULES
+    _CHAIN_RULES = [r for r in _CHAIN_RULES if r.name != name]
+    _CHAIN_RULES.append(ChainRule(name, lower, priority))
+    _CHAIN_RULES.sort(key=lambda r: -r.priority)
 
 
 def _ensure_registered() -> None:
@@ -140,6 +196,37 @@ def lower_instr(ins: TMInstr, srcs: Sequence[jnp.ndarray], batch_dims: int,
             seg = (rule.segments(ins, srcs, batch_dims,
                                  segment_bytes=segment_bytes)
                    if rule.segments is not None else None)
+            n_launch = (rule.launches(ins, srcs, batch_dims)
+                        if rule.launches is not None else 1)
             return val, Lowering(dst=ins.dst, opcode=ins.opcode.value,
-                                 path=path, kernel=rule.name, segments=seg)
+                                 path=path, kernel=rule.name, segments=seg,
+                                 launches=n_launch)
+    return None
+
+
+def lower_chain(instrs: Sequence[TMInstr],
+                srcs: Sequence[Sequence[jnp.ndarray | None]],
+                batch_dims: int, interpret: bool,
+                segment_bytes: int | None = None,
+                ) -> tuple[jnp.ndarray, Lowering] | None:
+    """Lower a whole forwarding chain through the chain registry.
+
+    ``instrs`` is the chain's consecutive instruction run
+    (:func:`repro.core.fusion.forwarding_chains`); ``srcs[k]`` resolves
+    instruction k's sources, with ``None`` in the position of the streamed
+    intermediate (it has no buffer — that is the point).  Returns
+    ``(final value, lowering)`` from the first rule that claims the chain —
+    one record, ``launches=1``, covering ``len(instrs)`` instructions — or
+    None when no rule does (caller executes the links one by one, exactly
+    like an unfused program).
+    """
+    _ensure_registered()
+    for rule in _CHAIN_RULES:
+        lowered = rule.lower(instrs, srcs, batch_dims, interpret,
+                             segment_bytes=segment_bytes)
+        if lowered is not None:
+            val, path, seg = lowered
+            return val, Lowering(dst=instrs[-1].dst, opcode="chain",
+                                 path=path, kernel=rule.name, segments=seg,
+                                 launches=1, instrs=len(instrs))
     return None

@@ -36,9 +36,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import rme
-from repro.core.dispatch import Lowering, LoweringReport, lower_instr
+from repro.core.dispatch import (Lowering, LoweringReport, lower_chain,
+                                 lower_instr)
 from repro.core.engine import EW_FNS, apply_map, route_gather
-from repro.core.fusion import FusionReport, fuse
+from repro.core.fusion import ForwardChain, FusionReport, forwarding_chains, fuse
 from repro.core.instr import EwOp, TMInstr, TMOpcode, TMProgram
 from repro.core.schedule import CycleParams
 
@@ -55,6 +56,13 @@ class TMExecutor:
     # budget params.segment_bytes flows executor -> dispatch -> kernels); None
     # keeps the shared default, so model and kernels still agree
     params: CycleParams | None = None
+    # pallas only: execute each forwarding chain (fusion.forwarding_chains)
+    # as ONE segment-streaming Pallas kernel — intermediates hand off through
+    # VMEM scratch instead of round-tripping HBM, and the chain's lowering
+    # report shows a single record with launches=1 covering all its
+    # instructions.  Chains the chain registry declines fall back to
+    # per-instruction lowering, bit-exact either way.
+    fuse_chains: bool = False
     last_report: FusionReport | None = None
     last_lowering: LoweringReport | None = None
 
@@ -87,12 +95,62 @@ class TMExecutor:
             prog, fusion = fuse(prog)
         lowering = LoweringReport(backend=self.backend)
         bufs = dict(buffers)
-        for ins in prog.instrs:  # Fetch
+        chain_at: dict[int, ForwardChain] = {}
+        if self.backend == "pallas" and self.fuse_chains:
+            chain_at = {c.instrs[0]: c for c in forwarding_chains(prog)}
+        i = 0
+        while i < len(prog.instrs):  # Fetch
+            chain = chain_at.get(i)
+            if chain is not None:
+                self._run_chain(chain, prog, bufs, batch_dims, lowering)
+                i = chain.instrs[-1] + 1
+                continue
+            ins = prog.instrs[i]
             bufs[ins.dst] = self._dispatch(ins, bufs, batch_dims, lowering)
+            i += 1
         missing = [o for o in prog.outputs if o not in bufs]
         if missing:
             raise KeyError(f"program did not produce outputs: {missing}")
         return {o: bufs[o] for o in prog.outputs}, lowering, fusion
+
+    def _run_chain(self, chain: ForwardChain, prog: TMProgram, bufs: dict,
+                   batch_dims: int, lowering: LoweringReport) -> None:
+        """Execute one chain region, fusing the longest claimable runs.
+
+        Greedy: at each position try the longest remaining sub-chain (>= 2
+        links) against the registry, shrinking from the tail; a claimed run
+        executes as ONE kernel (its streamed intermediates are passed as
+        ``None`` source slots and never enter the buffer file — only the
+        run's final destination binds, which is exactly the handoff point
+        when a suffix follows), an unclaimable head instruction lowers
+        per-instruction and the scan advances one."""
+        idxs = chain.instrs
+        sb = self.params.segment_bytes if self.params is not None else None
+        pos, n = 0, len(idxs)
+        while pos < n:
+            claimed = None
+            for end in range(n, pos + 1, -1):
+                if end - pos < 2:
+                    break
+                instrs = [prog.instrs[k] for k in idxs[pos:end]]
+                streamed = set(chain.buffers[pos:end - 1])
+                srcs = [[None if s in streamed else bufs[s]
+                         for s in ins.srcs] for ins in instrs]
+                lowered = lower_chain(instrs, srcs, batch_dims,
+                                      self.interpret, segment_bytes=sb)
+                if lowered is not None:
+                    claimed = (end, lowered)
+                    break
+            if claimed is None:
+                ins = prog.instrs[idxs[pos]]
+                bufs[ins.dst] = self._dispatch(ins, bufs, batch_dims,
+                                               lowering)
+                pos += 1
+                continue
+            end, (val, rec) = claimed
+            lowering.records.append(rec)
+            bufs[prog.instrs[idxs[end - 1]].dst] = val
+            pos = end
 
     def _dispatch(self, ins: TMInstr, bufs: dict, batch_dims: int,
                   lowering: LoweringReport) -> jnp.ndarray:

@@ -78,6 +78,58 @@ def forwarding_edges(prog: TMProgram) -> list[ForwardEdge]:
     return edges
 
 
+@dataclasses.dataclass(frozen=True)
+class ForwardChain:
+    """A maximal run of forwarding edges that can execute as ONE kernel.
+
+    ``instrs`` are consecutive instruction indices (producer -> ... -> final
+    consumer); ``buffers`` are the intermediates handed off between the links
+    (``len(buffers) == len(instrs) - 1``).  Each intermediate is streamed
+    segment-by-segment through VMEM scratch instead of round-tripping HBM
+    when the chain is lowered by :func:`repro.core.dispatch.lower_chain`.
+    """
+
+    instrs: tuple[int, ...]
+    buffers: tuple[str, ...]
+
+    def __len__(self) -> int:
+        return len(self.instrs)
+
+
+def forwarding_chains(prog: TMProgram) -> list[ForwardChain]:
+    """Group :func:`forwarding_edges` into maximal producer→consumer chains.
+
+    A chain is a run of edges ``(i, i+1), (i+1, i+2), ...`` — each link's
+    consumer is the next link's producer, and links are *adjacent in program
+    order* so the executor can evaluate the whole chain at the position of
+    its first instruction (every non-chain operand the links read is already
+    bound there; an edge with a gap would let an in-between instruction's
+    output feed a later link's epilogue, which chain execution would miss).
+
+    Legality beyond grouping (opcode support, map composition geometry, VMEM
+    residency of the chain input) is the dispatch layer's job — a chain this
+    function reports may still fall back to per-instruction lowering.
+    """
+    by_producer = {e.producer: e for e in forwarding_edges(prog)
+                   if e.consumer == e.producer + 1}
+    chains: list[ForwardChain] = []
+    taken: set[int] = set()
+    for i in sorted(by_producer):
+        if i in taken:
+            continue
+        idxs = [i]
+        bufs = []
+        j = i
+        while j in by_producer:
+            e = by_producer[j]
+            bufs.append(e.buffer)
+            idxs.append(e.consumer)
+            taken.add(j)
+            j = e.consumer
+        chains.append(ForwardChain(instrs=tuple(idxs), buffers=tuple(bufs)))
+    return chains
+
+
 def _map_bytes(m: MixedRadixMap, itemsize: int = 4) -> int:
     import math
     return math.prod(m.out_shape) * itemsize

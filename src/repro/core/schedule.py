@@ -30,7 +30,8 @@ import dataclasses
 import functools
 import math
 
-from repro.core.fusion import ForwardEdge, forwarding_edges
+from repro.core.fusion import (ForwardChain, ForwardEdge, forwarding_chains,
+                               forwarding_edges)
 from repro.core.instr import TMInstr, TMOpcode, TMProgram
 
 
@@ -65,6 +66,7 @@ class InstrTiming:
     load: float      # per-segment Tensor Load cycles
     compute: float   # per-segment fine/ew/coarse datapath cycles
     store: float     # per-segment Tensor Store cycles
+    launches: int = 1  # kernel launches (a multi-band Route is one per band)
 
     @property
     def segment_cycles(self) -> float:
@@ -95,6 +97,15 @@ class ScheduleReport:
     pipelined_cycles: float
     forwarded_cycles: float
     params: CycleParams
+    # chain-fused execution (the REALIZED form of forwarding): each
+    # forwardable chain collapses into one kernel launch whose grid streams
+    # the final output's segments; ``chained_cycles`` is directly comparable
+    # to ``pipelined_cycles`` (per-instruction launches, what the unchained
+    # pallas backend realizes) and to ``forwarded_cycles`` (the modeled
+    # overlap the chain kernel replaces with actual VMEM streaming)
+    chains: list[ForwardChain] = dataclasses.field(default_factory=list)
+    chained_cycles: float = 0.0
+    chain_reports: list[dict] = dataclasses.field(default_factory=list)
 
     @property
     def pipeline_speedup(self) -> float:
@@ -103,6 +114,25 @@ class ScheduleReport:
     @property
     def double_buffer_speedup(self) -> float:
         return self.unpipelined_cycles / max(self.pipelined_cycles, 1e-9)
+
+    @property
+    def chain_speedup(self) -> float:
+        """Realized chained vs realized per-instruction execution."""
+        return self.pipelined_cycles / max(self.chained_cycles, 1e-9)
+
+    def launches(self, *, chained: bool = False) -> int:
+        """Kernel launches the model charges: per-instruction, a multi-band
+        Route launches once per band; chained, each chain is ONE launch."""
+        per_instr = {t.index: t for t in self.timings}
+        n = 0
+        covered = {i for c in self.chains for i in c.instrs} if chained else set()
+        for i, t in per_instr.items():
+            if i in covered:
+                continue
+            n += t.launches
+        if chained:
+            n += len(self.chains)
+        return n
 
     def rows(self) -> list[dict]:
         """Flat per-instruction rows for benchmark tables/plots."""
@@ -225,6 +255,23 @@ def instr_segments(ins: TMInstr, out_shape: tuple[int, ...],
     return plan_segments(batch_shape + tuple(out_shape), itemsize, sb).n_segments
 
 
+def ping_pong_shape(shape: tuple[int, ...], itemsize: int = 4,
+                    segment_bytes: int | None = None) -> tuple[int, int, int]:
+    """The two-segment ping-pong slot for a streamed buffer: ``(2,
+    row_block, minor)`` of the buffer's segment plan.
+
+    The shared sizing RULE: the chain megakernel allocates its VMEM handoff
+    scratch with this function (on the chain *output's* plan — one pair per
+    chain, shared by every handoff; :mod:`repro.kernels.tm_affine.chain`),
+    and the compiler's scratch allocator charges each streamed slot the
+    same way on the buffer's own plan
+    (:func:`repro.compiler.allocate.allocate`).  Both sides bound a slot by
+    two segments of the same budget, so accounting and kernel scratch agree
+    on bytes even where the plans' row blocks differ."""
+    seg = plan_segments(shape, itemsize, segment_bytes)
+    return (2, seg.row_block, seg.minor)
+
+
 def map_segments(m, itemsize: int = 4, segment_bytes: int | None = None,
                  batch_shape: tuple[int, ...] = ()) -> int:
     """Grid size the tm_affine kernel launches for one map — THE shared
@@ -273,7 +320,39 @@ def _timing(i: int, ins: TMInstr, shapes: dict, p: CycleParams) -> InstrTiming:
         compute += (out_elems / p.lanes) / n_seg
     return InstrTiming(index=i, dst=ins.dst, opcode=ins.opcode.value,
                        n_segments=n_seg, load=load, compute=compute,
-                       store=store)
+                       store=store,
+                       launches=len(ins.maps) if ins.maps is not None else 1)
+
+
+def chain_timing(instrs: list[TMInstr], shapes: dict,
+                 p: CycleParams) -> InstrTiming:
+    """One forwarding chain executed as a single segment-streaming kernel.
+
+    The kernel's grid iterates the FINAL output's segment plan; per segment
+    it loads from the chain's external inputs (the chain source slab plus
+    epilogue/band operands — intermediates never touch the port), runs every
+    link's datapath work, and stores one output segment."""
+    last = instrs[-1]
+    out_shape = shapes[last.dst]
+    n_seg = plan_segments(out_shape, p.itemsize, p.segment_bytes).n_segments
+    internal = {ins.dst for ins in instrs[:-1]}
+    in_elems = sum(math.prod(shapes[s]) for ins in instrs
+                   for s in ins.srcs if s not in internal)
+    out_elems = math.prod(out_shape)
+    load = (in_elems * p.itemsize / p.bandwidth_bytes) / n_seg
+    store = (out_elems * p.itemsize / p.bandwidth_bytes) / n_seg
+    compute = 0.0
+    for ins in instrs:
+        active = ins.active_stages()
+        work = max(sum(math.prod(shapes[s]) for s in ins.srcs),
+                   math.prod(shapes[ins.dst]))
+        if "coarse" in active or "fine" in active:
+            compute += work / p.lanes
+        if "elementwise" in active:
+            compute += math.prod(shapes[ins.dst]) / p.lanes
+    return InstrTiming(index=-1, dst=last.dst, opcode="chain",
+                       n_segments=n_seg, load=load, compute=compute / n_seg,
+                       store=store, launches=1)
 
 
 def schedule(prog: TMProgram, input_shapes: dict[str, tuple[int, ...]],
@@ -324,7 +403,37 @@ def schedule(prog: TMProgram, input_shapes: dict[str, tuple[int, ...]],
         makespan = max(makespan, finish[i])
         cur_producer[ins.dst] = i
 
+    # chain-fused execution: each forwardable chain collapses to ONE launch
+    # (one issue charge, intermediates streamed through VMEM scratch); units
+    # run serially — that is what the chained pallas backend realizes —
+    # reported per chain as modeled (forwarding overlap) vs realized
+    # (single-kernel) cycles
+    chains = forwarding_chains(prog)
+    covered = {i for c in chains for i in c.instrs}
+    chained = sum(p.issue_overhead + t.pipelined_cycles
+                  for i, t in enumerate(timings) if i not in covered)
+    chain_reports: list[dict] = []
+    for c in chains:
+        ct = chain_timing([prog.instrs[i] for i in c.instrs], shapes, p)
+        realized = p.issue_overhead + ct.pipelined_cycles
+        chained += realized
+        chain_reports.append({
+            "instrs": list(c.instrs), "buffers": list(c.buffers),
+            "unfused_pipelined": sum(p.issue_overhead
+                                     + timings[i].pipelined_cycles
+                                     for i in c.instrs),
+            "modeled_forwarded": finish[c.instrs[-1]] - start[c.instrs[0]]
+            + p.issue_overhead,
+            "realized_chained": realized,
+            "segments_unfused": sum(timings[i].n_segments for i in c.instrs),
+            "segments_chained": ct.n_segments,
+            "launches_unfused": sum(timings[i].launches for i in c.instrs),
+            "launches_chained": 1,
+        })
+
     return ScheduleReport(timings=timings, forwards=forwards,
                           unpipelined_cycles=unpipelined,
                           pipelined_cycles=pipelined,
-                          forwarded_cycles=makespan, params=p)
+                          forwarded_cycles=makespan, params=p,
+                          chains=chains, chained_cycles=chained,
+                          chain_reports=chain_reports)

@@ -1,14 +1,15 @@
 """Jit'd wrappers for the RME compaction kernels + dispatch registration."""
 
 import math
-from functools import partial
+from functools import lru_cache, partial
 
 import jax
 
-from repro.core.dispatch import register_rule
+from repro.core.dispatch import register_chain_rule, register_rule
 from repro.core.instr import TMOpcode
 from repro.kernels.rme_gather.rme_gather import (assemble, assemble_batched,
-                                                 evaluate, evaluate_batched)
+                                                 evaluate, evaluate_batched,
+                                                 evaluate_chained)
 
 
 @partial(jax.jit, static_argnames=("capacity", "cmp", "score_index", "interpret"))
@@ -107,7 +108,100 @@ def _rme_segments(ins, srcs, batch_dims, segment_bytes=None):
     return max(1, math.prod(srcs[0].shape[:batch_dims]))
 
 
+# ---------------------------------------------------------------------------
+# chain rule: coarse pre-links pulled back into the evaluate kernel's load —
+# the record stream is gathered from the chain input slab and compacted in
+# one launch (detect tails: layout Rearrange/reshape + Bboxcal as one kernel)
+# ---------------------------------------------------------------------------
+
+def _chain_eval_maps(instrs, srcs, batch_dims):
+    """Lifted pre-link maps + the FINE link's stream rank, or (None, 0)."""
+    from repro.core.affine import batch_extend_map
+    last = instrs[-1]
+    if last.opcode != TMOpcode.FINE_EVALUATE:
+        return None, 0
+    cfg = last.rme
+    if cfg.top_k is not None or cfg.capacity is None or cfg.threshold is None:
+        return None, 0
+    if len(last.srcs) != 1 or srcs[-1][0] is not None:
+        return None, 0
+    x = srcs[0][0]
+    if x is None:
+        return None, 0
+    batch = x.shape[:batch_dims]
+    maps = []
+    for k, ins in enumerate(instrs[:-1]):
+        if ins.opcode != TMOpcode.COARSE or ins.map_ is None \
+                or ins.ew is not None or len(ins.srcs) != 1:
+            return None, 0
+        if k > 0 and srcs[k][0] is not None:
+            return None, 0
+        m = batch_extend_map(ins.map_, batch)
+        if k == 0 and x.shape != m.in_shape:
+            return None, 0
+        if maps and m.in_shape != maps[-1].out_shape:
+            return None, 0
+        maps.append(m)
+    fine_bd = batch_dims + (last.meta or {}).get("batch_dims", 0)
+    if len(maps[-1].out_shape) != fine_bd + 2:
+        return None, 0
+    return tuple(maps), fine_bd
+
+
+@lru_cache(maxsize=256)
+def _chain_eval_pullback(maps):
+    """(idx, ok, fill) constants on the stream grid, or None on mixed fills
+    (a permanent decline — cached, so repeat executor runs stay cheap)."""
+    from repro.kernels.tm_affine.chain import fold_pullback
+    try:
+        J, OK, fill = fold_pullback(maps)
+    except ValueError:
+        return None
+    stream = maps[-1].out_shape
+    N, D = stream[-2], stream[-1]
+    idx = jax.numpy.asarray(J.reshape(-1, N, D))
+    ok = None if OK is None else jax.numpy.asarray(OK.reshape(-1, N, D))
+    return idx, ok, fill
+
+
+def _chain_eval_lower(instrs, srcs, batch_dims, interpret,
+                      segment_bytes=None):
+    """Single-pass chained-evaluate lowering, or None."""
+    from repro.kernels.tm_affine.chain import CHAIN_VMEM_BUDGET
+    maps, _ = _chain_eval_maps(instrs, srcs, batch_dims)
+    if maps is None:
+        return None
+    x = srcs[0][0]
+    stream_elems = math.prod(maps[-1].out_shape)
+    # the chain slab plus the pullback index/mask constants must stay
+    # VMEM-resident for the launch — same legality rule as tm_affine.chain
+    if x.size * x.dtype.itemsize + 8 * stream_elems > CHAIN_VMEM_BUDGET:
+        return None
+    pulled = _chain_eval_pullback(maps)
+    if pulled is None:
+        return None
+    idx, ok, fill = pulled
+    cfg = instrs[-1].rme
+    stream = maps[-1].out_shape
+    rows, _, _ = evaluate_chained_call(
+        x, idx, ok, fill, cfg.threshold, capacity=cfg.capacity,
+        cmp=cfg.cmp, score_index=cfg.score_index, interpret=interpret)
+    val = rows.reshape(stream[:-2] + rows.shape[1:])
+    return val, "pallas.chain+rme.evaluate", max(1, math.prod(stream[:-2]))
+
+
+@partial(jax.jit, static_argnames=("fill", "capacity", "cmp", "score_index",
+                                  "interpret"))
+def evaluate_chained_call(x, idx, ok, fill, threshold, *, capacity,
+                          cmp="ge", score_index=0, interpret=True):
+    return evaluate_chained(x, idx, ok, fill, threshold, capacity,
+                            cmp=cmp, score_index=score_index,
+                            interpret=interpret)
+
+
 register_rule("rme_gather.evaluate", _evaluate_matches, _evaluate_run,
               priority=10, segments=_rme_segments)
 register_rule("rme_gather.assemble", _assemble_matches, _assemble_run,
               priority=10, segments=_rme_segments)
+register_chain_rule("rme_gather.chain_evaluate", _chain_eval_lower,
+                    priority=10)

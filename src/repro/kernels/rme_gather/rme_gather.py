@@ -121,6 +121,76 @@ def evaluate_batched(x: jnp.ndarray, threshold, capacity: int, *,
     )(x, thr)
 
 
+def _evaluate_chain_kernel(*refs, cmp: str, score_index: int, capacity: int,
+                           has_mask: bool, fill: float):
+    """Chained evaluate: the record stream is gathered from the chain input
+    slab (coarse pre-links pulled back to the stream grid) and compacted in
+    the same pass — the producer's output never exists outside VMEM."""
+    if has_mask:
+        x_ref, idx_ref, ok_ref, thr_ref, o_ref, idx_out_ref, cnt_ref = refs
+    else:
+        x_ref, idx_ref, thr_ref, o_ref, idx_out_ref, cnt_ref = refs
+    idx = idx_ref[0]                      # (N, D) pullback into the slab
+    x = jnp.take(x_ref[...], idx.reshape(-1)).reshape(idx.shape)
+    if has_mask:
+        x = jnp.where(ok_ref[0], x, jnp.asarray(fill, dtype=x.dtype))
+    n = x.shape[0]
+    thr = thr_ref[0]
+    scores = x[:, score_index].astype(thr.dtype)
+    mask = {
+        "ge": scores >= thr, "gt": scores > thr,
+        "le": scores <= thr, "lt": scores < thr,
+    }[cmp]
+    order = jnp.argsort(jnp.where(mask, 0, 1), stable=True).astype(jnp.int32)
+    cnt = jnp.sum(mask.astype(jnp.int32))
+    take = order[:capacity]
+    rows = jnp.take(x, take, axis=0)
+    live = (jnp.arange(capacity) < cnt)
+    o_ref[0] = jnp.where(live[:, None], rows, jnp.zeros_like(rows))
+    idx_out_ref[0] = jnp.where(live, take, n).astype(jnp.int32)
+    cnt_ref[...] = jnp.minimum(cnt, capacity).reshape(1, 1)
+
+
+def evaluate_chained(x_slab: jnp.ndarray, idx: jnp.ndarray,
+                     ok: jnp.ndarray | None, fill: float, threshold,
+                     capacity: int, *, cmp: str = "ge", score_index: int = 0,
+                     interpret: bool = True):
+    """Batched evaluate fed through a coarse pullback: ``idx``/``ok`` are
+    (B, N, D) constants mapping each stream element into the flat chain
+    input ``x_slab``; one grid step gathers + compacts one stream."""
+    B, N, D = idx.shape
+    kern = functools.partial(
+        _evaluate_chain_kernel, cmp=cmp, score_index=score_index,
+        capacity=capacity, has_mask=ok is not None, fill=fill)
+    thr = jnp.asarray([threshold],
+                      dtype=jnp.result_type(x_slab.dtype, threshold))
+    xf = x_slab.reshape(-1)
+    in_specs = [pl.BlockSpec((xf.size,), lambda b: (0,)),
+                pl.BlockSpec((1, N, D), lambda b: (b, 0, 0))]
+    args = [xf, idx]
+    if ok is not None:
+        in_specs.append(pl.BlockSpec((1, N, D), lambda b: (b, 0, 0)))
+        args.append(ok)
+    in_specs.append(pl.BlockSpec((1,), lambda b: (0,)))
+    args.append(thr)
+    return pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, capacity, D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, capacity), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, capacity, D), x_slab.dtype),
+            jax.ShapeDtypeStruct((B, capacity), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*args)
+
+
 def _assemble_kernel(x_ref, mask_ref, o_ref, cnt_ref, *, capacity: int):
     x = x_ref[...]
     mask = mask_ref[...] != 0

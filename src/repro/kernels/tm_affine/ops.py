@@ -8,10 +8,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.affine import MixedRadixMap, batch_extend_map
-from repro.core.dispatch import register_rule
+from repro.core.dispatch import register_chain_rule, register_rule
 from repro.core.engine import EW_FNS
 from repro.core.instr import TMOpcode
 from repro.core.schedule import map_segments
+from repro.kernels.tm_affine.chain import (CHAIN_VMEM_BUDGET, ChainSig,
+                                           chain_plan_of, chain_slab_bytes,
+                                           tm_chain)
 from repro.kernels.tm_affine.tm_affine import analyze_block_mode, tm_affine
 
 
@@ -127,7 +130,104 @@ def _route_segments(ins, srcs, batch_dims, segment_bytes=None):
                             segment_bytes=segment_bytes) for m in ins.maps)
 
 
+# ---------------------------------------------------------------------------
+# chain rule: a forwarding chain of coarse instructions as ONE megakernel
+# (kernels/tm_affine/chain.py) — intermediates stream through VMEM scratch
+# ---------------------------------------------------------------------------
+
+def _chain_sig_build(instrs, srcs, batch_dims, segment_bytes):
+    """Build ``(ChainSig, operand slabs)``, or ``(None, None)`` when this
+    rule cannot take the chain.
+
+    Legal chains: every link COARSE; links 1..k-1 single-map with the
+    streamed buffer as their data source (``srcs[k][0] is None``); the last
+    link may instead be a multi-band Route whose chain band is the streamed
+    buffer.  Epilogue operands must already be in the link's (lifted) output
+    layout — the same contract as the per-instruction rule.
+    """
+    x = srcs[0][0]
+    if x is None or instrs[0].opcode != TMOpcode.COARSE:
+        return None, None
+    batch = x.shape[:batch_dims]
+    dtype = x.dtype
+    links = []
+    route_maps = None
+    route_band = 0
+    prev_out = None
+    slabs = []
+    n = len(instrs)
+    for k, ins in enumerate(instrs):
+        if ins.opcode != TMOpcode.COARSE:
+            return None, None
+        cur_srcs = srcs[k]
+        if ins.maps is not None:
+            # multi-band Route — only as the terminal link, without epilogue
+            if k != n - 1 or ins.ew is not None:
+                return None, None
+            if len(cur_srcs) != len(ins.maps):
+                return None, None
+            band = [i for i, s in enumerate(cur_srcs) if s is None]
+            if k == 0 or len(band) != 1:
+                return None, None
+            route_band = band[0]
+            route_maps = []
+            for i, (s, m) in enumerate(zip(cur_srcs, ins.maps)):
+                lifted = _lift_cached(m, batch)
+                if i == route_band:
+                    if lifted.in_shape != prev_out:
+                        return None, None
+                else:
+                    if s is None or s.shape != lifted.in_shape \
+                            or s.dtype != dtype:
+                        return None, None
+                    slabs.append(s)
+                route_maps.append(lifted)
+            route_maps = tuple(route_maps)
+            break
+        if ins.map_ is None:
+            return None, None
+        m = _lift_cached(ins.map_, batch)
+        if k == 0:
+            if x.shape != m.in_shape:
+                return None, None
+        else:
+            if cur_srcs[0] is not None or m.in_shape != prev_out:
+                return None, None
+        ew = None
+        if ins.ew is not None:
+            if len(cur_srcs) != 2:
+                return None, None
+            y = cur_srcs[1]
+            if y is None or y.shape != m.out_shape or y.dtype != dtype:
+                return None, None
+            ew = ins.ew.value
+            slabs.append(y)
+        elif len(cur_srcs) != 1:
+            return None, None
+        links.append((m, ew))
+        prev_out = m.out_shape
+    sig = ChainSig(links=tuple(links), route_maps=route_maps,
+                   route_band=route_band, dtype=str(dtype),
+                   segment_bytes=segment_bytes)
+    return sig, tuple(slabs)
+
+
+def _chain_lower(instrs, srcs, batch_dims, interpret, segment_bytes=None):
+    """Single-pass chain lowering: legality + build + run, or None."""
+    sig, slabs = _chain_sig_build(instrs, srcs, batch_dims, segment_bytes)
+    if sig is None:
+        return None
+    if chain_slab_bytes(sig, srcs[0][0], slabs) > CHAIN_VMEM_BUDGET:
+        return None  # chain inputs must stay VMEM-resident for the launch
+    val = tm_chain(sig, srcs[0][0], slabs, interpret=interpret)
+    path = ("pallas.chain+route" if sig.route_maps is not None
+            else "pallas.chain")
+    return val, path, chain_plan_of(sig).n_segments
+
+
 register_rule("tm_affine.route", _route_matches, _route_run, priority=10,
-              segments=_route_segments)
+              segments=_route_segments,
+              launches=lambda ins, srcs, batch_dims: len(ins.maps))
 register_rule("tm_affine", _coarse_matches, _coarse_run, priority=0,
               segments=_coarse_segments)
+register_chain_rule("tm_affine.chain", _chain_lower, priority=0)

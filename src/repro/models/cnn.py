@@ -170,6 +170,20 @@ def detect_tail(pred, conf_threshold=0.5, capacity=64):
     return tm_ops.bboxcal_rows(pred, conf_threshold, capacity, score_index=4)
 
 
+def detect_tail_raw(pred, conf_threshold=0.5, capacity=64):
+    """The full detect tail as the paper runs it: the raw head grid
+    (B, Hg, Wg, 3·(5+nc)) is first *laid out* into record streams (a COARSE
+    reshape — TM work) and then Bboxcal'd (FINE evaluate).
+
+    The two instructions sit on a forwarding edge; with chain fusion the
+    layout step is pulled into the RME kernel's load and the whole tail is
+    ONE launch whose record stream never materializes."""
+    B, Hg, Wg, no = pred.shape
+    d = no // 3
+    rows = pred.reshape(B, Hg * Wg * 3, d)
+    return tm_ops.bboxcal_rows(rows, conf_threshold, capacity, score_index=4)
+
+
 def yolo_postprocess(pred, conf_threshold=0.5, capacity=256,
                      iou_threshold=0.45, max_out=64):
     """Bboxcal (RME evaluate) + NMS over a raw head grid.

@@ -20,7 +20,8 @@ from repro.serving.batcher import (BucketKey, Request, bucket_size, coalesce,
 from repro.serving.cache import CacheEntry, CacheKey, CompileCache
 from repro.serving.pipeline import PipelineJob, RequestPipeline
 from repro.serving.server import (ServerConfig, TMServer, predict_cycles,
-                                  predict_overlap, select_cycle_params)
+                                  predict_overlap, select_chain_fusion,
+                                  select_cycle_params)
 from repro.serving.stats import ServerStats
 
 __all__ = [
@@ -28,6 +29,6 @@ __all__ = [
     "CacheEntry", "CacheKey", "CompileCache",
     "PipelineJob", "RequestPipeline",
     "ServerConfig", "TMServer", "predict_cycles", "predict_overlap",
-    "select_cycle_params",
+    "select_chain_fusion", "select_cycle_params",
     "ServerStats",
 ]

@@ -74,6 +74,10 @@ class CacheEntry:
     compiled: Any                   # CompiledTMProgram
     backend: str                    # selected (may differ from key.backend)
     params: CycleParams | None      # selected cycle params (pinned winner)
+    # pallas backend: execute forwarding chains as single megakernels —
+    # pinned at admission by the cycle-model chain sweep, and used by the
+    # stats side so predicted overlap reflects realized (chained) execution
+    fuse_chains: bool = False
     selection: dict = dataclasses.field(default_factory=dict)
     compile_s: float = 0.0
     hits: int = 0

@@ -64,6 +64,10 @@ class ServerConfig:
     segment_candidates: tuple[int, ...] = DEFAULT_SEGMENT_CANDIDATES
     select_config: bool = True      # sweep segment_candidates at admission
     launch_overhead_cycles: float = 32.0  # per-block-iteration sweep charge
+    # admission also sweeps chain fusion (pallas backend): score chained vs
+    # per-instruction execution through the cycle model (+ a per-launch
+    # charge) and pin the winner on the entry
+    select_chaining: bool = True
 
     def __post_init__(self):
         for b in (self.backend,) + self.backend_candidates:
@@ -113,14 +117,38 @@ def select_cycle_params(graph, candidates: tuple[int, ...],
     return best[0], best[1], rows
 
 
-def predict_cycles(compiled: CompiledTMProgram) -> tuple[float, float]:
+def select_chain_fusion(part, launch_overhead_cycles: float = 32.0,
+                        ) -> tuple[bool, dict]:
+    """Cycle-model chain sweep: chained (one launch per chain, streamed
+    intermediates) vs per-instruction execution, each charged
+    ``launch_overhead_cycles`` per kernel launch.  Returns ``(pin chained?,
+    score rows)`` — no chains means nothing to pin."""
+    if part.forwarding_chains == 0:
+        return False, {}
+    unfused = part.pipelined_cycles \
+        + launch_overhead_cycles * part.launches(chained=False)
+    chained = part.chained_cycles \
+        + launch_overhead_cycles * part.launches(chained=True)
+    return chained < unfused, {
+        "chains": part.forwarding_chains,
+        "score_unfused": unfused, "score_chained": chained,
+        "launches_unfused": part.launches(chained=False),
+        "launches_chained": part.launches(chained=True),
+    }
+
+
+def predict_cycles(compiled: CompiledTMProgram,
+                   fuse_chains: bool = False) -> tuple[float, float]:
     """(TMU cycles, TPU-proxy cycles) for one execution of ``compiled``.
 
-    TMU cycles are the scheduled (forwarded) cycle model; the TPU side has
-    no microarchitectural model here, so its proxy is the data-movement
-    floor — every opaque node's inputs+outputs through the same port."""
+    TMU cycles are the scheduled (forwarded) cycle model — or the REALIZED
+    chained model when ``fuse_chains`` is pinned for the entry, so measured
+    and predicted stay comparable; the TPU side has no microarchitectural
+    model here, so its proxy is the data-movement floor — every opaque
+    node's inputs+outputs through the same port."""
     p = compiled.params or CycleParams()
-    tmu = compiled.partition_report.forwarded_cycles
+    tmu = (compiled.partition_report.chained_cycles if fuse_chains
+           else compiled.partition_report.forwarded_cycles)
     tpu = 0.0
     for node in compiled.graph.tpu_nodes():
         elems = sum(
@@ -138,11 +166,15 @@ def _size(shape: tuple[int, ...]) -> int:
     return n
 
 
-def predict_overlap(compiled: CompiledTMProgram) -> float:
+def predict_overlap(compiled: CompiledTMProgram,
+                    fuse_chains: bool = False) -> float:
     """Steady-state fraction of busy time the two-engine pipeline hides:
     serial = tmu+tpu per request, pipelined = max(tmu, tpu), hidden =
-    min/(tmu+tpu) — directly comparable to the measured overlap ratio."""
-    tmu, tpu = predict_cycles(compiled)
+    min/(tmu+tpu) — directly comparable to the measured overlap ratio.
+    With ``fuse_chains`` pinned, the TMU side uses realized (chained)
+    cycles, so measured-vs-predicted comparisons see the same execution
+    shape the entry actually runs."""
+    tmu, tpu = predict_cycles(compiled, fuse_chains=fuse_chains)
     total = tmu + tpu
     return min(tmu, tpu) / total if total > 0 else 0.0
 
@@ -317,7 +349,8 @@ class TMServer:
             steps.append((
                 "tpu" if phase.kind == "tpu" else "tmu",
                 lambda ph=phase: self._run_phase(compiled, ph, env,
-                                                 entry.backend)))
+                                                 entry.backend,
+                                                 entry.fuse_chains)))
 
         def on_done(err: BaseException | None) -> None:
             t_end = time.monotonic()
@@ -346,9 +379,10 @@ class TMServer:
             self._fail_batch(batch, e, cold=not hit)
 
     def _run_phase(self, compiled: CompiledTMProgram, phase, env: dict,
-                   backend: str) -> None:
+                   backend: str, fuse_chains: bool = False) -> None:
         compiled.run_phase(phase, env, backend=backend,
-                           interpret=self.config.interpret)
+                           interpret=self.config.interpret,
+                           fuse_chains=fuse_chains)
         # engine busy time must be compute, not async dispatch latency
         if phase.kind == "tpu":
             produced = [n for i in phase.node_indices
@@ -398,9 +432,27 @@ class TMServer:
                 walls[cand] = time.perf_counter() - t
             backend = min(walls, key=walls.get)
             selection["backend_probe_s"] = walls
-        overlap = predict_overlap(compiled)
+        fuse_chains = False
+        if cfg.select_chaining and backend == "pallas":
+            fuse_chains, rows = select_chain_fusion(
+                compiled.partition_report, cfg.launch_overhead_cycles)
+            if fuse_chains:
+                # the chain registry may decline chains the model counted
+                # (unsupported link, VMEM budget, mixed fills); probe one
+                # chained execution and pin only what actually realizes, so
+                # the predicted overlap describes the shape that runs
+                _, reps = compiled.run(*stacked_args, backend="pallas",
+                                       interpret=cfg.interpret,
+                                       fuse_chains=True)
+                rows["realized_chains"] = sum(r.chain_count() for r in reps)
+                fuse_chains = rows["realized_chains"] > 0
+            selection["fuse_chains"] = {"winner": fuse_chains, **rows}
+        # predicted overlap must describe the execution shape the entry pins
+        # (chained segment counts when chaining won the sweep)
+        overlap = predict_overlap(compiled, fuse_chains=fuse_chains)
         self.stats.record_predicted_overlap(overlap)
         selection["predicted_overlap"] = overlap
         return CacheEntry(key=key, fn=fn, compiled=compiled, backend=backend,
-                          params=compiled.params, selection=selection,
+                          params=compiled.params, fuse_chains=fuse_chains,
+                          selection=selection,
                           compile_s=time.perf_counter() - t0)

@@ -220,16 +220,149 @@ def assert_agree(case: OpCase, a: dict, b: dict, pair: str) -> None:
 
 def run_differential(case: OpCase, dtype: str, batch_dims: int,
                      rng: np.random.RandomState):
-    """Execute one case through every backend; return the pallas lowering."""
+    """Execute one case through every backend; return the pallas lowering.
+
+    The chain-fused pallas executor rides along on every case: where the
+    program has forwardable chains they execute as megakernels, where it
+    has none the path is identical — either way the outputs must agree."""
     prog, shapes = case.build()
     bufs = make_inputs(case, shapes, dtype, batch_dims, rng)
     results = {}
     executors = {b: TMExecutor(backend=b) for b in BACKENDS}
+    executors["pallas+chains"] = TMExecutor(backend="pallas",
+                                            fuse_chains=True)
     for b, ex in executors.items():
         results[b] = ex(prog, bufs, batch_dims=batch_dims)
     assert_agree(case, results["reference"], results["fused"], "ref/fused")
     assert_agree(case, results["reference"], results["pallas"], "ref/pallas")
+    assert_agree(case, results["pallas"], results["pallas+chains"],
+                 "pallas/chained")
     return executors["pallas"].last_lowering
+
+
+# ---------------------------------------------------------------------------
+# chain cases: programs with forwardable producer→consumer runs, executed
+# unfused and chain-fused — bit-exact agreement plus launch accounting
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ChainCase:
+    """One forwarding-chain program: expected chain lowering + launch drop."""
+
+    name: str
+    build: Callable[[], tuple[TMProgram, dict[str, tuple[int, ...]]]]
+    expect_chain_paths: tuple[str, ...]  # chain-record paths at batch_dims=0
+    launches_unfused: int
+    launches_chained: int
+    dtypes: tuple[str, ...] = ALL_DTYPES
+    supports_batch: bool = True
+    scale: float = 100.0
+
+
+def _chain3():
+    """transpose → split → transpose, no epilogues (pure-map run)."""
+    return _chain()
+
+
+def _chain_superres():
+    """pixelshuffle+Add → crop → re-pad: the superres tail with an epilogue
+    pinning the first boundary and an OOB fill pinning the last."""
+    mps = af.pixel_shuffle_map((6, 10, 8), 2)
+    crop = af.pad_map((12, 20, 2), (-1, -1, 0), (-1, -1, 0))
+    pad = af.pad_map((10, 18, 2), (1, 1, 0), (1, 1, 0))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x", "skip"), "a", map_=mps, ew=EwOp.ADD),
+         TMInstr(TMOpcode.COARSE, ("a",), "b", map_=crop),
+         TMInstr(TMOpcode.COARSE, ("b",), "y", map_=pad)],
+        inputs=("x", "skip"), outputs=("y",))
+    return prog, {"x": (6, 10, 8), "skip": (12, 20, 2)}
+
+
+def _chain_route():
+    """upsample → Route: the chain streams into one band of a multi-band
+    terminal while the other band gathers from its own source."""
+    mu = af.upsample_map((5, 7, 3), 2)
+    maps = tuple(af.route_maps([(10, 14, 3), (10, 14, 5)]))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("u",), "v", map_=mu),
+         TMInstr(TMOpcode.COARSE, ("v", "skip"), "y", maps=maps)],
+        inputs=("u", "skip"), outputs=("y",))
+    return prog, {"u": (5, 7, 3), "skip": (10, 14, 5)}
+
+
+def _chain_rme():
+    """reshape → Bboxcal: the layout step pulled into the RME kernel load."""
+    mr = af.reshape_map((3, 90), (3, 15, 6))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("p",), "r", map_=mr),
+         TMInstr(TMOpcode.FINE_EVALUATE, ("r",), "y",
+                 rme=RMEConfig(scheme="evaluate", threshold=50.0, cmp="ge",
+                               score_index=2, capacity=8),
+                 meta={"batch_dims": 1})],
+        inputs=("p",), outputs=("y",))
+    return prog, {"p": (3, 90)}
+
+
+def _chain_broken():
+    """transpose → split → transpose with the first intermediate ALSO read
+    by a trailing Add: the multi-consumer buffer breaks the chain mid-way —
+    only the (1, 2) suffix fuses and 'a' must still materialize."""
+    m1 = af.transpose_map((4, 6, 8))
+    m2 = af.split_map((6, 4, 8), 2, 1)
+    m3 = af.transpose_map((6, 4, 4))
+    ident = af.identity_map((6, 4, 8))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "a", map_=m1),
+         TMInstr(TMOpcode.COARSE, ("a",), "b", map_=m2),
+         TMInstr(TMOpcode.COARSE, ("b",), "c", map_=m3),
+         TMInstr(TMOpcode.COARSE, ("a", "r"), "y", map_=ident, ew=EwOp.ADD)],
+        inputs=("x", "r"), outputs=("y", "c"))
+    return prog, {"x": (4, 6, 8), "r": (6, 4, 8)}
+
+
+CHAIN_CASES = [
+    ChainCase("chain3", _chain3, ("pallas.chain",),
+              launches_unfused=3, launches_chained=1),
+    ChainCase("chain_superres", _chain_superres, ("pallas.chain",),
+              launches_unfused=3, launches_chained=1),
+    ChainCase("chain_route", _chain_route, ("pallas.chain+route",),
+              launches_unfused=3, launches_chained=1),
+    ChainCase("chain_rme", _chain_rme, ("pallas.chain+rme.evaluate",),
+              launches_unfused=2, launches_chained=1),
+    ChainCase("chain_broken", _chain_broken, ("pallas.chain",),
+              launches_unfused=4, launches_chained=3),
+]
+
+CHAIN_CASES_BY_NAME = {c.name: c for c in CHAIN_CASES}
+
+
+def run_chain_differential(case: ChainCase, dtype: str, batch_dims: int,
+                           rng: np.random.RandomState):
+    """Run one chain case unfused and chain-fused on pallas, against the
+    reference engine; assert bit-exactness and honest launch accounting.
+    Returns the chained lowering report."""
+    prog, shapes = case.build()
+    op_view = OpCase(case.name, case.build, (), dtypes=case.dtypes,
+                     scale=case.scale)
+    bufs = make_inputs(op_view, shapes, dtype, batch_dims, rng)
+    ref = TMExecutor(backend="reference")
+    unfused = TMExecutor(backend="pallas")
+    chained = TMExecutor(backend="pallas", fuse_chains=True)
+    r_ref, _, _ = ref.run(prog, bufs, batch_dims=batch_dims)
+    r_unf, rep_unf, _ = unfused.run(prog, bufs, batch_dims=batch_dims)
+    r_chn, rep_chn, _ = chained.run(prog, bufs, batch_dims=batch_dims)
+    assert_agree(op_view, r_ref, r_unf, "ref/pallas")
+    assert_agree(op_view, r_ref, r_chn, "ref/chained")
+    assert rep_unf.launch_count() == case.launches_unfused, (
+        case.name, rep_unf.records)
+    assert rep_chn.launch_count() == case.launches_chained, (
+        case.name, rep_chn.records)
+    chain_paths = tuple(r.path for r in rep_chn.records if r.is_chain)
+    assert chain_paths == case.expect_chain_paths, (
+        case.name, chain_paths, rep_chn.records)
+    # instruction accounting must balance: chained records cover them all
+    assert rep_chn.instr_count() == rep_unf.instr_count() == len(prog.instrs)
+    return rep_chn
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,269 @@
+"""Chain fusion — forwarding chains as single segment-streaming megakernels.
+
+Covers the whole stack: chain grouping (fusion.forwarding_chains), the chain
+kernels (tm_affine.chain / rme_gather chained evaluate), executor integration
+(TMExecutor(fuse_chains=True)), honest launch accounting
+(Lowering.launches/instrs), the chained cycle model, scratch-plan tie-in,
+compiled programs and the serving admission sweep."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import affine as af
+from repro.core.executor import TMExecutor
+from repro.core.fusion import forwarding_chains
+from repro.core.instr import EwOp, TMInstr, TMOpcode, TMProgram
+from repro.core.schedule import CycleParams, ping_pong_shape, schedule
+
+from tests.harness import (CHAIN_CASES, CHAIN_CASES_BY_NAME,
+                           run_chain_differential)
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(7)
+
+
+# ---------------------------------------------------------------------------
+# differential sweep: dtypes × batch dims × odd shapes, unfused vs chained
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", CHAIN_CASES, ids=lambda c: c.name)
+def test_chain_differential_default(case, rng):
+    for dtype in case.dtypes:
+        run_chain_differential(case, dtype, 0, rng)
+
+
+@pytest.mark.parametrize("batch_dims", [1, 2])
+@pytest.mark.parametrize("case", CHAIN_CASES, ids=lambda c: c.name)
+def test_chain_differential_batched(case, batch_dims, rng):
+    if not case.supports_batch:
+        pytest.skip("no batch lift")
+    run_chain_differential(case, "float32", batch_dims, rng)
+
+
+def test_chain_record_segments_match_schedule(rng):
+    """The chain record's grid size equals the chained cycle model's segment
+    count — same plan_segments on the final output, one source."""
+    case = CHAIN_CASES_BY_NAME["chain3"]
+    rep = run_chain_differential(case, "float32", 0, rng)
+    prog, shapes = case.build()
+    sched = schedule(prog, shapes)
+    (chain_rec,) = [r for r in rep.records if r.is_chain]
+    assert len(sched.chain_reports) == 1
+    assert chain_rec.segments == sched.chain_reports[0]["segments_chained"]
+
+
+# ---------------------------------------------------------------------------
+# grouping + fallback behaviour
+# ---------------------------------------------------------------------------
+
+def test_forwarding_chains_grouping():
+    m1 = af.transpose_map((4, 6, 8))
+    m2 = af.split_map((6, 4, 8), 2, 1)
+    m3 = af.transpose_map((6, 4, 4))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "a", map_=m1),
+         TMInstr(TMOpcode.COARSE, ("a",), "b", map_=m2),
+         TMInstr(TMOpcode.COARSE, ("b",), "y", map_=m3)],
+        inputs=("x",), outputs=("y",))
+    (chain,) = forwarding_chains(prog)
+    assert chain.instrs == (0, 1, 2)
+    assert chain.buffers == ("a", "b")
+
+
+def test_multi_consumer_breaks_chain():
+    case = CHAIN_CASES_BY_NAME["chain_broken"]
+    prog, _ = case.build()
+    chains = forwarding_chains(prog)
+    assert [c.instrs for c in chains] == [(1, 2)]
+    assert all("a" not in c.buffers for c in chains)
+
+
+def test_unclaimed_chain_falls_back_per_instruction(rng):
+    """A forwardable chain whose link the chain registry cannot execute
+    (RESIZE) must fall back to per-instruction lowering, bit-exact."""
+    m = af.transpose_map((6, 9, 3))
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "a", map_=m),
+         TMInstr(TMOpcode.RESIZE, ("a",), "y",
+                 meta={"out_h": 11, "out_w": 5})],
+        inputs=("x",), outputs=("y",))
+    assert len(forwarding_chains(prog)) == 1
+    bufs = {"x": jnp.asarray(rng.rand(6, 9, 3).astype(np.float32))}
+    ref, _, _ = TMExecutor(backend="reference").run(prog, bufs)
+    chained = TMExecutor(backend="pallas", fuse_chains=True)
+    got, rep, _ = chained.run(prog, bufs)
+    np.testing.assert_allclose(np.asarray(ref["y"]), np.asarray(got["y"]),
+                               atol=1e-5, rtol=0)
+    assert rep.chain_count() == 0
+    assert rep.launch_count() == 2  # one per instruction — nothing fused
+
+
+def test_partial_chain_fuses_claimable_prefix(rng):
+    """A chain whose TERMINAL link the registry cannot execute must still
+    fuse the claimable prefix: transpose→split fuse to one launch, the
+    RESIZE tail lowers alone — 2 launches instead of 3."""
+    m1 = af.transpose_map((9, 6, 4))
+    m2 = af.split_map((6, 9, 4), 2, 1)
+    prog = TMProgram(
+        [TMInstr(TMOpcode.COARSE, ("x",), "a", map_=m1),
+         TMInstr(TMOpcode.COARSE, ("a",), "b", map_=m2),
+         TMInstr(TMOpcode.RESIZE, ("b",), "y",
+                 meta={"out_h": 11, "out_w": 5})],
+        inputs=("x",), outputs=("y",))
+    (chain,) = forwarding_chains(prog)
+    assert chain.instrs == (0, 1, 2)
+    bufs = {"x": jnp.asarray(rng.rand(9, 6, 4).astype(np.float32))}
+    ref, _, _ = TMExecutor(backend="reference").run(prog, bufs)
+    got, rep, _ = TMExecutor(backend="pallas", fuse_chains=True).run(
+        prog, bufs)
+    np.testing.assert_allclose(np.asarray(ref["y"]), np.asarray(got["y"]),
+                               atol=1e-5, rtol=0)
+    assert rep.chain_count() == 1
+    assert rep.launch_count() == 2
+    (chain_rec,) = [r for r in rep.records if r.is_chain]
+    assert chain_rec.instrs == 2 and chain_rec.dst == "b"
+
+
+def test_fuse_chains_off_is_identical(rng):
+    """fuse_chains=False must be byte-for-byte the old per-instruction
+    path (same records, one per instruction)."""
+    case = CHAIN_CASES_BY_NAME["chain3"]
+    prog, shapes = case.build()
+    bufs = {k: jnp.asarray(rng.rand(*v).astype(np.float32))
+            for k, v in shapes.items()}
+    off = TMExecutor(backend="pallas")
+    out, rep, _ = off.run(prog, bufs)
+    assert [r.instrs for r in rep.records] == [1, 1, 1]
+    assert rep.chain_count() == 0
+
+
+# ---------------------------------------------------------------------------
+# chained cycle model + scratch-plan tie-in
+# ---------------------------------------------------------------------------
+
+def test_chained_cycle_model_reports():
+    case = CHAIN_CASES_BY_NAME["chain_superres"]
+    prog, shapes = case.build()
+    rep = schedule(prog, shapes)
+    assert len(rep.chains) == 1
+    assert rep.chained_cycles < rep.pipelined_cycles
+    (row,) = rep.chain_reports
+    assert row["launches_unfused"] == 3 and row["launches_chained"] == 1
+    assert row["realized_chained"] < row["unfused_pipelined"]
+    assert row["modeled_forwarded"] > 0
+    assert rep.launches(chained=False) == 3
+    assert rep.launches(chained=True) == 1
+
+
+def test_route_launch_accounting_in_model():
+    """A multi-band Route is one launch per band in the model — matching the
+    kernel registry's launches report."""
+    case = CHAIN_CASES_BY_NAME["chain_route"]
+    prog, shapes = case.build()
+    rep = schedule(prog, shapes)
+    assert rep.launches(chained=False) == 3   # upsample + 2 bands
+    assert rep.launches(chained=True) == 1
+
+
+def test_scratch_plan_streams_at_ping_pong_shape(rng):
+    from repro.compiler import tm_compile
+    from repro.models.cnn import superres_tail
+    x = jnp.asarray(rng.rand(1, 12, 20, 8).astype(np.float32))
+    skip = jnp.asarray(rng.rand(1, 24, 40, 2).astype(np.float32))
+    c = tm_compile(lambda a, b: superres_tail(a, b, s=2), x, skip)
+    plan = c.scratch_plan
+    assert plan.streamed
+    p = c.params or CycleParams()
+    for name in plan.streamed:
+        shp = plan.kernel_scratch_shapes[name]
+        assert shp == ping_pong_shape(c.graph.shape(name), plan.itemsize,
+                                      p.segment_bytes)
+        assert shp[0] == 2  # the ping-pong pair
+        slot = plan.slot_bytes[plan.slot_of[name]]
+        assert slot >= min(
+            int(np.prod(c.graph.shape(name))) * plan.itemsize,
+            int(np.prod(shp)) * plan.itemsize)
+
+
+# ---------------------------------------------------------------------------
+# compiled programs + serving admission
+# ---------------------------------------------------------------------------
+
+def _compiled_blocks(rng):
+    from repro.models.cnn import detect_tail_raw, superres_tail, yolo_neck
+
+    def arr(s, scale=1.0):
+        return jnp.asarray((rng.rand(*s) * scale).astype(np.float32))
+
+    return [
+        ("superres_tail", (lambda a, b: superres_tail(a, b, s=2)),
+         (arr((1, 6, 10, 8)), arr((1, 12, 20, 2)))),
+        ("yolo_neck", yolo_neck,
+         (arr((1, 5, 7, 6)), arr((1, 10, 14, 3)))),
+        ("detect_tail", (lambda p: detect_tail_raw(p, 10.0, 16)),
+         (arr((2, 5, 7, 18), 100.0),)),
+    ]
+
+
+def test_compiled_programs_execute_chains(rng):
+    """Every forwardable chain of the compiled CNN blocks runs as ONE
+    kernel (launches: one per chain), bit-exact with the unfused path."""
+    from repro.compiler import tm_compile
+    for name, fn, args in _compiled_blocks(rng):
+        ref = fn(*args)
+        c = tm_compile(fn, *args)
+        out_u, reps_u = c.run(*args, backend="pallas")
+        out_c, reps_c = c.run(*args, backend="pallas", fuse_chains=True)
+        assert np.array_equal(np.asarray(ref, dtype=np.float64),
+                              np.asarray(out_c, dtype=np.float64)), name
+        assert np.array_equal(np.asarray(out_u, dtype=np.float64),
+                              np.asarray(out_c, dtype=np.float64)), name
+        launches_u = sum(r.launch_count() for r in reps_u)
+        launches_c = sum(r.launch_count() for r in reps_c)
+        chains = sum(r.chain_count() for r in reps_c)
+        n_model_chains = c.partition_report.forwarding_chains
+        assert chains == n_model_chains >= 1, name
+        assert launches_c < launches_u, (name, launches_u, launches_c)
+        # one launch per chain: every chained phase record is chain-or-single
+        for rep in reps_c:
+            for r in rep.records:
+                assert r.launches == 1 or not r.is_chain
+
+
+def test_serving_pins_chaining_and_predicts_with_it(rng):
+    from repro.compiler import tm_compile
+    from repro.serving import (ServerConfig, TMServer, predict_cycles,
+                               select_chain_fusion)
+    from repro.models.cnn import yolo_neck
+    u = jnp.asarray(rng.rand(5, 7, 6).astype(np.float32))
+    skip = jnp.asarray(rng.rand(10, 14, 3).astype(np.float32))
+    c = tm_compile(yolo_neck, u, skip)
+    pin, rows = select_chain_fusion(c.partition_report)
+    assert pin and rows["launches_chained"] < rows["launches_unfused"]
+    # predict_cycles must switch to realized (chained) counts when pinned
+    tmu_unf, _ = predict_cycles(c)
+    tmu_chn, _ = predict_cycles(c, fuse_chains=True)
+    assert tmu_chn == c.partition_report.chained_cycles != tmu_unf
+
+    with TMServer(ServerConfig(backend="pallas", max_batch=2)) as srv:
+        got = srv(yolo_neck, u, skip)
+        assert np.array_equal(np.asarray(got), np.asarray(yolo_neck(u, skip)))
+        entries = list(srv.cache._entries.values())
+        assert entries and all(e.fuse_chains for e in entries)
+        assert all(e.selection["fuse_chains"]["winner"] for e in entries)
+
+
+def test_serving_chaining_disabled_keeps_unfused(rng):
+    from repro.serving import ServerConfig, TMServer
+    from repro.models.cnn import yolo_neck
+    u = jnp.asarray(rng.rand(5, 7, 6).astype(np.float32))
+    skip = jnp.asarray(rng.rand(10, 14, 3).astype(np.float32))
+    with TMServer(ServerConfig(backend="pallas", max_batch=2,
+                               select_chaining=False)) as srv:
+        got = srv(yolo_neck, u, skip)
+        assert np.array_equal(np.asarray(got), np.asarray(yolo_neck(u, skip)))
+        entries = list(srv.cache._entries.values())
+        assert entries and not any(e.fuse_chains for e in entries)

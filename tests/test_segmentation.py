@@ -40,6 +40,9 @@ def test_block_mode_grid_equals_cycle_model_segments(rng):
     assert rec.path == "pallas.block"
     assert rec.segments == rep.timings[0].n_segments, (
         rec.segments, rep.timings[0].n_segments)
+    # explicit launch accounting: one kernel launch, covering one instruction
+    assert (rec.launches, rec.instrs) == (1, 1)
+    assert lowering.launch_count() == rep.launches() == 1
 
 
 def test_gather_mode_grid_equals_cycle_model_segments(rng):
@@ -51,6 +54,7 @@ def test_gather_mode_grid_equals_cycle_model_segments(rng):
     rec = lowering.records[0]
     assert rec.path == "pallas.gather"
     assert rec.segments == rep.timings[0].n_segments
+    assert rec.launches == 1 and lowering.launch_count() == rep.launches()
 
 
 def test_chain_every_instruction_agrees(rng):
@@ -67,6 +71,8 @@ def test_chain_every_instruction_agrees(rng):
     for rec, t in zip(lowering.records, rep.timings):
         assert rec.segments is not None
         assert rec.segments == t.n_segments, (rec, t)
+        assert rec.launches == t.launches == 1
+    assert lowering.launch_count() == rep.launches() == 3
 
 
 def test_route_bands_sum_segments(rng):
@@ -82,6 +88,9 @@ def test_route_bands_sum_segments(rng):
     rec = lowering.records[0]
     assert rec.path == "pallas.route"
     assert rec.segments == rep.timings[0].n_segments
+    # one launch per band — the kernel report and the cycle model agree
+    assert rec.launches == 2
+    assert lowering.launch_count() == rep.launches() == 2
 
 
 def test_batched_rme_segments_agree_with_cycle_model(rng):
