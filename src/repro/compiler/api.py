@@ -5,11 +5,22 @@
     y = compiled(*args, backend="pallas")    # TM phases on the Pallas kernels
     print(compiled.report())                 # trace/pass/partition/scratch
 
-The compiled object executes the partitioned graph phase by phase: opaque
-TPU nodes re-bind their jaxpr equations (XLA's job), TMU phases run through
-the :class:`~repro.core.executor.TMExecutor` on any of the three backends —
-so one compilation is differential-testable across reference / fused /
-pallas exactly like a hand-written :class:`~repro.core.instr.TMProgram`.
+The compiled object executes the partitioned phase DAG.  Opaque TPU phases
+are each jitted as **one XLA computation** (dead intermediates donated, so
+XLA reuses their buffers); TMU phases run through the
+:class:`~repro.core.executor.TMExecutor` on any of the three backends — so
+one compilation is differential-testable across reference / fused / pallas
+exactly like a hand-written :class:`~repro.core.instr.TMProgram`.
+
+Two execution modes share the same phase DAG:
+
+* **blocking** (``run(*args)``) — walk the phases in program order on the
+  calling thread; the honest single-engine baseline;
+* **stream-ordered** (``run(*args, runtime=...)`` or
+  :meth:`CompiledTMProgram.run_async`) — submit every phase onto its
+  engine's stream (:mod:`repro.runtime.streams`) with its DAG in-edges as
+  event dependencies.  Independent phases overlap across the TMU/TPU
+  engines; the host synchronizes only at sinks.
 """
 
 from __future__ import annotations
@@ -26,9 +37,30 @@ from repro.core.schedule import CycleParams
 from repro.core.tm_primitive import tag_tm_ops
 from repro.compiler.allocate import ScratchPlan, allocate
 from repro.compiler.ir import TMGraph, eval_tpu_node
-from repro.compiler.partition import PartitionReport, partition
+from repro.compiler.partition import PartitionReport, Phase, partition
 from repro.compiler.passes import PassReport, run_pipeline
 from repro.compiler.trace import graph_from_jaxpr
+
+
+# sentinel stored on Phase.jit_fn once jit staging failed for the phase —
+# later executions go straight to the eager per-eqn fallback
+_JIT_DECLINED = object()
+
+
+@dataclasses.dataclass
+class TPUPhaseReport:
+    """Launch accounting for one opaque TPU phase execution.
+
+    ``xla_computations`` is 1 when the phase ran through its jitted callable
+    — the whole equation run is a single XLA computation per call (the
+    compile-mode contract); the eager fallback binds each equation
+    separately."""
+
+    phase_index: int
+    n_eqns: int
+    jitted: bool
+    xla_computations: int
+    donated: tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -68,9 +100,48 @@ class CompiledTMProgram:
             self.scratch_plan.summary(),
         ])
 
+    # --- TPU phases: one jitted XLA computation each ----------------------
+    def _donatable(self, phase: Phase) -> tuple[int, ...]:
+        """Argument positions of ``phase.reads`` safe to donate: buffers
+        this phase is the SOLE consumer of (and that are not graph
+        inputs/consts/outputs).  Sole-consumer is the schedule-independent
+        condition — under stream dispatch a sibling phase that also reads
+        the buffer may run concurrently, so "no later reader in program
+        order" is not enough.  XLA may then write outputs into the donated
+        buffers."""
+        pinned = (set(self.graph.inputs) | set(self.graph.consts)
+                  | set(self.graph.outputs))
+        other_reads = {name for ph in self.partition_report.phases
+                       if ph.index != phase.index for name in ph.reads}
+        return tuple(i for i, name in enumerate(phase.reads)
+                     if name not in pinned and name not in other_reads)
+
+    def _tpu_phase_fn(self, phase: Phase):
+        """The phase's jitted callable (built once, cached on the phase —
+        repeat executions and warm serving entries reuse the executable).
+        The donated-name tuple is cached alongside it."""
+        if phase.jit_fn is None:
+            nodes = [self.graph.nodes[i] for i in phase.node_indices]
+            reads, writes = phase.reads, phase.writes
+
+            def phase_fn(*vals):
+                env = dict(zip(reads, vals))
+                for node in nodes:
+                    eval_tpu_node(node, env)
+                return tuple(env[n] for n in writes)
+
+            # buffer donation only exists on accelerator backends; on CPU
+            # XLA refuses the aliasing and jax warns per compile — so only
+            # donate where the donation is real
+            donate = (self._donatable(phase)
+                      if jax.default_backend() in ("tpu", "gpu") else ())
+            phase.donated = tuple(phase.reads[i] for i in donate)
+            phase.jit_fn = jax.jit(phase_fn, donate_argnums=donate)
+        return phase.jit_fn
+
     # --- execution --------------------------------------------------------
     # Split into bind_inputs / run_phase / outputs_from so the serving
-    # pipeline can interleave one program's phases with other requests'.
+    # pipeline can dispatch one program's phases through the engine streams.
 
     def bind_inputs(self, *args) -> dict[str, Any]:
         """Validate ``args`` against the compiled signature; return the
@@ -94,20 +165,50 @@ class CompiledTMProgram:
             env[name] = val
         return env
 
-    def run_phase(self, phase, env: dict[str, Any], *,
+    def run_phase(self, phase: Phase, env: dict[str, Any], *,
                   backend: str = "fused",
                   interpret: bool = True,
-                  fuse_chains: bool = False) -> LoweringReport | None:
+                  fuse_chains: bool = False,
+                  ) -> LoweringReport | TPUPhaseReport:
         """Execute one partition phase against ``env`` (mutated in place).
 
-        ``fuse_chains`` (pallas backend) executes each forwarding chain of
-        the phase as ONE segment-streaming kernel — the streamed buffers of
-        the scratch plan never materialize.  Returns the TM phase's lowering
-        report (None for TPU phases)."""
+        A TPU phase runs its jitted callable — ONE XLA computation per call,
+        dead intermediates donated — and returns a :class:`TPUPhaseReport`;
+        a TMU phase runs through the executor and returns its
+        :class:`~repro.core.dispatch.LoweringReport`.  ``fuse_chains``
+        (pallas backend) executes each forwarding chain of the phase as ONE
+        segment-streaming kernel — the streamed buffers of the scratch plan
+        never materialize."""
         if phase.kind == "tpu":
-            for i in phase.node_indices:
+            if phase.jit_fn is not _JIT_DECLINED:
+                try:
+                    outs = self._tpu_phase_fn(phase)(
+                        *[env[n] for n in phase.reads])
+                except Exception:
+                    if phase.jit_ok:
+                        # the executable has worked before: this is a
+                        # genuine runtime/data error, not a staging refusal
+                        # — propagate it instead of silently degrading the
+                        # warm entry to per-eqn execution forever
+                        raise
+                    # never staged successfully (host callbacks, impure
+                    # prims): remember the decline so warm calls skip
+                    # straight to eager instead of re-paying a failing
+                    # trace; a genuine data error re-raises from eager
+                    phase.jit_fn = _JIT_DECLINED
+                else:
+                    phase.jit_ok = True
+                    env.update(zip(phase.writes, outs))
+                    return TPUPhaseReport(
+                        phase_index=phase.index,
+                        n_eqns=len(phase.node_indices),
+                        jitted=True, xla_computations=1,
+                        donated=phase.donated or ())
+            for i in phase.node_indices:   # eager per-eqn binding, bit-exact
                 eval_tpu_node(self.graph.nodes[i], env)
-            return None
+            return TPUPhaseReport(
+                phase_index=phase.index, n_eqns=len(phase.node_indices),
+                jitted=False, xla_computations=len(phase.node_indices))
         ex = TMExecutor(backend=backend, interpret=interpret,
                         params=self.params, fuse_chains=fuse_chains)
         bufs = {n: env[n] for n in phase.program.inputs}
@@ -119,27 +220,67 @@ class CompiledTMProgram:
         outs = [env[o] for o in self.graph.outputs]
         return jax.tree_util.tree_unflatten(self.out_tree, outs)
 
+    def run_async(self, env: dict[str, Any], *, runtime,
+                  backend: str = "fused", interpret: bool = True,
+                  fuse_chains: bool = False, label: str = ""):
+        """Submit every phase of the DAG onto ``runtime``'s engine streams.
+
+        Each phase becomes one stream task whose event dependencies are its
+        DAG in-edges (``phase.deps``) — independent phases overlap across
+        the TMU/TPU streams, and nothing blocks the calling thread.  Tasks
+        communicate through the shared ``env``: a producer binds its writes
+        before its event completes, so a consumer's reads are
+        happens-before-ordered by the event wait (buffer names are SSA —
+        no two phases write the same key).
+
+        Returns the phase events in phase order; each completed event's
+        ``result`` is ``(written arrays, LoweringReport | TPUPhaseReport)``.
+        Wait the sink events (or all of them) to synchronize."""
+        events = []
+        for phase in self.partition_report.phases:
+            def task(ph=phase):
+                rep = self.run_phase(ph, env, backend=backend,
+                                     interpret=interpret,
+                                     fuse_chains=fuse_chains)
+                return [env[n] for n in ph.writes], rep
+            events.append(runtime.submit(
+                phase.engine, task, deps=[events[d] for d in phase.deps],
+                label=f"{label}phase{phase.index}:{phase.kind}"))
+        return events
+
     def run(self, *args, backend: str = "fused", interpret: bool = True,
-            fuse_chains: bool = False) -> tuple[Any, list[LoweringReport]]:
+            fuse_chains: bool = False, runtime=None,
+            ) -> tuple[Any, list[LoweringReport]]:
         """Execute and return ``(outputs, per-TM-phase lowering reports)``.
 
-        Mutates no state on ``self`` — safe under concurrent callers (the
-        serving runtime's worker threads); :meth:`__call__` wraps this and
-        keeps ``last_lowering`` as an alias for the last call."""
+        With ``runtime`` (a :class:`~repro.runtime.streams.StreamRuntime`)
+        the phase DAG dispatches stream-ordered and this call synchronizes
+        only at the sinks; without it the phases run blocking, in program
+        order, on this thread.  Mutates no state on ``self`` — safe under
+        concurrent callers (the serving runtime's worker threads);
+        :meth:`__call__` wraps this and keeps ``last_lowering`` as an alias
+        for the last call."""
         env = self.bind_inputs(*args)
-        lowerings: list[LoweringReport] = []
-        for phase in self.partition_report.phases:
-            rep = self.run_phase(phase, env, backend=backend,
-                                 interpret=interpret,
-                                 fuse_chains=fuse_chains)
-            if rep is not None:
-                lowerings.append(rep)
+        reports: list[LoweringReport | TPUPhaseReport] = []
+        if runtime is not None:
+            events = self.run_async(env, runtime=runtime, backend=backend,
+                                    interpret=interpret,
+                                    fuse_chains=fuse_chains)
+            for ev in events:   # sink sync: deps complete transitively
+                reports.append(ev.wait()[1])
+        else:
+            for phase in self.partition_report.phases:
+                reports.append(self.run_phase(phase, env, backend=backend,
+                                              interpret=interpret,
+                                              fuse_chains=fuse_chains))
+        lowerings = [r for r in reports if isinstance(r, LoweringReport)]
         return self.outputs_from(env), lowerings
 
     def __call__(self, *args, backend: str = "fused",
-                 interpret: bool = True, fuse_chains: bool = False):
+                 interpret: bool = True, fuse_chains: bool = False,
+                 runtime=None):
         out, lowerings = self.run(*args, backend=backend, interpret=interpret,
-                                  fuse_chains=fuse_chains)
+                                  fuse_chains=fuse_chains, runtime=runtime)
         self.last_lowering = lowerings
         return out
 
@@ -149,7 +290,7 @@ def tm_compile(fn, *example_args,
     """Trace ``fn`` at ``example_args`` and lower it through the pipeline:
 
     jaxpr -> TM IR (trace) -> passes (map composition, copy elim, epilogue
-    sink, RME legalization) -> TPU/TMU partition + pipeline schedule ->
+    sink, RME legalization) -> TPU/TMU phase DAG + pipeline schedule ->
     scratch allocation.
     """
     flat_in, in_tree = jax.tree_util.tree_flatten(example_args)

@@ -102,6 +102,10 @@ class TMGraph:
     outputs: tuple[str, ...]
     consts: dict[str, Any]  # const buffers -> concrete values
     matched_prims: set[str] = dataclasses.field(default_factory=set)
+    # trace-time fallback notes: matchable-looking eqns the front end left
+    # opaque (traced dynamic_slice starts, matcher errors, …) — surfaced by
+    # the pass report so compilations explain their TPU residue
+    notes: list = dataclasses.field(default_factory=list)
 
     # --- queries ----------------------------------------------------------
     def producer_index(self, name: str, before: int | None = None) -> int | None:
@@ -141,6 +145,9 @@ class TMGraph:
     def summary(self) -> str:
         tm = len(self.tm_nodes())
         tpu = len(self.tpu_nodes())
-        return (f"TMGraph: {tm} TM instr(s), {tpu} TPU node(s), "
+        base = (f"TMGraph: {tm} TM instr(s), {tpu} TPU node(s), "
                 f"{len(self.buffers)} buffers, "
                 f"matched prims: {sorted(self.matched_prims)}")
+        if self.notes:
+            base += f", {len(self.notes)} trace note(s)"
+        return base

@@ -1,11 +1,20 @@
-"""TPU/TMU partitioning + schedule hookup.
+"""TPU/TMU partitioning + phase DAG + schedule hookup.
 
 Splits the optimized :class:`~repro.compiler.ir.TMGraph` into *phases* —
-maximal runs of same-kind nodes in program order.  Each TMU phase becomes a
-:class:`~repro.core.instr.TMProgram` and is handed to the pipeline scheduler
-(:func:`repro.core.schedule.schedule`) together with the forwarding edges
-found by :func:`repro.core.fusion.forwarding_edges`, so the cycle model
-reports the paper's three-way comparison (serialized / double-buffered /
+maximal runs of same-kind nodes in program order — and wires them into a
+**data-dependency DAG**: every phase records which buffers it ``reads`` from
+outside itself, which buffers it ``writes`` for downstream consumers, and
+the indices of the phases those reads depend on (``deps``).  Program order
+remains a valid topological order of the DAG, so the blocking executor walks
+the list exactly as before, while the stream runtime
+(:mod:`repro.runtime.streams`) submits each phase to its engine's queue and
+synchronizes only at the dependency edges — independent phases overlap.
+
+Each TMU phase becomes a :class:`~repro.core.instr.TMProgram` and is handed
+to the pipeline scheduler (:func:`repro.core.schedule.schedule`) together
+with the forwarding edges found by
+:func:`repro.core.fusion.forwarding_edges`, so the cycle model reports the
+paper's three-way comparison (serialized / double-buffered /
 output-forwarded) for the whole compiled program.
 """
 
@@ -24,6 +33,26 @@ class Phase:
     node_indices: list[int]        # indices into graph.nodes
     program: TMProgram | None = None       # tmu phases only
     schedule: ScheduleReport | None = None  # tmu phases only
+    # --- DAG wiring (filled by partition()) -------------------------------
+    index: int = 0                 # position in PartitionReport.phases
+    reads: tuple[str, ...] = ()    # buffers consumed from outside the phase
+    writes: tuple[str, ...] = ()   # buffers defined here, visible downstream
+    deps: tuple[int, ...] = ()     # phase indices whose writes this reads
+    # lazily-built jitted callable for TPU phases (one XLA computation per
+    # phase); owned by compiler.api — kept here so one compilation reuses
+    # its executable across calls and serving cache entries stay warm.
+    # jit_ok latches after the first successful jitted execution (later
+    # failures are data errors, not staging refusals); donated caches the
+    # buffer names the executable donates (computed once at build)
+    jit_fn: object | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    jit_ok: bool = dataclasses.field(default=False, compare=False)
+    donated: tuple[str, ...] | None = dataclasses.field(
+        default=None, compare=False)
+
+    @property
+    def engine(self) -> str:
+        return "tpu" if self.kind == "tpu" else "tmu"
 
 
 @dataclasses.dataclass
@@ -35,6 +64,7 @@ class PartitionReport:
     forwarding_edges: int
     chained_cycles: float = 0.0  # forwarding REALIZED: chains as megakernels
     forwarding_chains: int = 0
+    dag_edges: int = 0           # phase-level data-dependency edges
 
     @property
     def tmu_phases(self) -> list[Phase]:
@@ -46,6 +76,11 @@ class PartitionReport:
         return sum(ph.schedule.launches(chained=chained)
                    for ph in self.tmu_phases if ph.schedule is not None)
 
+    def sink_phases(self) -> list[Phase]:
+        """Phases no other phase depends on — the DAG's sync points."""
+        depended = {d for ph in self.phases for d in ph.deps}
+        return [ph for ph in self.phases if ph.index not in depended]
+
     @property
     def latency_reduction(self) -> float:
         if self.unpipelined_cycles == 0:
@@ -54,7 +89,8 @@ class PartitionReport:
 
     def summary(self) -> str:
         kinds = "".join("T" if p.kind == "tpu" else "M" for p in self.phases)
-        return (f"phases [{kinds}] (T=TPU, M=TMU): "
+        return (f"phases [{kinds}] (T=TPU, M=TMU), {self.dag_edges} dep "
+                f"edge(s), {len(self.sink_phases())} sink(s): "
                 f"{self.unpipelined_cycles:.0f} unpipelined -> "
                 f"{self.forwarded_cycles:.0f} forwarded TM cycles "
                 f"({self.latency_reduction:.1%} reduction, "
@@ -83,6 +119,27 @@ def _phase_program(graph: TMGraph, indices: list[int]) -> TMProgram:
     return TMProgram(instrs, inputs=tuple(reads), outputs=tuple(outs))
 
 
+def _tpu_reads_writes(graph: TMGraph, indices: list[int],
+                      ) -> tuple[tuple[str, ...], tuple[str, ...]]:
+    """(external reads, downstream-visible writes) of one TPU phase."""
+    nodes = [graph.nodes[i] for i in indices]
+    defined = {d for n in nodes for d in n.dsts}
+    reads: list[str] = []
+    for n in nodes:
+        for s in n.srcs:
+            if s not in defined and s not in reads:
+                reads.append(s)
+    last = max(indices)
+    writes: list[str] = []
+    for n in nodes:
+        for d in n.dsts:
+            used_later = any(d in graph.nodes[k].srcs
+                             for k in range(last + 1, len(graph.nodes)))
+            if (d in graph.outputs or used_later) and d not in writes:
+                writes.append(d)
+    return tuple(reads), tuple(writes)
+
+
 def partition(graph: TMGraph,
               params: CycleParams | None = None) -> PartitionReport:
     phases: list[Phase] = []
@@ -106,7 +163,28 @@ def partition(graph: TMGraph,
         chained += ph.schedule.chained_cycles
         n_edges += len(ph.schedule.forwards)
         n_chains += len(ph.schedule.chains)
+
+    # --- DAG wiring: reads/writes per phase, then producer edges ----------
+    producer: dict[str, int] = {}   # buffer -> phase index that writes it
+    dag_edges = 0
+    for idx, ph in enumerate(phases):
+        ph.index = idx
+        if ph.kind == "tmu":
+            ph.reads = tuple(ph.program.inputs)
+            ph.writes = tuple(ph.program.outputs)
+        else:
+            ph.reads, ph.writes = _tpu_reads_writes(graph, ph.node_indices)
+        deps = []
+        for name in ph.reads:
+            src = producer.get(name)   # graph inputs/consts have no producer
+            if src is not None and src not in deps:
+                deps.append(src)
+        ph.deps = tuple(sorted(deps))
+        dag_edges += len(ph.deps)
+        for name in ph.writes:
+            producer[name] = idx
+
     return PartitionReport(phases=phases, unpipelined_cycles=unpiped,
                            pipelined_cycles=piped, forwarded_cycles=fwded,
                            forwarding_edges=n_edges, chained_cycles=chained,
-                           forwarding_chains=n_chains)
+                           forwarding_chains=n_chains, dag_edges=dag_edges)

@@ -61,10 +61,14 @@ class PassReport:
     def rme_legalized(self) -> int:
         return self.count("rme-legalize")
 
+    @property
+    def trace_fallbacks(self) -> int:
+        return self.count("trace-fallback")
+
     def summary(self) -> str:
         lines = ["pass pipeline:"]
-        for name in ("compose-maps", "copy-elim", "epilogue-sink",
-                     "rme-legalize"):
+        for name in ("trace-fallback", "compose-maps", "copy-elim",
+                     "epilogue-sink", "rme-legalize"):
             fired = [a.detail for a in self.actions if a.pass_name == name]
             lines.append(f"  {name:14s} {len(fired)} rewrite(s)")
             lines.extend(f"    - {d}" for d in fired)
@@ -265,6 +269,11 @@ def legalize_rme_batch(graph: TMGraph, report: PassReport) -> None:
 
 def run_pipeline(graph: TMGraph) -> PassReport:
     report = PassReport()
+    # surface the front end's fallback notes first: matchable-looking eqns
+    # that stayed opaque (e.g. dynamic_slice with traced starts) explain
+    # themselves in the same report as the rewrites
+    for note in graph.notes:
+        report.record("trace-fallback", note)
     compose_coarse_chains(graph, report)
     eliminate_copies(graph, report)
     sink_epilogues(graph, report)

@@ -84,6 +84,11 @@ def _contains_tm(jaxpr) -> bool:
     return False
 
 
+class _MatchFallback(Exception):
+    """A matcher declining with an explanation: the eqn stays an opaque TPU
+    node and the reason lands in ``TMGraph.notes`` (pass-report surface)."""
+
+
 # ---------------------------------------------------------------------------
 # per-eqn matchers: eqn -> TMInstr ingredients (maps / rme / ew) or None
 # ---------------------------------------------------------------------------
@@ -142,7 +147,11 @@ def _match_tm(eqn, get_const):
         for v in eqn.invars[1:]:
             c = v.val if isinstance(v, Literal) else get_const(v)
             if c is None:
-                return None  # traced start index: not a register constant
+                # traced start index: no register constant to fold into the
+                # map's offsets — stay an opaque TPU phase (noted, not fatal)
+                raise _MatchFallback(
+                    "dynamic_slice: non-constant start index left opaque "
+                    "(runtime starts cannot become TMU register offsets)")
             starts.append(int(c))
         sizes = tuple(int(s) for s in eqn.params["slice_sizes"])
         # lax.dynamic_slice clamps each start so the window stays in bounds
@@ -204,6 +213,7 @@ class _Builder:
         self.buffers: dict[str, Buffer] = {}
         self.consts: dict = {}
         self.matched: set[str] = set()
+        self.notes: list[str] = []
 
     def fresh(self, prefix: str = "v") -> str:
         return f"{prefix}{next(self._n)}"
@@ -248,7 +258,17 @@ def _walk(builder: _Builder, jaxpr, consts, env) -> None:
             buf = env.get(v)
             return builder.consts.get(buf) if buf is not None else None
 
-        match = _match_tm(eqn, get_const) if _is_matchable(eqn) else None
+        match = None
+        if _is_matchable(eqn):
+            try:
+                match = _match_tm(eqn, get_const)
+            except _MatchFallback as note:
+                builder.notes.append(str(note))
+            except Exception as e:  # noqa: BLE001 — a matcher bug or shape
+                # edge must degrade the eqn to an opaque TPU node, never kill
+                # the whole trace; the note makes the residue explainable
+                builder.notes.append(
+                    f"{name}: matcher error left opaque ({e!r})")
         if match is not None and any(not isinstance(v, Literal)
                                      for v in eqn.invars):
             srcs = tuple(builder.operand(v, env) for v in eqn.invars
@@ -321,6 +341,7 @@ def graph_from_jaxpr(closed_jaxpr) -> TMGraph:
     outputs = tuple(builder.operand(v, env) for v in jaxpr.outvars)
     graph = TMGraph(nodes=builder.nodes, buffers=builder.buffers,
                     inputs=tuple(inputs), outputs=outputs,
-                    consts=builder.consts, matched_prims=builder.matched)
+                    consts=builder.consts, matched_prims=builder.matched,
+                    notes=builder.notes)
     graph.validate()
     return graph

@@ -113,6 +113,22 @@ class TMExecutor:
             raise KeyError(f"program did not produce outputs: {missing}")
         return {o: bufs[o] for o in prog.outputs}, lowering, fusion
 
+    def run_async(self, prog: TMProgram, buffers, *, runtime, deps=(),
+                  batch_dims: int = 0, label: str = "tm-program"):
+        """Submit ``prog`` onto ``runtime``'s TMU stream instead of running
+        it on the calling thread.
+
+        ``buffers`` is the input dict, or a zero-arg callable resolved on
+        the stream thread (so inputs produced by the ``deps`` events bind
+        after those events complete).  Returns the
+        :class:`~repro.runtime.streams.StreamEvent`; its result is this
+        executor's ``(outputs, lowering, fusion)`` triple once the work —
+        not merely its dispatch — has finished."""
+        def task():
+            bufs = buffers() if callable(buffers) else buffers
+            return self.run(prog, bufs, batch_dims=batch_dims)
+        return runtime.submit("tmu", task, deps=deps, label=label)
+
     def _run_chain(self, chain: ForwardChain, prog: TMProgram, bufs: dict,
                    batch_dims: int, lowering: LoweringReport) -> None:
         """Execute one chain region, fusing the longest claimable runs.

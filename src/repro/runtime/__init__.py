@@ -1,1 +1,13 @@
-"""Distributed runtime: sharding rules, step builders, fault tolerance."""
+"""Runtime layer: stream-ordered engine dispatch, sharding, fault tolerance.
+
+:mod:`repro.runtime.streams` is the single-host execution substrate — the
+per-engine (TMU/TPU) submission queues with events that the compiled-program
+and serving layers dispatch through.  The sharding/step/fault-tolerance
+modules extend the same layer toward multi-host serving.
+"""
+
+from repro.runtime.streams import (ENGINE_KINDS, Stream, StreamEvent,
+                                   StreamRuntime, overlap_from_events)
+
+__all__ = ["ENGINE_KINDS", "Stream", "StreamEvent", "StreamRuntime",
+           "overlap_from_events"]

@@ -1,0 +1,399 @@
+"""Stream-ordered TMU/TPU dispatch — per-engine submission queues + events.
+
+The paper's 34.6% end-to-end win (Section VI) comes from keeping the TMU and
+TPU engines *concurrently* busy; this module is the host-side runtime that
+realizes it.  The model is deliberately CUDA-stream-shaped:
+
+* a :class:`Stream` is one engine's submission queue: a dedicated worker
+  thread issues the **oldest ready** task — ready-dependency tasks run in
+  submission order, and a task whose in-edges are still pending never
+  head-blocks the queue (the TMU engine starts request *i+1*'s work while
+  request *i* waits on the TPU, the paper's ping-pong discipline);
+* a :class:`StreamEvent` is recorded per task.  It completes when the task's
+  *work* finishes — the stream thread resolves the task's returned arrays
+  with ``jax.block_until_ready`` before stamping ``t_end``, which is the
+  analogue of a device-side event timestamp (JAX's async dispatch would
+  otherwise stamp enqueue time, not compute time).  Readiness is awaited on
+  the stream's own thread, so it never stalls the other engine or the host;
+* cross-stream dependencies are expressed as events: a task waits for its
+  ``deps`` to complete before it starts.  Independent phases on different
+  streams therefore overlap, and the host synchronizes only at true sinks
+  (:meth:`StreamRuntime.synchronize`, or waiting a sink event).
+
+A failed task poisons its event; dependents observe the error, skip their
+work, and propagate the *original* exception — so a sink wait surfaces the
+first failure without deadlocking, and a skipped task never stamps a busy
+interval.
+
+:func:`overlap_from_events` turns completed events into the measured
+two-engine overlap ratio (both-busy time over any-busy time), directly
+comparable to the cycle model's :func:`repro.serving.server.predict_overlap`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+import threading
+import time
+import traceback
+from collections import deque
+from typing import Any, Callable, Iterable, Sequence
+
+import jax
+
+ENGINE_KINDS = ("tmu", "tpu")
+
+
+class StreamError(RuntimeError):
+    """Raised when interacting with a closed stream."""
+
+
+def _report_callback_error(label: str) -> None:
+    print(f"[repro.runtime] event done-callback failed for {label!r}:",
+          file=sys.stderr)
+    traceback.print_exc()
+
+
+@dataclasses.dataclass
+class StreamEvent:
+    """One submitted task's completion marker + timestamps.
+
+    Timestamps are ``time.monotonic()`` seconds.  ``t_start``/``t_end`` stay
+    ``None`` for tasks skipped because a dependency failed (they never
+    occupied the engine, so they must not count as busy time).
+    """
+
+    engine: str
+    label: str = ""
+    t_submit: float = 0.0
+    t_start: float | None = None
+    t_end: float | None = None
+    error: BaseException | None = None
+    result: Any = None
+
+    def __post_init__(self):
+        self._done = threading.Event()
+        self._callbacks: list[Callable[["StreamEvent"], None]] = []
+        self._cb_lock = threading.Lock()
+
+    # --- completion -------------------------------------------------------
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def duration_s(self) -> float:
+        if self.t_start is None or self.t_end is None:
+            return 0.0
+        return self.t_end - self.t_start
+
+    def wait(self, timeout: float | None = None) -> Any:
+        """Block until the task completed; return its result or re-raise its
+        (or its failed dependency's) exception."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"event {self.label!r} ({self.engine}) did "
+                               f"not complete within {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+    def add_done_callback(self, cb: Callable[["StreamEvent"], None]) -> None:
+        """Run ``cb(self)`` once the event completes (immediately if it
+        already has).  Callbacks usually fire on the stream's worker
+        thread; exceptions are swallowed (reported to stderr) — a raising
+        callback must never kill the worker."""
+        with self._cb_lock:
+            if not self._done.is_set():
+                self._callbacks.append(cb)
+                return
+        try:
+            cb(self)
+        except BaseException:  # noqa: BLE001 — see _complete
+            _report_callback_error(self.label)
+
+    def _complete(self) -> None:
+        with self._cb_lock:
+            self._done.set()
+            cbs, self._callbacks = self._callbacks, []
+        for cb in cbs:
+            try:
+                cb(self)
+            except BaseException:  # noqa: BLE001 — a raising callback runs
+                # on the stream's worker thread; letting it escape would
+                # kill the worker and wedge the whole stream
+                _report_callback_error(self.label)
+
+
+@dataclasses.dataclass
+class _Task:
+    fn: Callable[[], Any]
+    deps: tuple[StreamEvent, ...]
+    event: StreamEvent
+
+
+class Stream:
+    """One engine's submission queue, drained by a worker thread.
+
+    Issue order is **oldest-ready**: the worker issues the earliest-submitted
+    task whose dependency events have all completed.  A task with pending
+    in-edges never head-blocks the queue — exactly the paper's engine
+    discipline, where the TMU starts tile *i+1* while the TPU still consumes
+    tile *i*.  Tasks with satisfied dependencies therefore run in submission
+    order (FIFO), and data ordering is entirely carried by the events, so
+    results are deterministic even though issue order is not.
+
+    ``observer(event)`` is called after every completion (including skipped
+    tasks) — the serving stats and the event timeline hang off it.
+    """
+
+    def __init__(self, engine: str,
+                 observer: Callable[[StreamEvent], None] | None = None):
+        self.engine = engine
+        self.observer = observer
+        self._queue: deque[_Task] = deque()
+        self._cond = threading.Condition()
+        self._closed = False
+        self._inflight = 0          # popped but not yet completed
+        self._thread = threading.Thread(
+            target=self._worker, name=f"tm-stream-{engine}", daemon=True)
+        self._thread.start()
+
+    # --- submission -------------------------------------------------------
+    def submit(self, fn: Callable[[], Any],
+               deps: Sequence[StreamEvent] = (),
+               label: str = "") -> StreamEvent:
+        event = StreamEvent(engine=self.engine, label=label,
+                            t_submit=time.monotonic())
+        task = _Task(fn=fn, deps=tuple(deps), event=event)
+        with self._cond:
+            if self._closed:
+                raise StreamError(f"stream {self.engine!r} is closed")
+            self._queue.append(task)
+            self._cond.notify_all()
+        # a dependency completing (possibly on the OTHER engine's thread)
+        # may make this task issuable: poke the worker to re-scan
+        for dep in task.deps:
+            if not dep.done:
+                dep.add_done_callback(self._poke)
+        return event
+
+    def _poke(self, _event: StreamEvent) -> None:
+        with self._cond:
+            self._cond.notify_all()
+
+    def synchronize(self, timeout: float | None = None) -> bool:
+        """Block until every submitted task has completed."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._queue or self._inflight:
+                left = (None if deadline is None
+                        else max(0.0, deadline - time.monotonic()))
+                if left == 0.0 and deadline is not None:
+                    return False
+                self._cond.wait(timeout=0.05 if left is None
+                                else min(left, 0.05))
+            return True
+
+    def close(self) -> None:
+        """Drain remaining tasks, then stop the worker."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        self._thread.join()
+
+    # --- worker -----------------------------------------------------------
+    def _claim_locked(self) -> _Task | None:
+        """The oldest task whose in-edges have all signalled (caller holds
+        the lock); pending-dep tasks are skipped, never head-block."""
+        for i, task in enumerate(self._queue):
+            if all(dep.done for dep in task.deps):
+                del self._queue[i]
+                return task
+        return None
+
+    def _worker(self) -> None:
+        while True:
+            with self._cond:
+                task = self._claim_locked()
+                while task is None:
+                    if self._closed and not self._queue:
+                        return
+                    self._cond.wait(timeout=0.1)
+                    task = self._claim_locked()
+                self._inflight += 1
+            self._run(task)
+            with self._cond:
+                self._inflight -= 1
+                self._cond.notify_all()
+
+    def _run(self, task: _Task) -> None:
+        event = task.event
+        for dep in task.deps:   # already complete (issue condition); pick
+            if dep.error is not None and event.error is None:
+                event.error = dep.error   # up the ORIGINAL failure
+        if event.error is None:
+            event.t_start = time.monotonic()
+            try:
+                result = task.fn()
+                # resolve async dispatch on OUR thread so t_end is the work's
+                # completion (a device-event timestamp), not its enqueue; the
+                # other stream and the host keep running meanwhile
+                jax.block_until_ready(result)
+                event.result = result
+            except BaseException as e:  # noqa: BLE001 — delivered via event
+                event.error = e
+            event.t_end = time.monotonic()
+        event._complete()
+        if self.observer is not None:
+            try:
+                self.observer(event)
+            except BaseException:  # noqa: BLE001 — observers must not kill
+                pass               # the engine thread
+
+
+@dataclasses.dataclass(frozen=True)
+class EventRecord:
+    """A completed event's timeline entry: timestamps only, never the
+    result — the timeline must not pin task outputs (multi-MB activations)
+    for the runtime's lifetime."""
+
+    engine: str
+    label: str
+    t_submit: float
+    t_start: float | None
+    t_end: float | None
+
+
+class StreamRuntime:
+    """The two-engine (TMU/TPU) stream pair + completed-event timeline.
+
+    One runtime is one dispatch domain: the serving pipeline owns one for
+    its whole lifetime, a bare ``CompiledTMProgram.run(runtime=...)`` can own
+    one per call.  Observers see every completed event (after its record is
+    appended to the timeline); ``add_observer`` lets a consumer of a
+    caller-provided runtime (the serving pipeline's stats) tap the same
+    event flow without replacing the owner's observer.
+    """
+
+    def __init__(self, engines: Iterable[str] = ENGINE_KINDS,
+                 observer: Callable[[StreamEvent], None] | None = None,
+                 keep_events: int = 4096):
+        self._observers: list[Callable[[StreamEvent], None]] = \
+            [observer] if observer is not None else []
+        self._lock = threading.Lock()
+        self.events: deque[EventRecord] = deque(maxlen=keep_events)
+        self.streams: dict[str, Stream] = {
+            kind: Stream(kind, observer=self._on_event) for kind in engines}
+
+    def add_observer(self, cb: Callable[[StreamEvent], None]) -> None:
+        with self._lock:
+            self._observers.append(cb)
+
+    def remove_observer(self, cb: Callable[[StreamEvent], None]) -> None:
+        with self._lock:
+            if cb in self._observers:
+                self._observers.remove(cb)
+
+    def _on_event(self, event: StreamEvent) -> None:
+        with self._lock:
+            self.events.append(EventRecord(
+                engine=event.engine, label=event.label,
+                t_submit=event.t_submit, t_start=event.t_start,
+                t_end=event.t_end))
+            observers = list(self._observers)
+        for cb in observers:
+            cb(event)
+
+    def submit(self, engine: str, fn: Callable[[], Any],
+               deps: Sequence[StreamEvent] = (),
+               label: str = "") -> StreamEvent:
+        if engine not in self.streams:
+            raise ValueError(f"unknown engine {engine!r}; expected one of "
+                             f"{tuple(self.streams)}")
+        return self.streams[engine].submit(fn, deps=deps, label=label)
+
+    def synchronize(self, timeout: float | None = None) -> bool:
+        ok = True
+        for stream in self.streams.values():
+            ok = stream.synchronize(timeout=timeout) and ok
+        return ok
+
+    def close(self) -> None:
+        for stream in self.streams.values():
+            stream.close()
+
+    def timeline(self) -> list[EventRecord]:
+        with self._lock:
+            return list(self.events)
+
+    def overlap(self) -> dict:
+        return overlap_from_events(self.timeline())
+
+    def __enter__(self) -> "StreamRuntime":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# measured overlap from event timestamps
+# ---------------------------------------------------------------------------
+
+def merge_intervals(intervals: list[tuple[float, float]]) -> list[tuple[float, float]]:
+    out: list[tuple[float, float]] = []
+    for t0, t1 in sorted(intervals):
+        if out and t0 <= out[-1][1]:
+            out[-1] = (out[-1][0], max(out[-1][1], t1))
+        else:
+            out.append((t0, t1))
+    return out
+
+
+def intersect_seconds(a: list[tuple[float, float]],
+                   b: list[tuple[float, float]]) -> float:
+    total, i, j = 0.0, 0, 0
+    while i < len(a) and j < len(b):
+        lo = max(a[i][0], b[j][0])
+        hi = min(a[i][1], b[j][1])
+        if hi > lo:
+            total += hi - lo
+        if a[i][1] < b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return total
+
+
+def overlap_from_events(events: Iterable[StreamEvent | EventRecord]) -> dict:
+    """Measured two-engine overlap from realized event timestamps.
+
+    Returns per-engine busy seconds, union busy (``any_busy_s``),
+    concurrently-busy (``both_busy_s``) and the overlap ratio
+    ``both / any`` — 0 for fully serialized engines, →0.5 as both engines
+    stay equally and fully co-busy — the same quantity the cycle model's
+    ``predict_overlap`` estimates (``min / (tmu + tpu)``).
+    """
+    events = list(events)   # tolerate generators: we iterate twice
+    per_engine: dict[str, list[tuple[float, float]]] = {}
+    for ev in events:
+        if ev.t_start is None or ev.t_end is None:
+            continue  # skipped (failed-dependency) tasks were never busy
+        per_engine.setdefault(ev.engine, []).append((ev.t_start, ev.t_end))
+    merged = {k: merge_intervals(v) for k, v in per_engine.items()}
+    busy = {k: sum(t1 - t0 for t0, t1 in v) for k, v in merged.items()}
+    lanes = list(merged.values())
+    both = intersect_seconds(lanes[0], lanes[1]) if len(lanes) == 2 else 0.0
+    any_busy = sum(busy.values()) - both
+    starts = [iv[0][0] for iv in lanes if iv]
+    ends = [iv[-1][1] for iv in lanes if iv]
+    return {
+        "engine_busy_s": busy,
+        "any_busy_s": any_busy,
+        "both_busy_s": both,
+        "overlap_ratio": both / any_busy if any_busy > 0 else 0.0,
+        "span_s": (max(ends) - min(starts)) if starts else 0.0,
+        "events": sum(1 for ev in events
+                      if ev.t_start is not None and ev.t_end is not None),
+    }

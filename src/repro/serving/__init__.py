@@ -10,9 +10,12 @@ program; this subsystem applies the same scheme at *request* granularity:
   per shape class;
 * shape-bucketed micro-batching (batcher.py) — pad/coalesce/split around
   the vmap batch lift;
-* :class:`RequestPipeline` (pipeline.py) — two engine threads (TMU/TPU)
-  double-buffering requests through the compiled phase chains;
-* :class:`ServerStats` (stats.py) — throughput/latency/overlap accounting.
+* :class:`RequestPipeline` (pipeline.py) — depth-limited admission of
+  compiled phase DAGs onto the per-engine (TMU/TPU) streams of
+  :mod:`repro.runtime.streams`, double-buffering requests across engines;
+* :class:`ServerStats` (stats.py) — throughput/latency accounting + the
+  measured-from-event-timestamps overlap ratio next to the cycle model's
+  prediction.
 """
 
 from repro.serving.batcher import (BucketKey, Request, bucket_size, coalesce,

@@ -9,9 +9,10 @@ Key semantics:
 
 * **fn identity** — an explicit ``fn_key`` string when the caller provides
   one, else ``(module, qualname, id(fn))``.  The entry keeps a strong
-  reference to ``fn``, so a cached ``id`` can never be recycled by the
-  allocator while the entry is alive (two different lambdas can therefore
-  never alias one entry).
+  reference to ``fn`` *while cached*, so a cached ``id`` can never be
+  recycled by the allocator while the entry is live (two different lambdas
+  can therefore never alias one entry).  Eviction drops the pin — an evicted
+  entry must not keep the traced closure alive.
 * **shapes/dtypes** — of the *flattened, batched* arguments (the bucketed
   shape class, not the raw request).
 * **backend / params** — the *requested* execution config; the entry pins
@@ -70,7 +71,8 @@ class CacheEntry:
     """One pinned compilation + the admission-time config decision."""
 
     key: CacheKey
-    fn: Callable                    # strong ref: pins id(fn) while cached
+    fn: Callable | None             # pins id(fn) while cached; None once
+    #                                 evicted (the pin dies with residency)
     compiled: Any                   # CompiledTMProgram
     backend: str                    # selected (may differ from key.backend)
     params: CycleParams | None      # selected cycle params (pinned winner)
@@ -153,7 +155,12 @@ class CompileCache:
             self._entries[key] = entry
             self._entries.move_to_end(key)
             while len(self._entries) > self.capacity:
-                self._entries.popitem(last=False)
+                _, evicted = self._entries.popitem(last=False)
+                # drop the fn pin: the strong ref exists to keep id(fn)
+                # stable while the entry is CACHED; left in place it would
+                # keep the traced closure (and everything it captures) alive
+                # for as long as anyone holds the evicted entry
+                evicted.fn = None
                 self.evictions += 1
             self._inflight.pop(key).set()
         return entry, False

@@ -1,19 +1,25 @@
-"""Two-stage double-buffered request pipeline.
+"""Depth-limited request admission over the stream runtime.
 
 The paper hides TMU manipulation latency behind TPU compute with ping-pong
 buffers (Section VI: 34.6% end-to-end reduction).  This module applies the
-same discipline at *request* granularity: a compiled program is a chain of
-TPU and TMU phases, and two engine threads — one per phase kind — walk the
-admitted jobs so that request *i+1*'s TMU phases execute while request *i*
-occupies the TPU engine (and vice versa).  Admission is depth-limited
-(default 2, the ping-pong pair): at most ``depth`` requests are in flight,
-exactly like two buffers alternating between fill and drain.
+same discipline at *request* granularity, but the engine scheduling itself
+now lives in :mod:`repro.runtime.streams`: each admitted job's steps are
+submitted to the per-engine (TMU/TPU) streams with their dependency edges
+expressed as events, so request *i+1*'s TMU phases execute while request *i*
+occupies the TPU engine — and, when a job carries a phase DAG, independent
+phases of ONE request overlap too.  What remains here is pure admission
+policy: at most ``depth`` jobs are in flight (default 2, the ping-pong
+pair), exactly like two buffers alternating between fill and drain; the
+backlog admits FIFO as jobs complete.
 
-Within one job phases run strictly in order (phase k+1 needs phase k's
-buffers); across jobs each engine is FIFO by admission order, so results are
-deterministic and no request starves.  Engine busy intervals feed
-:class:`~repro.serving.stats.ServerStats`, whose measured overlap ratio is
-compared against the cycle model's prediction.
+Within one job, steps with no explicit ``deps`` run as a sequential chain
+(step k+1 waits step k's event); with ``deps`` they form a DAG and only true
+data edges synchronize.  Step errors propagate along dependency edges — the
+skipped downstream steps never occupy an engine — and ``on_done(error)``
+fires exactly once per job with the original failure.  Completed events feed
+:class:`~repro.serving.stats.ServerStats`, whose measured overlap ratio
+(from realized event timestamps) is compared against the cycle model's
+prediction.
 """
 
 from __future__ import annotations
@@ -22,133 +28,172 @@ import dataclasses
 import sys
 import threading
 import traceback
-from typing import Callable
+from typing import Callable, Sequence
 
-ENGINE_KINDS = ("tmu", "tpu")
+from repro.runtime.streams import ENGINE_KINDS, StreamRuntime
+
+__all__ = ["ENGINE_KINDS", "PipelineJob", "RequestPipeline"]
 
 
 @dataclasses.dataclass
 class PipelineJob:
-    """One admitted request (or micro-batch): an ordered phase chain.
+    """One admitted request (or micro-batch): a step chain or DAG.
 
     ``steps`` is a list of ``(kind, thunk)`` with kind in ``ENGINE_KINDS``;
-    ``on_done(error)`` fires exactly once, off the engine lock, with None on
-    success or the raising exception."""
+    a thunk's return value is resolved (``jax.block_until_ready``) on its
+    engine's stream thread before the step's event completes, so event
+    timestamps measure realized work.  ``deps[i]`` lists the step indices
+    step *i* must wait for (all < i); ``deps=None`` means the sequential
+    chain ``i-1 -> i``.  ``on_done(error)`` fires exactly once, off the
+    admission lock, with None on success or the first failing step's
+    exception."""
 
-    steps: list[tuple[str, Callable[[], None]]]
+    steps: list[tuple[str, Callable[[], object]]]
     on_done: Callable[[BaseException | None], None]
     label: str = ""
-    # scheduler state (owned by the pipeline lock)
-    idx: int = 0
-    running: bool = False
+    deps: Sequence[Sequence[int]] | None = None
 
     def __post_init__(self):
         for kind, _ in self.steps:
             if kind not in ENGINE_KINDS:
                 raise ValueError(f"unknown engine kind {kind!r}")
+        if self.deps is not None:
+            if len(self.deps) != len(self.steps):
+                raise ValueError(f"deps length {len(self.deps)} != "
+                                 f"steps length {len(self.steps)}")
+            for i, dd in enumerate(self.deps):
+                if any(d >= i or d < 0 for d in dd):
+                    raise ValueError(
+                        f"step {i} deps {tuple(dd)} must reference earlier "
+                        f"steps only (stream program order)")
 
 
 class RequestPipeline:
-    """Depth-limited two-engine scheduler for :class:`PipelineJob` chains."""
+    """Depth-limited admission of :class:`PipelineJob` DAGs onto the
+    TMU/TPU streams of one :class:`~repro.runtime.streams.StreamRuntime`."""
 
-    def __init__(self, stats=None, depth: int = 2):
+    def __init__(self, stats=None, depth: int = 2,
+                 runtime: StreamRuntime | None = None):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self.depth = depth
         self.stats = stats
+        self._ext_runtime = runtime       # caller-owned: never closed here
+        self.runtime: StreamRuntime | None = None
         self._lock = threading.Lock()
-        self._work = threading.Condition(self._lock)
+        self._drained = threading.Condition(self._lock)
         self._backlog: list[PipelineJob] = []
-        self._active: list[PipelineJob] = []
-        self._stop = False
-        self._threads: list[threading.Thread] = []
+        self._in_flight = 0
+        self._stop = True                 # not started yet
 
     # --- lifecycle --------------------------------------------------------
     def start(self) -> None:
-        if self._threads:
-            return
-        self._stop = False
-        for kind in ENGINE_KINDS:
-            t = threading.Thread(target=self._engine, args=(kind,),
-                                 name=f"tm-serve-{kind}", daemon=True)
-            t.start()
-            self._threads.append(t)
+        with self._lock:
+            if self.runtime is not None:
+                return
+            if self._ext_runtime is not None:
+                # tap the owner's event flow so stats keep measuring even
+                # on a caller-provided runtime (untapped on stop)
+                self._ext_runtime.add_observer(self._observe)
+                self.runtime = self._ext_runtime
+            else:
+                self.runtime = StreamRuntime(observer=self._observe)
+            self._stop = False
 
     def stop(self) -> None:
-        """Drain remaining jobs, then stop both engines."""
-        with self._work:
+        """Drain backlogged and in-flight jobs, then release the streams."""
+        with self._drained:
+            if self.runtime is None:
+                return
             self._stop = True
-            self._work.notify_all()
-        for t in self._threads:
-            t.join()
-        self._threads = []
+            while self._in_flight or self._backlog:
+                self._drained.wait(timeout=0.05)
+            if self.runtime is None:
+                return   # a concurrent stop() finished the release already
+            runtime, self.runtime = self.runtime, None
+        if self._ext_runtime is None:
+            runtime.synchronize()
+            runtime.close()
+        else:
+            runtime.remove_observer(self._observe)
+
+    def _observe(self, event) -> None:
+        if self.stats is not None:
+            self.stats.record_event(event)
 
     # --- submission -------------------------------------------------------
     def submit(self, job: PipelineJob) -> None:
         if not job.steps:
             job.on_done(None)
             return
-        with self._work:
-            if self._stop:
+        with self._lock:
+            if self._stop or self.runtime is None:
                 raise RuntimeError("pipeline is stopped")
             self._backlog.append(job)
-            self._admit_locked()
-            self._work.notify_all()
+            to_launch, runtime = self._admit_locked(), self.runtime
+        for j in to_launch:   # outside the lock: completion callbacks of an
+            self._launch(j, runtime)  # instant job re-enter the admission path
 
     def depth_in_flight(self) -> int:
         with self._lock:
-            return len(self._active) + len(self._backlog)
+            return self._in_flight + len(self._backlog)
 
-    def _admit_locked(self) -> None:
-        while self._backlog and len(self._active) < self.depth:
-            self._active.append(self._backlog.pop(0))
+    def _admit_locked(self) -> list[PipelineJob]:
+        """Claim admission slots (bumping ``_in_flight`` under the caller's
+        lock); the caller launches the returned jobs after releasing it.
+        ``stop()`` cannot release the streams meanwhile — it waits for
+        ``_in_flight`` to drain, which now includes these claims."""
+        launch = []
+        while self._backlog and self._in_flight < self.depth:
+            launch.append(self._backlog.pop(0))
+            self._in_flight += 1
+        return launch
 
-    # --- engines ----------------------------------------------------------
-    def _claim_locked(self, kind: str) -> PipelineJob | None:
-        for job in self._active:  # FIFO by admission order
-            if not job.running and job.steps[job.idx][0] == kind:
-                job.running = True
-                return job
-        return None
+    # --- stream dispatch --------------------------------------------------
+    def _launch(self, job: PipelineJob, runtime: StreamRuntime) -> None:
+        """Submit every step onto its engine's stream (non-blocking).  The
+        job finishes when all its events complete; errors propagate along
+        dependency edges, so the first failing step's exception is what
+        every poisoned event carries."""
+        events = []
+        for i, (kind, thunk) in enumerate(job.steps):
+            dep_idx = job.deps[i] if job.deps is not None else \
+                ((i - 1,) if i else ())
+            events.append(runtime.submit(
+                kind, thunk, deps=[events[d] for d in dep_idx],
+                label=f"{job.label}#{i}:{kind}"))
 
-    def _engine(self, kind: str) -> None:
-        while True:
-            with self._work:
-                job = self._claim_locked(kind)
-                while job is None:
-                    if self._stop and not self._active and not self._backlog:
-                        return
-                    self._work.wait(timeout=0.1)
-                    job = self._claim_locked(kind)
-            thunk = job.steps[job.idx][1]
-            err: BaseException | None = None
-            if self.stats is not None:
-                self.stats.engine_begin(kind)
-            try:
-                thunk()
-            except BaseException as e:  # noqa: BLE001 — delivered to on_done
-                err = e
-            finally:
-                if self.stats is not None:
-                    self.stats.engine_end(kind)
-            finished = False
-            with self._work:
-                job.running = False
-                if err is None:
-                    job.idx += 1
-                if err is not None or job.idx == len(job.steps):
-                    finished = True
-                    self._active.remove(job)
-                    self._admit_locked()
-                self._work.notify_all()
-            if finished:
-                try:
-                    job.on_done(err)
-                except BaseException:  # noqa: BLE001 — a raising completion
-                    # callback must never kill the engine thread (it would
-                    # stall every later job of this kind and hang stop()),
-                    # but it must not vanish either: the callback owns future
-                    # resolution, so a failure here likely strands clients
-                    print(f"[repro.serving] on_done callback failed for "
-                          f"job {job.label!r}:", file=sys.stderr)
-                    traceback.print_exc()
+        remaining = [len(events)]
+        counter_lock = threading.Lock()
+
+        def on_event_done(_ev) -> None:
+            with counter_lock:
+                remaining[0] -= 1
+                if remaining[0]:
+                    return
+            err = next((ev.error for ev in events if ev.error is not None),
+                       None)
+            self._finish(job, err)
+
+        for ev in events:
+            ev.add_done_callback(on_event_done)
+
+    def _finish(self, job: PipelineJob, err: BaseException | None) -> None:
+        try:
+            job.on_done(err)
+        except BaseException:  # noqa: BLE001 — a raising completion
+            # callback must never kill the stream worker that delivered it
+            # (it would stall every later job of this engine), but it must
+            # not vanish either: the callback owns future resolution, so a
+            # failure here likely strands clients
+            print(f"[repro.serving] on_done callback failed for "
+                  f"job {job.label!r}:", file=sys.stderr)
+            traceback.print_exc()
+        with self._drained:
+            self._in_flight -= 1
+            # keep admitting during stop(): it drains the backlog, it does
+            # not abandon it (submissions are what _stop forbids)
+            to_launch, runtime = self._admit_locked(), self.runtime
+            self._drained.notify_all()
+        for j in to_launch:
+            self._launch(j, runtime)

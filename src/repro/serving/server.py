@@ -344,13 +344,17 @@ class TMServer:
         except BaseException as e:  # noqa: BLE001
             self._fail_batch(batch, e, cold=not hit)
             return
-        steps = []
-        for phase in compiled.partition_report.phases:
-            steps.append((
-                "tpu" if phase.kind == "tpu" else "tmu",
-                lambda ph=phase: self._run_phase(compiled, ph, env,
-                                                 entry.backend,
-                                                 entry.fuse_chains)))
+        # the compiled phase DAG maps 1:1 onto pipeline steps: each phase
+        # goes to its engine's stream, synchronized only at its data
+        # in-edges — independent phases of this batch overlap, and the
+        # streams interleave this batch's phases with other admitted batches
+        phases = compiled.partition_report.phases
+        steps = [(phase.engine,
+                  lambda ph=phase: self._run_phase(compiled, ph, env,
+                                                   entry.backend,
+                                                   entry.fuse_chains))
+                 for phase in phases]
+        deps = [phase.deps for phase in phases]
 
         def on_done(err: BaseException | None) -> None:
             t_end = time.monotonic()
@@ -373,23 +377,20 @@ class TMServer:
 
         try:
             self.pipeline.submit(PipelineJob(
-                steps=steps, on_done=on_done,
+                steps=steps, deps=deps, on_done=on_done,
                 label=f"{batch[0].fn_key}x{size}"))
         except BaseException as e:  # noqa: BLE001 — shutdown race
             self._fail_batch(batch, e, cold=not hit)
 
     def _run_phase(self, compiled: CompiledTMProgram, phase, env: dict,
-                   backend: str, fuse_chains: bool = False) -> None:
+                   backend: str, fuse_chains: bool = False) -> list:
         compiled.run_phase(phase, env, backend=backend,
                            interpret=self.config.interpret,
                            fuse_chains=fuse_chains)
-        # engine busy time must be compute, not async dispatch latency
-        if phase.kind == "tpu":
-            produced = [n for i in phase.node_indices
-                        for n in compiled.graph.nodes[i].dst_names]
-        else:
-            produced = list(phase.program.outputs)
-        jax.block_until_ready([env[name] for name in produced])
+        # return the written buffers: the stream resolves them before
+        # stamping the event, so busy time is realized compute, not async
+        # dispatch latency
+        return [env[name] for name in phase.writes]
 
     def _fail_batch(self, batch: list[Request], err: BaseException,
                     *, cold: bool) -> None:

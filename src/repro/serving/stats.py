@@ -1,19 +1,21 @@
 """Serving counters: batching, latency, and pipeline-overlap accounting.
 
 One :class:`ServerStats` instance is shared by the batcher, the compile
-cache, and the two pipeline engines; everything is guarded by a single lock
+cache, and the stream runtime; everything is guarded by a single lock
 (counts are tiny compared to the work they describe).  ``snapshot()`` returns
 a plain dict — the benchmark rows and the ``/stats`` surface of
 :class:`~repro.serving.server.TMServer`.
 
-Overlap accounting mirrors the paper's ping-pong measurement at request
-granularity: engines mark busy/idle transitions (``engine_begin`` /
-``engine_end``), and the stats accumulate time with ≥1 engine busy vs. time
-with both busy — so idle gaps between request arrivals never count against
-the pipeline.  The measured overlap ratio is the fraction of total busy
-time hidden by running the two engines concurrently (0 = fully serialized,
-→0.5 = perfectly overlapped equal stages).  The *predicted* ratio comes
-from the cycle model at admission time
+Overlap accounting is **measured from stream-event timestamps**: every
+completed :class:`~repro.runtime.streams.StreamEvent` contributes its
+realized busy interval (``t_start``..``t_end``, stamped when the work — not
+its dispatch — finished), and the stats reduce the per-engine interval
+unions to time with ≥1 engine busy vs. time with both busy.  Idle gaps
+between request arrivals therefore never count against the pipeline.  The
+measured overlap ratio is the fraction of total busy time hidden by running
+the two engines concurrently (0 = fully serialized, →0.5 = perfectly
+overlapped equal stages) — directly comparable to the *predicted* ratio the
+cycle model emits at admission time
 (:func:`repro.serving.server.predict_overlap`).
 """
 
@@ -21,7 +23,12 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
+from collections import deque
+
+# intervals kept per engine for cross-engine intersection; incoming events
+# arrive in near-time order, so anything older than this window cannot
+# overlap a new interval in practice (each engine's stream is serial)
+_RECENT_INTERVALS = 512
 
 
 def _percentile(sorted_xs: list[float], q: float) -> float:
@@ -45,21 +52,21 @@ class ServerStats:
     cold_latency_s: list = dataclasses.field(default_factory=list)
     warm_latency_s: list = dataclasses.field(default_factory=list)
 
-    # pipeline engines: busy seconds, time >=1 / ==2 engines busy, and the
-    # activity span (first start .. last end; includes arrival gaps)
-    engine_busy_s: dict = dataclasses.field(
-        default_factory=lambda: {"tmu": 0.0, "tpu": 0.0})
-    any_busy_s: float = 0.0
-    both_busy_s: float = 0.0
-    span_start: float | None = None
-    span_end: float | None = None
-
     predicted_overlap: list = dataclasses.field(default_factory=list)
 
     def __post_init__(self):
         self._lock = threading.Lock()
-        self._active: dict[str, float] = {}   # kind -> begin timestamp
-        self._last_transition: float | None = None
+        # overlap accounting is INCREMENTAL — O(1) state and snapshot cost
+        # regardless of uptime: cumulative busy seconds per engine, the
+        # cumulative concurrently-busy seconds (each incoming interval is
+        # intersected against the other engine's recent window on record),
+        # and the activity span.  Per-engine intervals are disjoint (each
+        # stream is serial), so busy seconds are a plain sum.
+        self._busy: dict[str, float] = {}
+        self._recent: dict[str, deque] = {}
+        self._both_busy = 0.0
+        self._span_start: float | None = None
+        self._span_end: float | None = None
 
     # --- recording --------------------------------------------------------
     def record_submit(self, n: int = 1) -> None:
@@ -82,47 +89,64 @@ class ServerStats:
             (self.cold_latency_s if cold else
              self.warm_latency_s).append(latency_s)
 
-    def _transition(self, now: float) -> None:
-        """Caller holds the lock: charge the elapsed slice to the current
-        concurrency level before the engine set changes."""
-        if self._last_transition is not None and self._active:
-            dt = now - self._last_transition
-            self.any_busy_s += dt
-            if len(self._active) >= 2:
-                self.both_busy_s += dt
-        self._last_transition = now
+    def record_event(self, event) -> None:
+        """Ingest one completed stream event's realized busy interval.
 
-    def engine_begin(self, kind: str) -> float:
-        now = time.monotonic()
-        with self._lock:
-            self._transition(now)
-            self._active[kind] = now
-            if self.span_start is None or now < self.span_start:
-                self.span_start = now
-        return now
+        Skipped tasks (failed dependency — never occupied the engine) carry
+        no timestamps and are ignored."""
+        if event.t_start is None or event.t_end is None:
+            return
+        self.record_interval(event.engine, event.t_start, event.t_end)
 
-    def engine_end(self, kind: str) -> None:
-        now = time.monotonic()
+    def record_interval(self, engine: str, t_start: float,
+                        t_end: float) -> None:
         with self._lock:
-            self._transition(now)
-            begin = self._active.pop(kind, now)
-            self.engine_busy_s[kind] += now - begin
-            if self.span_end is None or now > self.span_end:
-                self.span_end = now
+            self._busy[engine] = self._busy.get(engine, 0.0) + \
+                (t_end - t_start)
+            for other, recent in self._recent.items():
+                if other == engine:
+                    continue
+                # newest-first: once an interval ends before ours starts,
+                # every older one does too (per-engine intervals are
+                # disjoint and time-ordered)
+                for a0, a1 in reversed(recent):
+                    if a1 <= t_start:
+                        break
+                    self._both_busy += max(
+                        0.0, min(a1, t_end) - max(a0, t_start))
+            self._recent.setdefault(
+                engine, deque(maxlen=_RECENT_INTERVALS)).append(
+                    (t_start, t_end))
+            if self._span_start is None or t_start < self._span_start:
+                self._span_start = t_start
+            if self._span_end is None or t_end > self._span_end:
+                self._span_end = t_end
 
     def record_predicted_overlap(self, ratio: float) -> None:
         with self._lock:
             self.predicted_overlap.append(ratio)
 
     # --- derived ----------------------------------------------------------
+    def _measure_locked(self) -> dict:
+        any_busy = sum(self._busy.values()) - self._both_busy
+        span = (self._span_end - self._span_start
+                if self._span_start is not None
+                and self._span_end is not None else 0.0)
+        return {
+            "engine_busy_s": dict(self._busy),
+            "any_busy_s": any_busy,
+            "both_busy_s": self._both_busy,
+            "overlap_ratio": (self._both_busy / any_busy
+                              if any_busy > 0 else 0.0),
+            "pipeline_span_s": span,
+        }
+
     def overlap_ratio(self) -> float:
-        """Measured: fraction of engine busy time hidden by concurrency
-        (idle gaps between requests are excluded — only busy time counts)."""
+        """Measured: fraction of engine busy time hidden by concurrency,
+        from realized event timestamps (idle gaps between requests are
+        excluded — only busy time counts)."""
         with self._lock:
-            busy = self.any_busy_s + self.both_busy_s
-            if busy <= 0.0:
-                return 0.0
-            return self.both_busy_s / busy
+            return self._measure_locked()["overlap_ratio"]
 
     def mean_batch_size(self) -> float:
         with self._lock:
@@ -134,10 +158,6 @@ class ServerStats:
         with self._lock:
             cold = sorted(self.cold_latency_s)
             warm = sorted(self.warm_latency_s)
-            busy = dict(self.engine_busy_s)
-            span = (self.span_end - self.span_start
-                    if self.span_start is not None
-                    and self.span_end is not None else 0.0)
             pred = (sum(self.predicted_overlap) / len(self.predicted_overlap)
                     if self.predicted_overlap else 0.0)
             snap = {
@@ -152,11 +172,7 @@ class ServerStats:
                 "cold_latency_p50_s": _percentile(cold, 0.5),
                 "warm_latency_p50_s": _percentile(warm, 0.5),
                 "warm_latency_p95_s": _percentile(warm, 0.95),
-                "engine_busy_s": busy,
-                "any_busy_s": self.any_busy_s,
-                "both_busy_s": self.both_busy_s,
-                "pipeline_span_s": span,
                 "predicted_overlap": pred,
             }
-        snap["overlap_ratio"] = self.overlap_ratio()
+            snap.update(self._measure_locked())
         return snap

@@ -309,6 +309,25 @@ def test_dynamic_slice_traced_start_stays_opaque(rng):
                           np.asarray(fn(x, jnp.int32(1))))
 
 
+def test_dynamic_slice_traced_start_leaves_pass_report_note(rng):
+    # the fallback must explain itself: the trace note rides the pass report
+    # (and never raises mid-trace), and execution stays bit-exact on the
+    # stream-dispatched path too
+    x = jnp.asarray(rng.rand(5, 7, 3).astype(np.float32))
+    fn = lambda a, i: jax.lax.dynamic_slice(a, (i, 0, 0), (2, 3, 3)) * 2.0
+    c = tm_compile(fn, x, jnp.int32(2))
+    assert c.pass_report.trace_fallbacks == 1
+    (note,) = [a.detail for a in c.pass_report.actions
+               if a.pass_name == "trace-fallback"]
+    assert "dynamic_slice" in note and "non-constant start" in note
+    assert "trace-fallback" in c.pass_report.summary()
+    assert c.graph.notes == [note]
+    from repro.runtime.streams import StreamRuntime
+    with StreamRuntime() as rt:
+        got, _ = c.run(x, jnp.int32(2), runtime=rt)
+    assert np.array_equal(np.asarray(got), np.asarray(fn(x, jnp.int32(2))))
+
+
 def test_traced_dynamic_slice_does_not_trigger_pjit_inlining(rng):
     # a jitted block whose only TM-shaped eqn is a dynamic_slice with a
     # traced start must stay one opaque TPU node (no per-eqn explosion)

@@ -1,0 +1,297 @@
+"""Stream runtime tests: event ordering, failure propagation, phase DAG,
+jitted TPU phases, and the concurrent soak.
+
+The acceptance bar of the async-engine refactor: phases dispatch
+stream-ordered (a phase never starts before its in-edge events signal),
+opaque TPU phases execute as exactly ONE XLA computation each (asserted via
+launch accounting and the jit cache), and a 4-thread × 8-request soak
+through the shared stream runtime stays bit-exact against direct ``fn``
+calls on every executor backend.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.compiler import tm_compile
+from repro.compiler.api import TPUPhaseReport
+from repro.core.dispatch import LoweringReport
+from repro.core.executor import BACKENDS, TMExecutor
+from repro.core.instr import TMInstr, TMOpcode, TMProgram
+from repro.models import cnn
+from repro.runtime.streams import (Stream, StreamError, StreamRuntime,
+                                   intersect_seconds, merge_intervals,
+                                   overlap_from_events)
+
+
+# ---------------------------------------------------------------------------
+# streams + events
+# ---------------------------------------------------------------------------
+
+def test_stream_runs_tasks_fifo():
+    order = []
+    with StreamRuntime() as rt:
+        evs = [rt.submit("tmu", lambda i=i: order.append(i))
+               for i in range(8)]
+        for ev in evs:
+            ev.wait(timeout=30)
+    assert order == list(range(8))
+
+
+def test_event_carries_result_and_timestamps():
+    with StreamRuntime() as rt:
+        ev = rt.submit("tpu", lambda: jnp.arange(4) * 2, label="double")
+        res = ev.wait(timeout=30)
+    assert np.array_equal(np.asarray(res), [0, 2, 4, 6])
+    assert ev.t_submit <= ev.t_start <= ev.t_end
+    assert ev.duration_s >= 0.0 and ev.done
+
+
+def test_cross_stream_dependency_orders_execution():
+    log = []
+    with StreamRuntime() as rt:
+        gate = threading.Event()
+
+        def producer():
+            gate.wait(timeout=30)
+            log.append("produce")
+
+        def consumer():
+            log.append("consume")
+
+        dep = rt.submit("tmu", producer)
+        ev = rt.submit("tpu", consumer, deps=[dep])
+        gate.set()
+        ev.wait(timeout=30)
+    assert log == ["produce", "consume"]
+    assert ev.t_start >= dep.t_end   # no start before the in-edge signals
+
+
+def test_failed_dependency_skips_task_and_propagates_original():
+    ran = []
+    with StreamRuntime() as rt:
+        boom = rt.submit("tmu", lambda: (_ for _ in ()).throw(
+            ValueError("phase exploded")))
+        skipped = rt.submit("tpu", lambda: ran.append(1), deps=[boom])
+        transitive = rt.submit("tmu", lambda: ran.append(2), deps=[skipped])
+        with pytest.raises(ValueError, match="phase exploded"):
+            skipped.wait(timeout=30)
+        with pytest.raises(ValueError, match="phase exploded"):
+            transitive.wait(timeout=30)
+    assert not ran                          # skipped tasks never ran
+    assert skipped.t_start is None          # and never occupied the engine
+    assert overlap_from_events([skipped])["events"] == 0
+
+
+def test_submit_to_closed_stream_raises():
+    s = Stream("tmu")
+    s.close()
+    with pytest.raises(StreamError):
+        s.submit(lambda: None)
+
+
+def test_runtime_rejects_unknown_engine():
+    with StreamRuntime() as rt:
+        with pytest.raises(ValueError, match="unknown engine"):
+            rt.submit("gpu", lambda: None)
+
+
+def test_overlap_interval_math():
+    assert merge_intervals([(0.0, 1.0), (0.5, 2.0), (3.0, 4.0)]) == \
+        [(0.0, 2.0), (3.0, 4.0)]
+    assert intersect_seconds([(0.0, 2.0)], [(1.0, 3.0)]) == pytest.approx(1.0)
+    assert intersect_seconds([(0.0, 1.0)], [(2.0, 3.0)]) == 0.0
+
+
+def test_overlap_from_events_two_engines():
+    from repro.runtime.streams import StreamEvent
+    a = StreamEvent(engine="tmu", t_start=0.0, t_end=2.0)
+    b = StreamEvent(engine="tpu", t_start=1.0, t_end=3.0)
+    m = overlap_from_events([a, b])
+    assert m["both_busy_s"] == pytest.approx(1.0)
+    assert m["any_busy_s"] == pytest.approx(3.0)
+    assert m["overlap_ratio"] == pytest.approx(1.0 / 3.0)
+    assert m["span_s"] == pytest.approx(3.0)
+
+
+def test_executor_run_async_on_stream():
+    from repro.core import affine as af
+    prog = TMProgram([TMInstr(TMOpcode.COARSE, ("x",), "y",
+                              map_=af.transpose_map((4, 6, 8)))],
+                     inputs=("x",), outputs=("y",))
+    x = jnp.arange(4 * 6 * 8, dtype=jnp.int32).reshape(4, 6, 8)
+    want = TMExecutor(backend="reference")(prog, {"x": x})["y"]
+    with StreamRuntime() as rt:
+        ev = TMExecutor(backend="pallas").run_async(
+            prog, {"x": x}, runtime=rt)
+        out, lowering, _ = ev.wait(timeout=60)
+    assert ev.engine == "tmu"
+    assert lowering.paths() == ["pallas.block"]
+    assert np.array_equal(np.asarray(out["y"]), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# compiled phase DAG + jitted TPU phases
+# ---------------------------------------------------------------------------
+
+def _mixed_fn():
+    """conv (TPU) -> depth-to-space + pad (TMU) -> tanh (TPU): a 3-phase
+    T-M-T chain exercising both engines and a mid-graph dependency edge."""
+    key = jax.random.PRNGKey(7)
+    w = (jax.random.normal(key, (3, 3, 4, 8), jnp.float32) * 0.1)
+
+    def fn(x):
+        h = cnn.conv2d(x, w)
+        h = tm_ops_free_tail(h)
+        return jnp.tanh(h)
+    return fn
+
+
+def tm_ops_free_tail(h, s=2):
+    B, H, W, C = h.shape
+    c = C // (s * s)
+    h = h.reshape(B, H, W, s, s, c)
+    h = jnp.transpose(h, (0, 1, 3, 2, 4, 5))
+    h = h.reshape(B, H * s, W * s, c)
+    return jnp.pad(h, ((0, 0), (1, 1), (1, 1), (0, 0)))
+
+
+def _mixed_args(rng):
+    return (jnp.asarray(rng.rand(1, 6, 8, 4).astype(np.float32)),)
+
+
+def test_phase_dag_edges_are_data_dependencies():
+    rng = np.random.RandomState(0)
+    fn = _mixed_fn()
+    compiled = tm_compile(fn, *_mixed_args(rng))
+    part = compiled.partition_report
+    kinds = [ph.kind for ph in part.phases]
+    assert "tpu" in kinds and "tmu" in kinds
+    produced: set[str] = set()
+    for ph in part.phases:
+        assert ph.index == part.phases.index(ph)
+        for d in ph.deps:
+            assert d < ph.index                     # topological order
+            # every edge is justified by a read of the dep's writes
+            assert set(part.phases[d].writes) & set(ph.reads)
+        produced.update(ph.writes)
+    assert part.dag_edges == sum(len(ph.deps) for ph in part.phases)
+    assert part.sink_phases()                        # at least one sink
+    assert set(compiled.graph.outputs) <= produced | \
+        set(compiled.graph.inputs) | set(compiled.graph.consts)
+
+
+def test_tpu_phase_is_one_jitted_xla_computation():
+    rng = np.random.RandomState(1)
+    fn = _mixed_fn()
+    args = _mixed_args(rng)
+    compiled = tm_compile(fn, *args)
+    want = np.asarray(fn(*args))
+    with StreamRuntime() as rt:
+        for _ in range(3):                      # repeat: the executable is
+            env = compiled.bind_inputs(*args)   # built once and reused
+            events = compiled.run_async(env, runtime=rt, backend="pallas")
+            reports = [ev.wait(timeout=120)[1] for ev in events]
+            got = np.asarray(compiled.outputs_from(env))
+            assert np.allclose(got, want, atol=1e-6)
+    tpu_reports = [r for r in reports if isinstance(r, TPUPhaseReport)]
+    assert tpu_reports, "expected at least one opaque TPU phase"
+    for rep in tpu_reports:
+        assert rep.jitted and rep.xla_computations == 1
+        ph = compiled.partition_report.phases[rep.phase_index]
+        assert rep.n_eqns == len(ph.node_indices)
+        # ONE executable per phase across all repeats (no retrace, no
+        # per-eqn dispatch): the jit cache holds exactly one entry
+        assert ph.jit_fn._cache_size() == 1
+
+
+def test_tpu_phase_donation_spares_pinned_buffers():
+    rng = np.random.RandomState(2)
+    compiled = tm_compile(_mixed_fn(), *_mixed_args(rng))
+    pinned = (set(compiled.graph.inputs) | set(compiled.graph.consts)
+              | set(compiled.graph.outputs))
+    for ph in compiled.partition_report.phases:
+        if ph.kind != "tpu":
+            continue
+        donated = {ph.reads[i] for i in compiled._donatable(ph)}
+        assert not donated & pinned
+        # sole-consumer rule: no OTHER phase (earlier or later — a sibling
+        # may run concurrently under stream dispatch) reads a donated buffer
+        other_reads = {n for q in compiled.partition_report.phases
+                       if q.index != ph.index for n in q.reads}
+        assert not donated & other_reads
+
+
+def test_run_with_runtime_matches_blocking_run():
+    rng = np.random.RandomState(3)
+    fn = _mixed_fn()
+    args = _mixed_args(rng)
+    compiled = tm_compile(fn, *args)
+    blocking, _ = compiled.run(*args, backend="pallas")
+    with StreamRuntime() as rt:
+        streamed, lowerings = compiled.run(*args, backend="pallas",
+                                           runtime=rt)
+        assert lowerings and all(isinstance(r, LoweringReport)
+                                 for r in lowerings)
+    assert np.array_equal(np.asarray(blocking), np.asarray(streamed))
+
+
+# ---------------------------------------------------------------------------
+# the soak: 4 threads x 8 requests through ONE shared stream runtime
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_stream_soak_event_ordering_and_bit_exact(backend):
+    n_threads, n_per_thread = 4, 8
+    rng = np.random.RandomState(10)
+    fn = _mixed_fn()
+    args0 = _mixed_args(rng)
+    compiled = tm_compile(fn, *args0)
+    deps_of = {ph.index: ph.deps for ph in compiled.partition_report.phases}
+    failures: list = []
+    with StreamRuntime() as rt:
+        def client(tid):
+            trng = np.random.RandomState(100 + tid)
+            for i in range(n_per_thread):
+                args = _mixed_args(trng)
+                try:
+                    env = compiled.bind_inputs(*args)
+                    events = compiled.run_async(
+                        env, runtime=rt, backend=backend,
+                        label=f"t{tid}r{i}:")
+                    for ev in events:
+                        ev.wait(timeout=300)
+                    # ordering invariant: no phase started before every
+                    # one of its in-edge events had signalled
+                    for idx, ev in enumerate(events):
+                        for d in deps_of[idx]:
+                            if ev.t_start < events[d].t_end:
+                                failures.append(
+                                    (tid, i, f"phase {idx} started at "
+                                     f"{ev.t_start} before dep {d} ended "
+                                     f"at {events[d].t_end}"))
+                    got = np.asarray(compiled.outputs_from(env))
+                    want = np.asarray(fn(*args))
+                    if not np.array_equal(got, want):
+                        failures.append((tid, i, "output mismatch"))
+                except Exception as e:  # noqa: BLE001 — collected
+                    failures.append((tid, i, repr(e)))
+
+        threads = [threading.Thread(target=client, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        measured = rt.overlap()
+    assert not failures, failures[:3]
+    # every request's every phase completed through the two streams
+    n_phases = len(compiled.partition_report.phases)
+    assert measured["events"] == n_threads * n_per_thread * n_phases

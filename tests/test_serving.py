@@ -384,10 +384,70 @@ def test_submit_after_stop_raises_instead_of_hanging():
         srv.submit(_tm_fn, jnp.ones((1, 2, 3)), jnp.ones((1, 3, 2)))
 
 
-def test_snapshot_safe_while_engine_mid_phase():
+def test_stats_overlap_from_event_intervals():
+    # measured overlap comes from realized event timestamps: two engines
+    # busy [0,2] and [1,3] -> 1s both-busy over 3s any-busy
     stats = ServerStats()
-    stats.engine_begin("tmu")       # first phase still executing
-    snap = stats.snapshot()         # must not raise on span_end=None
-    assert snap["pipeline_span_s"] == 0.0
-    stats.engine_end("tmu")
-    assert stats.snapshot()["pipeline_span_s"] >= 0.0
+    snap = stats.snapshot()          # no events yet: must not divide by zero
+    assert snap["overlap_ratio"] == 0.0 and snap["pipeline_span_s"] == 0.0
+    stats.record_interval("tmu", 0.0, 2.0)
+    stats.record_interval("tpu", 1.0, 3.0)
+    snap = stats.snapshot()
+    assert snap["both_busy_s"] == pytest.approx(1.0)
+    assert snap["any_busy_s"] == pytest.approx(3.0)
+    assert snap["overlap_ratio"] == pytest.approx(1.0 / 3.0)
+    assert snap["pipeline_span_s"] == pytest.approx(3.0)
+    assert snap["engine_busy_s"] == {"tmu": 2.0, "tpu": 2.0}
+
+
+def test_pipeline_external_runtime_feeds_stats():
+    # a caller-provided runtime must still feed the stats (observer tap),
+    # and stop() must untap without closing the caller's streams
+    from repro.runtime.streams import StreamRuntime
+    stats = ServerStats()
+    with StreamRuntime() as rt:
+        pipe = RequestPipeline(stats=stats, depth=2, runtime=rt)
+        pipe.start()
+        done = []
+        pipe.submit(PipelineJob(
+            steps=[("tmu", lambda: None), ("tpu", lambda: None)],
+            on_done=lambda err: done.append(err)))
+        pipe.stop()
+        # the external runtime survives pipeline stop
+        rt.submit("tmu", lambda: None).wait(timeout=30)
+    assert done == [None]
+    assert set(stats.snapshot()["engine_busy_s"]) == {"tmu", "tpu"}
+
+
+def test_stats_ignore_skipped_events():
+    from repro.runtime.streams import StreamEvent
+    stats = ServerStats()
+    stats.record_event(StreamEvent(engine="tmu"))   # skipped: no timestamps
+    assert stats.snapshot()["overlap_ratio"] == 0.0
+
+
+def test_cache_eviction_drops_fn_pin():
+    import gc
+    import weakref
+
+    cache = CompileCache(capacity=1)
+
+    def make_entry(tag):
+        fn = lambda x: x + tag  # noqa: E731 — a fresh closure per entry
+        from repro.serving.cache import CacheEntry
+        return fn, CacheEntry(key=_key(str(tag)), fn=fn, compiled=None,
+                              backend="fused", params=None)
+
+    fn_a, entry_a = make_entry(1)
+    cache.get_or_compile(_key("1"), lambda: entry_a)
+    ref_a = weakref.ref(fn_a)
+    del fn_a
+    gc.collect()
+    assert ref_a() is not None       # cached: the entry pins the closure
+    _, entry_b = make_entry(2)
+    cache.get_or_compile(_key("2"), lambda: entry_b)   # evicts entry 1
+    assert cache.evictions == 1
+    assert entry_a.fn is None        # the pin died with residency
+    del entry_a                      # caller's handle (was the last ref path)
+    gc.collect()
+    assert ref_a() is None           # eviction released the traced closure
