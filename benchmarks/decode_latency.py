@@ -1,0 +1,181 @@
+"""Decode-latency benchmark — transformer decode through the TMU stack.
+
+One full decoder layer of the phi4-mini smoke model serves prefill plus
+``N_DECODE`` incremental decode steps through :class:`DecodeSession`
+(position-bucketed ``tm_compile`` via ``TMServer``), measured against the
+pure-XLA baseline (the same step functions under plain ``jax.jit``).
+Emitted as ``BENCH_decode.json`` (archived per commit by CI):
+
+* **tokens/s** — warm compiled decode vs the jitted XLA loop;
+* **per-step TM-phase share** — how much of the decode step's program runs
+  as TM phases (instruction share + phase kinds), vs 0% for pure XLA;
+* **bit-exact logits** — every step's logits must equal the uncompiled
+  (eager) model's bit for bit, prefill included.
+
+Acceptance gates: bit-exact logits on every step, the KV append / RoPE /
+head split-merge primitives matched as TM work (no trace fallback for
+them), and warm compiled decode at or above ``MIN_TOKENS_PER_S`` — the
+floor recorded in the JSON, lenient because the TM stack is a numerical
+emulation of the paper's datapath, not a tuned kernel path.
+
+    PYTHONPATH=src python benchmarks/decode_latency.py
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.compiler import tm_compile
+from repro.configs.phi4_mini_3p8b import smoke_config
+from repro.models.transformer import init_lm
+from repro.serving.decode import DecodeSession
+
+BATCH = 2
+PROMPT_LEN = 8
+N_DECODE = 32
+MAX_LEN = 48
+MIN_TOKENS_PER_S = 0.2          # floor for warm compiled decode (see above)
+# the decode step's manipulation traffic: these prims must compile to TM
+# phases, not fall back to opaque TPU work
+REQUIRED_TM_PRIMS = {"dynamic_update_slice",            # KV-cache append
+                     "mul", "add", "sub", "concatenate", "slice",  # RoPE
+                     "reshape", "transpose"}            # head split/merge
+
+
+def bench_compiled(cfg, params, prompts) -> dict:
+    """Cold pass (per-position compiles) + warm measured pass."""
+    with DecodeSession(cfg, params, max_len=MAX_LEN) as sess:
+        t0 = time.perf_counter()
+        toks_cold, logits_cold = sess.generate(prompts, N_DECODE)
+        cold_wall = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        toks, logits = sess.generate(prompts, N_DECODE)
+        warm_wall = time.perf_counter() - t0
+
+        ref_toks, ref_logits = sess.reference_generate(prompts, N_DECODE)
+        exact = (bool(jnp.array_equal(toks, ref_toks))
+                 and len(logits) == len(ref_logits)
+                 and all(bool(jnp.array_equal(a, b))
+                         for a, b in zip(logits, ref_logits)))
+        snap = sess.server.snapshot_stats()
+    tokens = BATCH * N_DECODE
+    return {
+        "cold_wall_s": cold_wall,
+        "warm_wall_s": warm_wall,
+        "tokens": tokens,
+        "tokens_per_s": tokens / warm_wall,
+        "bit_exact_logits": exact,
+        "cache": snap["cache"],
+    }
+
+
+def bench_xla_baseline(cfg, params, prompts) -> dict:
+    """The same step functions under plain jax.jit — the pure-XLA loop."""
+    with DecodeSession(cfg, params, max_len=MAX_LEN) as sess:
+        steps = {p: jax.jit(sess.step_fn(p))
+                 for p in [0] + list(range(PROMPT_LEN,
+                                           PROMPT_LEN + N_DECODE - 1))}
+
+        def run():
+            ck, cv = sess.init_cache(BATCH)
+            logits, ck, cv = steps[0](prompts, ck, cv)
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            for t in range(N_DECODE - 1):
+                logits, ck, cv = steps[PROMPT_LEN + t](tok, ck, cv)
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+                tok = tok.astype(jnp.int32)
+            return jax.block_until_ready(tok)
+
+        run()                                   # warm the jit caches
+        t0 = time.perf_counter()
+        run()
+        wall = time.perf_counter() - t0
+    tokens = BATCH * N_DECODE
+    return {"warm_wall_s": wall, "tokens_per_s": tokens / wall,
+            "tm_phase_share": 0.0}
+
+
+def phase_mix_of_decode_step(cfg, params) -> dict:
+    """Compile one decode step standalone and report its TM/TPU split."""
+    with DecodeSession(cfg, params, max_len=MAX_LEN) as sess:
+        step = sess.step_fn(PROMPT_LEN)
+        ck, cv = sess.init_cache(BATCH)
+        tok = jnp.zeros((BATCH, 1), jnp.int32)
+        compiled = tm_compile(step, tok, ck, cv)
+    mix = compiled.partition_report.phase_mix()
+    tpu_eqns = sum(len(p.node_indices)
+                   for p in compiled.partition_report.phases
+                   if p.kind == "tpu")
+    total = mix["tmu_instrs"] + tpu_eqns
+    matched = set(compiled.matched_prims)
+    missing = REQUIRED_TM_PRIMS - matched
+    fallback_notes = [str(n) for n in compiled.graph.notes]
+    return {
+        **mix,
+        "tpu_eqns": tpu_eqns,
+        "tm_instr_share": mix["tmu_instrs"] / max(total, 1),
+        "matched_prims": sorted(matched),
+        "missing_required_prims": sorted(missing),
+        "fallback_notes": fallback_notes,
+    }
+
+
+def main() -> dict:
+    cfg = smoke_config()
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (BATCH, PROMPT_LEN), 0, cfg.vocab)
+
+    mix = phase_mix_of_decode_step(cfg, params)
+    compiled = bench_compiled(cfg, params, prompts)
+    baseline = bench_xla_baseline(cfg, params, prompts)
+
+    report = {
+        "benchmark": "decode_latency",
+        "model": cfg.name,
+        "batch": BATCH,
+        "prompt_len": PROMPT_LEN,
+        "decode_steps": N_DECODE,
+        "compiled": compiled,
+        "xla_baseline": baseline,
+        "decode_step_phase_mix": mix,
+        "tokens_per_s_floor": MIN_TOKENS_PER_S,
+        "compiled_over_xla": (compiled["tokens_per_s"]
+                              / baseline["tokens_per_s"]),
+    }
+
+    print("# decode_latency (one phi4-mini layer, prefill + "
+          f"{N_DECODE} decode steps, batch {BATCH})")
+    print(f"compiled warm: {compiled['tokens_per_s']:.2f} tok/s "
+          f"(cold pass {compiled['cold_wall_s']:.1f}s, "
+          f"warm {compiled['warm_wall_s']:.1f}s)")
+    print(f"pure-XLA jit:  {baseline['tokens_per_s']:.2f} tok/s")
+    print(f"TM share of the decode step: {mix['tm_instr_share']:.1%} of "
+          f"instructions ({mix['tmu_instrs']} TM / {mix['tpu_eqns']} TPU), "
+          f"phases [{mix['kinds']}]")
+    print(f"bit-exact logits: {compiled['bit_exact_logits']}")
+
+    with open("BENCH_decode.json", "w") as f:
+        json.dump(report, f, indent=2)
+    print("\nwrote BENCH_decode.json")
+
+    if not compiled["bit_exact_logits"]:
+        raise SystemExit("served decode logits diverged from the uncompiled "
+                         "model (acceptance needs bit-exact)")
+    if mix["missing_required_prims"]:
+        raise SystemExit(f"decode-step prims not matched as TM work: "
+                         f"{mix['missing_required_prims']}")
+    if compiled["tokens_per_s"] < MIN_TOKENS_PER_S:
+        raise SystemExit(
+            f"warm compiled decode at {compiled['tokens_per_s']:.3f} tok/s "
+            f"is below the {MIN_TOKENS_PER_S} floor")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -25,10 +25,14 @@ def main():
           f"prompt={args.prompt_len}, gen={args.gen}")
     toks, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
                         gen=args.gen)
-    print(f"prefill: {stats['prefill_s']*1e3:.1f} ms | "
-          f"decode: {stats['decode_s']*1e3:.1f} ms | "
-          f"{stats['tokens_per_s']:.1f} tok/s")
-    print("sample:", toks[0][:12].tolist())
+    if stats.get("prefill_only"):
+        print(f"prefill: {stats['prefill_s']*1e3:.1f} ms | "
+              f"{stats['tokens_per_s']:.1f} prompt tok/s (prefill-only)")
+    else:
+        print(f"prefill: {stats['prefill_s']*1e3:.1f} ms | "
+              f"decode: {stats['decode_s']*1e3:.1f} ms | "
+              f"{stats['tokens_per_s']:.1f} tok/s")
+        print("sample:", toks[0][:12].tolist())
 
 
 if __name__ == "__main__":

@@ -36,7 +36,7 @@ from repro.core.instr import TMProgram
 from repro.core.schedule import CycleParams
 from repro.core.tm_primitive import tag_tm_ops
 from repro.compiler.allocate import ScratchPlan, allocate
-from repro.compiler.ir import TMGraph, eval_tpu_node
+from repro.compiler.ir import TMGraph, eval_tpu_node, eval_tpu_node_exact
 from repro.compiler.partition import PartitionReport, Phase, partition
 from repro.compiler.passes import PassReport, run_pipeline
 from repro.compiler.trace import graph_from_jaxpr
@@ -169,6 +169,7 @@ class CompiledTMProgram:
                   backend: str = "fused",
                   interpret: bool = True,
                   fuse_chains: bool = False,
+                  exact: bool = False,
                   ) -> LoweringReport | TPUPhaseReport:
         """Execute one partition phase against ``env`` (mutated in place).
 
@@ -178,8 +179,24 @@ class CompiledTMProgram:
         :class:`~repro.core.dispatch.LoweringReport`.  ``fuse_chains``
         (pallas backend) executes each forwarding chain of the phase as ONE
         segment-streaming kernel — the streamed buffers of the scratch plan
-        never materialize."""
+        never materialize.
+
+        ``exact`` trades the one-computation-per-phase contract for bit-exact
+        parity with the eager program: each TPU eqn runs as its own XLA
+        computation with its literals baked
+        (:func:`~repro.compiler.ir.eval_tpu_node_exact`), matching eager
+        dispatch granularity so XLA's cross-op algebraic rewrites (the
+        ``rsqrt(x/c + e)`` class) cannot perturb the rounding.  TM phases are
+        data movement and are bit-exact in every mode."""
         if phase.kind == "tpu":
+            if exact:
+                for i in phase.node_indices:
+                    eval_tpu_node_exact(self.graph.nodes[i], env)
+                return TPUPhaseReport(
+                    phase_index=phase.index,
+                    n_eqns=len(phase.node_indices),
+                    jitted=False,
+                    xla_computations=len(phase.node_indices))
             if phase.jit_fn is not _JIT_DECLINED:
                 try:
                     outs = self._tpu_phase_fn(phase)(
@@ -222,7 +239,8 @@ class CompiledTMProgram:
 
     def run_async(self, env: dict[str, Any], *, runtime,
                   backend: str = "fused", interpret: bool = True,
-                  fuse_chains: bool = False, label: str = ""):
+                  fuse_chains: bool = False, exact: bool = False,
+                  label: str = ""):
         """Submit every phase of the DAG onto ``runtime``'s engine streams.
 
         Each phase becomes one stream task whose event dependencies are its
@@ -241,7 +259,7 @@ class CompiledTMProgram:
             def task(ph=phase):
                 rep = self.run_phase(ph, env, backend=backend,
                                      interpret=interpret,
-                                     fuse_chains=fuse_chains)
+                                     fuse_chains=fuse_chains, exact=exact)
                 return [env[n] for n in ph.writes], rep
             events.append(runtime.submit(
                 phase.engine, task, deps=[events[d] for d in phase.deps],
@@ -249,7 +267,7 @@ class CompiledTMProgram:
         return events
 
     def run(self, *args, backend: str = "fused", interpret: bool = True,
-            fuse_chains: bool = False, runtime=None,
+            fuse_chains: bool = False, exact: bool = False, runtime=None,
             ) -> tuple[Any, list[LoweringReport]]:
         """Execute and return ``(outputs, per-TM-phase lowering reports)``.
 
@@ -265,22 +283,24 @@ class CompiledTMProgram:
         if runtime is not None:
             events = self.run_async(env, runtime=runtime, backend=backend,
                                     interpret=interpret,
-                                    fuse_chains=fuse_chains)
+                                    fuse_chains=fuse_chains, exact=exact)
             for ev in events:   # sink sync: deps complete transitively
                 reports.append(ev.wait()[1])
         else:
             for phase in self.partition_report.phases:
                 reports.append(self.run_phase(phase, env, backend=backend,
                                               interpret=interpret,
-                                              fuse_chains=fuse_chains))
+                                              fuse_chains=fuse_chains,
+                                              exact=exact))
         lowerings = [r for r in reports if isinstance(r, LoweringReport)]
         return self.outputs_from(env), lowerings
 
     def __call__(self, *args, backend: str = "fused",
                  interpret: bool = True, fuse_chains: bool = False,
-                 runtime=None):
+                 exact: bool = False, runtime=None):
         out, lowerings = self.run(*args, backend=backend, interpret=interpret,
-                                  fuse_chains=fuse_chains, runtime=runtime)
+                                  fuse_chains=fuse_chains, exact=exact,
+                                  runtime=runtime)
         self.last_lowering = lowerings
         return out
 

@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any
 
+import jax
+
 from repro.core.instr import TMInstr
 
 
@@ -61,6 +63,8 @@ class TPUNode:
     src_names: tuple[str | None, ...]
     literals: tuple[Any, ...]
     dst_names: tuple[str, ...]
+    # per-eqn jitted evaluator with literals baked (exact mode); built lazily
+    exact_fn: Any = dataclasses.field(default=None, repr=False, compare=False)
 
     @property
     def srcs(self) -> tuple[str, ...]:
@@ -88,6 +92,43 @@ def eval_tpu_node(node: TPUNode, env: dict) -> None:
     subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
     out = eqn.primitive.bind(*subfuns, *invals, **bind_params)
     outs = out if eqn.primitive.multiple_results else [out]
+    for name, val in zip(node.dst_names, outs):
+        env[name] = val
+
+
+def eval_tpu_node_exact(node: TPUNode, env: dict) -> None:
+    """Execute one opaque eqn bit-exactly vs the eager program.
+
+    Two things separate this from :func:`eval_tpu_node` under a whole-phase
+    jit, and both change float rounding:
+
+    * **literals are baked**, not passed as runtime scalars.  Eager jnp code
+      bakes its constants into each dispatched XLA computation, where the
+      algebraic simplifier applies constant rewrites (``x / 48`` becomes
+      ``x * (1/48)``); a literal arriving as an argument stays a true
+      division and rounds differently;
+    * **one XLA computation per eqn**, matching eager's dispatch granularity.
+      Fusing a phase like ``div → add → rsqrt`` into one computation lets the
+      simplifier rewrite across the ops (observed: the fused ``rsqrt(x/c+e)``
+      chain differs from the op-by-op result by 1 ulp), which is exactly the
+      divergence a bit-exact decode gate cannot absorb.
+
+    The per-eqn jitted evaluator is cached on the node, so warm serving
+    entries pay the trace once per eqn."""
+    if node.exact_fn is None:
+        eqn = node.eqn
+        src_names, literals = node.src_names, node.literals
+
+        def eqn_fn(*vals):
+            it = iter(vals)
+            invals = [next(it) if s is not None else lit
+                      for s, lit in zip(src_names, literals)]
+            subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+            return eqn.primitive.bind(*subfuns, *invals, **bind_params)
+
+        node.exact_fn = jax.jit(eqn_fn)
+    out = node.exact_fn(*[env[s] for s in node.src_names if s is not None])
+    outs = out if node.eqn.primitive.multiple_results else [out]
     for name, val in zip(node.dst_names, outs):
         env[name] = val
 

@@ -76,6 +76,23 @@ class PartitionReport:
         return sum(ph.schedule.launches(chained=chained)
                    for ph in self.tmu_phases if ph.schedule is not None)
 
+    def phase_mix(self) -> dict:
+        """Fragmentation stats of the phase list — how much TM work sits in
+        singleton phases (one instruction wedged between TPU runs) versus
+        proper runs.  The phase-defrag pass drives ``tmu_singletons`` down;
+        benchmarks and tests read this to show/assert the consolidation."""
+        tmu = self.tmu_phases
+        return {
+            "phases": len(self.phases),
+            "tpu_phases": sum(1 for p in self.phases if p.kind == "tpu"),
+            "tmu_phases": len(tmu),
+            "tmu_instrs": sum(len(p.node_indices) for p in tmu),
+            "tmu_singletons": sum(1 for p in tmu
+                                  if len(p.node_indices) == 1),
+            "kinds": "".join("T" if p.kind == "tpu" else "M"
+                             for p in self.phases),
+        }
+
     def sink_phases(self) -> list[Phase]:
         """Phases no other phase depends on — the DAG's sync points."""
         depended = {d for ph in self.phases for d in ph.deps}

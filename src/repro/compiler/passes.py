@@ -65,10 +65,14 @@ class PassReport:
     def trace_fallbacks(self) -> int:
         return self.count("trace-fallback")
 
+    @property
+    def phases_defragmented(self) -> int:
+        return self.count("phase-defrag")
+
     def summary(self) -> str:
         lines = ["pass pipeline:"]
         for name in ("trace-fallback", "compose-maps", "copy-elim",
-                     "epilogue-sink", "rme-legalize"):
+                     "epilogue-sink", "rme-legalize", "phase-defrag"):
             fired = [a.detail for a in self.actions if a.pass_name == name]
             lines.append(f"  {name:14s} {len(fired)} rewrite(s)")
             lines.extend(f"    - {d}" for d in fired)
@@ -264,6 +268,71 @@ def legalize_rme_batch(graph: TMGraph, report: PassReport) -> None:
 
 
 # ---------------------------------------------------------------------------
+# pass 5: phase defragmentation
+# ---------------------------------------------------------------------------
+
+def defragment_phases(graph: TMGraph, report: PassReport) -> None:
+    """Move *singleton* TM nodes through neighbouring TPU nodes so they join
+    the nearest TM run.
+
+    The partitioner groups maximal same-kind runs into phases, so a lone TM
+    instruction wedged between TPU equations — the batching/broadcasting
+    reshapes vmap mints around a matmul are the canonical case — costs two
+    extra phase boundaries (TPU→TM→TPU) for one instruction's worth of work.
+    Reordering is sound under SSA when the node's reads still see the same
+    producers and nothing jumped over reads the node's destination:
+
+    * forward past TPU nodes: legal iff none of them reads ``node.dst``;
+    * backward past TPU nodes: legal iff none of them writes a buffer the
+      node reads.
+
+    Runs to fixpoint; two mutually-stranded singletons merge into a run of
+    two, which later singletons can then join."""
+    changed = True
+    while changed:
+        changed = False
+        n = len(graph.nodes)
+        for i, node in enumerate(graph.nodes):
+            if node.kind != "tmu":
+                continue
+            if (i > 0 and graph.nodes[i - 1].kind == "tmu") or \
+                    (i + 1 < n and graph.nodes[i + 1].kind == "tmu"):
+                continue  # already part of a run
+            fwd = next((j for j in range(i + 1, n)
+                        if graph.nodes[j].kind == "tmu"), None)
+            bwd = next((j for j in range(i - 1, -1, -1)
+                        if graph.nodes[j].kind == "tmu"), None)
+            candidates = sorted(
+                (c for c in (("forward", fwd), ("backward", bwd))
+                 if c[1] is not None),
+                key=lambda c: abs(c[1] - i))
+            for direction, j in candidates:
+                if direction == "forward":
+                    jumped = graph.nodes[i + 1:j]
+                    if any(d in g.srcs for g in jumped for d in node.dsts):
+                        continue
+                    if any(s in g.dsts for g in jumped for s in node.srcs):
+                        continue  # unreachable under SSA; guard anyway
+                    graph.nodes.insert(j - 1, graph.nodes.pop(i))
+                else:
+                    jumped = graph.nodes[j + 1:i]
+                    if any(s in g.dsts for g in jumped for s in node.srcs):
+                        continue
+                    if any(d in g.srcs or d in g.dsts
+                           for g in jumped for d in node.dsts):
+                        continue  # unreachable under SSA; guard anyway
+                    graph.nodes.insert(j + 1, graph.nodes.pop(i))
+                report.record(
+                    "phase-defrag",
+                    f"{node.instr.dst} ({node.matched or node.instr.opcode.value})"
+                    f" moved {direction} past {len(jumped)} tpu node(s)")
+                changed = True
+                break
+            if changed:
+                break
+
+
+# ---------------------------------------------------------------------------
 # the pipeline
 # ---------------------------------------------------------------------------
 
@@ -278,5 +347,8 @@ def run_pipeline(graph: TMGraph) -> PassReport:
     eliminate_copies(graph, report)
     sink_epilogues(graph, report)
     legalize_rme_batch(graph, report)
+    # defrag after the structural rewrites: it permutes node order only (no
+    # instruction changes), so running it last moves the final instruction set
+    defragment_phases(graph, report)
     graph.validate()
     return report

@@ -27,6 +27,7 @@ import itertools
 import json
 import math
 
+import numpy as np
 from jax.extend.core import Literal
 
 from repro.core import affine as af
@@ -44,10 +45,17 @@ _EW_PRIMS = {"add": EwOp.ADD, "sub": EwOp.SUB, "mul": EwOp.MUL,
 
 # primitives the matcher may claim (used for the pjit-inlining decision)
 _TM_PRIM_NAMES = frozenset({
-    "transpose", "reshape", "squeeze", "slice", "dynamic_slice", "pad",
+    "transpose", "reshape", "squeeze", "slice", "dynamic_slice",
+    "dynamic_update_slice", "gather", "pad",
     "concatenate", "rev", "broadcast_in_dim", "copy",
+    "reduce_window_max", "reduce_window_min", "reduce_window_sum",
     "tm_map", "tm_route", "tm_resize", "tm_evaluate",
 }) | frozenset(_EW_PRIMS)
+
+# irregular (non-arithmetic-progression) gather indices decompose into one
+# Route band per index; past this count the band loop costs more than the
+# XLA gather it replaces, so the matcher declines
+_GATHER_MAX_BANDS = 64
 
 
 def _aval_shape(v) -> tuple[int, ...]:
@@ -72,6 +80,8 @@ def _is_matchable(eqn, strict: bool = False) -> bool:
                 and eqn.invars[0].aval.dtype == eqn.invars[1].aval.dtype)
     if name == "dynamic_slice" and strict:
         return all(isinstance(v, Literal) for v in eqn.invars[1:])
+    if name == "dynamic_update_slice" and strict:
+        return all(isinstance(v, Literal) for v in eqn.invars[2:])
     return True
 
 
@@ -160,6 +170,40 @@ def _match_tm(eqn, get_const):
         return {"map": af.strided_slice_map(in_shapes[0], starts,
                                             (1,) * len(sizes), out_shape),
                 "keep_srcs": 1}  # start operands folded into the map offsets
+    if name == "dynamic_update_slice":
+        # invars: operand, update, *starts.  A Literal operand/update would
+        # misalign the band->src pairing (srcs keeps only non-Literals)
+        if any(isinstance(v, Literal) for v in eqn.invars[:2]):
+            return None
+        starts = []
+        for v in eqn.invars[2:]:
+            c = v.val if isinstance(v, Literal) else get_const(v)
+            if c is None:
+                raise _MatchFallback(
+                    "dynamic_update_slice: non-constant start index left "
+                    "opaque (runtime starts cannot become TMU register "
+                    "offsets; bucket the position like a shape instead)")
+            starts.append(int(c))
+        upd = in_shapes[1]
+        # lax clamps each start so the update window stays in bounds
+        starts = tuple(max(0, min(st, dim - sz))
+                       for st, dim, sz in zip(starts, in_shapes[0], upd))
+        return {"maps": af.update_slice_maps(in_shapes[0], upd, starts),
+                "overlay": True, "keep_srcs": 2}
+    if name == "gather":
+        return _match_gather(eqn, get_const, in_shapes, out_shape)
+    if name in ("reduce_window_max", "reduce_window_min",
+                "reduce_window_sum"):
+        p = eqn.params
+        if (any(int(w) != 1 for w in p["window_dimensions"])
+                or any(int(x) != 1 for x in p["base_dilation"])
+                or any(int(x) != 1 for x in p["window_dilation"])
+                or any(int(l) != 0 or int(h) != 0 for l, h in p["padding"])):
+            return None  # genuine windowed reduction: compute, not movement
+        strides = tuple(int(s) for s in p["window_strides"])
+        return {"map": af.strided_slice_map(in_shapes[0],
+                                            (0,) * len(strides), strides,
+                                            out_shape)}
     if name == "pad":
         cfg = eqn.params["padding_config"]
         if any(int(i) != 0 for _, _, i in cfg):
@@ -200,6 +244,63 @@ def _match_tm(eqn, get_const):
             return {"ew": _EW_PRIMS[name]}
         return None
     return None
+
+
+def _match_gather(eqn, get_const, in_shapes, out_shape):
+    """``jnp.take(x, idx, axis)``-form gathers with trace-constant indices.
+
+    Supported form: one index axis (``start_index_map == collapsed_slice_dims
+    == (axis,)``), full slices elsewhere, no batching dims, the taken axis
+    landing back at ``axis`` in the output.  Regularly spaced indices become
+    ONE strided map (:func:`~repro.core.affine.index_select_map`); irregular
+    index vectors decompose into a band-per-index Route
+    (:func:`~repro.core.affine.index_select_band_maps`) reading the operand
+    once per band.  Traced indices degrade to an opaque TPU phase."""
+    if isinstance(eqn.invars[0], Literal):
+        return None  # srcs keeps non-Literals only: operand must be a var
+    d = eqn.params["dimension_numbers"]
+    if d.operand_batching_dims or d.start_indices_batching_dims:
+        return None
+    if (len(d.start_index_map) != 1
+            or tuple(d.start_index_map) != tuple(d.collapsed_slice_dims)):
+        return None
+    axis = int(d.start_index_map[0])
+    operand = in_shapes[0]
+    nd = len(operand)
+    sizes = tuple(int(s) for s in eqn.params["slice_sizes"])
+    if len(sizes) != nd or sizes[axis] != 1 or any(
+            sizes[i] != operand[i] for i in range(nd) if i != axis):
+        return None
+    if tuple(int(x) for x in d.offset_dims) != tuple(
+            i for i in range(len(out_shape)) if i != axis):
+        return None
+    iv = eqn.invars[1]
+    idx = iv.val if isinstance(iv, Literal) else get_const(iv)
+    if idx is None:
+        raise _MatchFallback(
+            "gather: traced index vector left opaque (runtime indices "
+            "cannot become TMU register contents)")
+    idx = np.asarray(idx)
+    if idx.ndim == 2 and idx.shape[1] == 1:
+        idx = idx[:, 0]
+    if idx.ndim != 1 or idx.shape[0] == 0:
+        return None
+    vals = [int(v) for v in idx]
+    n = len(vals)
+    if out_shape != tuple(n if i == axis else operand[i] for i in range(nd)):
+        return None
+    if not all(0 <= v < operand[axis] for v in vals):
+        return None  # out-of-range indices read lax's fill value: leave to XLA
+    step = vals[1] - vals[0] if n > 1 else 0
+    if all(vals[j] == vals[0] + j * step for j in range(n)):
+        return {"map": af.index_select_map(operand, axis, vals[0], step, n),
+                "keep_srcs": 1}
+    if n > _GATHER_MAX_BANDS:
+        raise _MatchFallback(
+            f"gather: {n} irregular indices exceed the "
+            f"{_GATHER_MAX_BANDS}-band Route budget")
+    return {"maps": tuple(af.index_select_band_maps(operand, axis, vals)),
+            "keep_srcs": 1, "repeat_src": n}
 
 
 # ---------------------------------------------------------------------------
@@ -258,8 +359,18 @@ def _walk(builder: _Builder, jaxpr, consts, env) -> None:
             buf = env.get(v)
             return builder.consts.get(buf) if buf is not None else None
 
+        # trace-time constant folding wins over matching: an all-constant
+        # eqn becomes a register constant downstream matchers can *read*
+        # (e.g. the index-preprocessing chain inside jnp.take's pjit must
+        # fold so the gather matcher sees a constant index vector) — a
+        # matched TM node would hide the value behind a buffer name
+        foldable = (all(isinstance(v, Literal) or env[v] in builder.consts
+                        for v in eqn.invars)
+                    and all(math.prod(_aval_shape(ov)) <= _CONST_FOLD_LIMIT
+                            for ov in eqn.outvars))
+
         match = None
-        if _is_matchable(eqn):
+        if _is_matchable(eqn) and not foldable:
             try:
                 match = _match_tm(eqn, get_const)
             except _MatchFallback as note:
@@ -275,6 +386,9 @@ def _walk(builder: _Builder, jaxpr, consts, env) -> None:
                          if not isinstance(v, Literal))
             if "keep_srcs" in match:
                 srcs = srcs[:match["keep_srcs"]]
+            if "repeat_src" in match:  # band-per-index gather: every Route
+                #                        band reads the same operand buffer
+                srcs = (srcs[0],) * match["repeat_src"]
             ov = eqn.outvars[0]
             dst = builder.fresh()
             builder.declare(dst, ov.aval.shape, ov.aval.dtype)
@@ -297,9 +411,6 @@ def _walk(builder: _Builder, jaxpr, consts, env) -> None:
             dsts.append(d)
         node = TPUNode(eqn=eqn, src_names=src_names, literals=literals,
                        dst_names=tuple(dsts))
-        foldable = (all(s is None or s in builder.consts for s in src_names)
-                    and all(math.prod(_aval_shape(ov)) <= _CONST_FOLD_LIMIT
-                            for ov in eqn.outvars))
         if foldable:  # trace-time constant folding: the value becomes a
             #           register constant downstream matchers can read
             eval_tpu_node(node, builder.consts)
@@ -311,7 +422,9 @@ def _build_instr(match: dict, srcs: tuple[str, ...], dst: str) -> TMInstr:
     if "map" in match:
         return TMInstr(TMOpcode.COARSE, srcs, dst, map_=match["map"])
     if "maps" in match:
-        return TMInstr(TMOpcode.COARSE, srcs, dst, maps=match["maps"])
+        meta = {"overlay": True} if match.get("overlay") else None
+        return TMInstr(TMOpcode.COARSE, srcs, dst, maps=match["maps"],
+                       meta=meta)
     if "ew" in match:
         return TMInstr(TMOpcode.ELEMENTWISE, srcs, dst, ew=match["ew"])
     if "resize" in match:

@@ -640,6 +640,69 @@ def concat_maps(shapes: Sequence[tuple[int, ...]],
     return maps
 
 
+def update_slice_maps(in_shape: tuple[int, ...], upd_shape: tuple[int, ...],
+                      starts: Sequence[int],
+                      ) -> tuple[MixedRadixMap, MixedRadixMap]:
+    """lax.dynamic_update_slice (constant, pre-clamped starts) as an
+    *overlay* Route pair: ``(base, window)``.
+
+    The base band is the identity over the operand; the window band places
+    the update at ``starts`` (a pure pad-map shift) and is out-of-bounds
+    everywhere else.  The two supports overlap on the update window, so the
+    pair only makes sense under overlay (last-writer-wins) Route semantics —
+    ``route_gather(..., overlay=True)`` — where the window band overwrites
+    the base exactly where it is valid.  This is the KV-cache append: one
+    scatter-style TM instruction whose register contents encode the decode
+    position."""
+    lo = [int(s) for s in starts]
+    hi = [int(d - s - u)
+          for d, s, u in zip(in_shape, lo, upd_shape)]
+    if any(h < 0 for h in hi) or any(s < 0 for s in lo):
+        raise ValueError(
+            f"update window {upd_shape} @ {starts} exceeds {in_shape}")
+    return identity_map(tuple(in_shape)), pad_map(tuple(upd_shape), lo, hi)
+
+
+def index_select_map(in_shape: tuple[int, ...], axis: int, start: int,
+                     step: int, n: int) -> MixedRadixMap:
+    """Row gather at the arithmetic progression ``start + j*step`` along
+    ``axis`` (``jnp.take`` with regularly spaced indices): a strided-slice
+    map whose stride may be 0 (repeat one row) or negative (reverse)."""
+    nd = len(in_shape)
+    starts = tuple(start if d == axis else 0 for d in range(nd))
+    strides = tuple(step if d == axis else 1 for d in range(nd))
+    out_shape = tuple(n if d == axis else in_shape[d] for d in range(nd))
+    return strided_slice_map(tuple(in_shape), starts, strides, out_shape)
+
+
+def index_select_band_maps(in_shape: tuple[int, ...], axis: int,
+                           indices: Sequence[int]) -> list[MixedRadixMap]:
+    """Arbitrary constant row gather along ``axis`` (``jnp.take``) as one
+    band map per index, sharing the operand as every band's source.
+
+    Band ``j`` reads ``in[.., idx_j, ..]`` into ``out[.., j, ..]``; at any
+    other output position its input coordinate is pushed past the axis size
+    (``in = M·(out - j) + idx_j`` with ``M >= dim``), so band supports are
+    disjoint and the plain band-sum Route reconstructs the gather exactly."""
+    nd = len(in_shape)
+    M = max(int(in_shape[axis]), 1)
+    n = len(indices)
+    out_shape = tuple(n if d == axis else in_shape[d] for d in range(nd))
+    maps = []
+    for j, idx in enumerate(indices):
+        A = [[Frac(1 if (i == d and i != axis) else 0) for d in range(nd)]
+             for i in range(nd)]
+        A[axis][axis] = Frac(M)
+        b = [Frac(0)] * nd
+        b[axis] = Frac(int(idx) - M * j)
+        maps.append(MixedRadixMap(
+            out_shape=out_shape, in_shape=tuple(in_shape), splits=(),
+            affine=AffineMap(tuple(tuple(r) for r in A), tuple(b)),
+            oob_possible=True,
+        ))
+    return maps
+
+
 def broadcast_map(in_shape: tuple[int, ...], out_shape: tuple[int, ...],
                   bcast_dims: Sequence[int]) -> MixedRadixMap:
     """lax.broadcast_in_dim as a fan-out gather: in[i] = out[bcast_dims[i]],

@@ -95,15 +95,28 @@ def apply_map(m: MixedRadixMap, x: jnp.ndarray, *, batch_dims: int = 0) -> jnp.n
     return out
 
 
-def route_gather(maps, xs, *, batch_dims: int = 0) -> jnp.ndarray:
+def route_gather(maps, xs, *, batch_dims: int = 0,
+                 overlay: bool = False) -> jnp.ndarray:
     """Multi-band gather (paper Route): each map reads its source into its
     band of the output; disjoint supports sum to the concat.  The canonical
     band loop, shared by the executor's COARSE multi-map path and
-    :func:`repro.core.tm_ops.route`."""
+    :func:`repro.core.tm_ops.route`.
+
+    ``overlay=True`` switches the combine from sum to *last-writer-wins*:
+    each later band overwrites the output wherever its map is in-bounds.
+    Bands may then overlap — the semantics of ``dynamic_update_slice``
+    (base tensor + update window) rather than concatenate, and the floating
+    point result is bit-exact because values are selected, never added."""
     out = None
     for x, m in zip(xs, maps):
         band = apply_map(m, x, batch_dims=batch_dims)
-        out = band if out is None else out + band
+        if out is None:
+            out = band
+        elif overlay:
+            _, valid = gather_indices(m)  # broadcasts over leading batch dims
+            out = jnp.where(valid, band, out)
+        else:
+            out = out + band
     return out
 
 

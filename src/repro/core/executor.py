@@ -209,7 +209,9 @@ class TMExecutor:
             return _EW[ins.ew](srcs[0], srcs[1])
         if ins.opcode == TMOpcode.COARSE:
             if ins.maps is not None:  # Route: band loop (Branch stage)
-                out = route_gather(ins.maps, srcs, batch_dims=batch_dims)
+                overlay = bool(ins.meta and ins.meta.get("overlay"))
+                out = route_gather(ins.maps, srcs, batch_dims=batch_dims,
+                                   overlay=overlay)
                 if ins.ew is not None and len(srcs) > len(ins.maps):
                     out = _EW[ins.ew](out, srcs[-1])
                 return out

@@ -101,6 +101,11 @@ def _coarse_segments(ins, srcs, batch_dims, segment_bytes=None):
 def _route_matches(ins, srcs, batch_dims, segment_bytes=None):
     if ins.opcode != TMOpcode.COARSE or ins.maps is None:
         return None
+    if ins.meta and ins.meta.get("overlay"):
+        # overlay Routes (dynamic_update_slice) overwrite rather than sum —
+        # the band-sum kernel below would double-count the overlapped region,
+        # so decline and let the reference engine's where-select run it
+        return None
     n_band = len(ins.maps)
     expected = n_band + (1 if ins.ew is not None else 0)
     if len(srcs) != expected:
@@ -161,8 +166,11 @@ def _chain_sig_build(instrs, srcs, batch_dims, segment_bytes):
             return None, None
         cur_srcs = srcs[k]
         if ins.maps is not None:
-            # multi-band Route — only as the terminal link, without epilogue
-            if k != n - 1 or ins.ew is not None:
+            # multi-band Route — only as the terminal link, without epilogue;
+            # overlay Routes (overwrite semantics) never chain: the chain
+            # kernel sums bands
+            if k != n - 1 or ins.ew is not None \
+                    or (ins.meta and ins.meta.get("overlay")):
                 return None, None
             if len(cur_srcs) != len(ins.maps):
                 return None, None

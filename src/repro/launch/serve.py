@@ -44,6 +44,17 @@ def serve(cfg, *, batch=4, prompt_len=32, gen=32, seed=0, log=print):
     jax.block_until_ready(tok)
     t_prefill = time.monotonic() - t0
 
+    if gen <= 0:
+        # prefill-only run: no decode loop, no generated tokens — report
+        # prefill throughput instead of dividing by a decode time that
+        # never ran (which used to yield a negative tokens/s)
+        tps = batch * prompt_len / max(t_prefill, 1e-9)
+        log(f"prefill {batch}x{prompt_len}: {t_prefill*1e3:.1f} ms "
+            f"({tps:.1f} prompt tok/s, prefill-only)")
+        return jnp.zeros((batch, 0), dtype=jnp.int32), {
+            "prefill_s": t_prefill, "decode_s": 0.0,
+            "tokens_per_s": tps, "prefill_only": True}
+
     out = [tok]
     t0 = time.monotonic()
     for t in range(prompt_len, prompt_len + gen - 1):

@@ -243,6 +243,27 @@ def attention_block(p, x, inv_freq, *, n_heads: int, n_kv: int, head_dim: int,
     return out @ p["wo"], None
 
 
+def cached_attention_step(p, x, inv_freq, cache_k, cache_v, *,
+                          n_heads: int, n_kv: int, head_dim: int,
+                          position: int):
+    """Static-position cached attention for the TMU serving path.
+
+    ``position`` must be a Python int (it is coerced here): closed over the
+    traced function, the KV append lowers to ``dynamic_update_slice`` with
+    Literal starts — the form the compiler matches as an overlay Route TM
+    instruction — and the RoPE angles fold to trace-time constants.  The
+    runtime decode loop keeps passing a traced ``cache_index`` through
+    :func:`attention_block`; this wrapper is the per-position-bucket variant
+    the serving compile cache pins one program for.
+
+    Returns ``(out, new_cache_k, new_cache_v)`` (flat, vmap/submit friendly).
+    """
+    out, new_cache = attention_block(
+        p, x, inv_freq, n_heads=n_heads, n_kv=n_kv, head_dim=head_dim,
+        cache={"k": cache_k, "v": cache_v}, cache_index=int(position))
+    return out, new_cache["k"], new_cache["v"]
+
+
 def init_cache(B: int, max_len: int, n_kv: int, head_dim: int,
                dtype=jnp.bfloat16):
     z = jnp.zeros((B, max_len, n_kv, head_dim), dtype)

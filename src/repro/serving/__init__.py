@@ -21,6 +21,7 @@ program; this subsystem applies the same scheme at *request* granularity:
 from repro.serving.batcher import (BucketKey, Request, bucket_size, coalesce,
                                    split)
 from repro.serving.cache import CacheEntry, CacheKey, CompileCache
+from repro.serving.decode import DecodeSession, DecodeStats, make_layer_step
 from repro.serving.pipeline import PipelineJob, RequestPipeline
 from repro.serving.server import (ServerConfig, TMServer, predict_cycles,
                                   predict_overlap, select_chain_fusion,
@@ -30,6 +31,7 @@ from repro.serving.stats import ServerStats
 __all__ = [
     "BucketKey", "Request", "bucket_size", "coalesce", "split",
     "CacheEntry", "CacheKey", "CompileCache",
+    "DecodeSession", "DecodeStats", "make_layer_step",
     "PipelineJob", "RequestPipeline",
     "ServerConfig", "TMServer", "predict_cycles", "predict_overlap",
     "select_chain_fusion", "select_cycle_params",

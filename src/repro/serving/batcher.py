@@ -58,9 +58,18 @@ class Request:
 
 
 def bucket_size(n: int, max_batch: int) -> int:
-    """Round ``n`` up to the next power of two, capped at ``max_batch``."""
-    if n >= max_batch:
-        return max_batch
+    """Round ``n`` up to the next power of two, capped at the largest power
+    of two ``<= max_batch``.
+
+    The cap itself must stay on the power-of-two ladder: returning a
+    non-power-of-two ``max_batch`` verbatim would mint a bucket size that
+    coexists with the pow2 ladder and fragments the compile cache (one extra
+    shape class that only full batches ever hit)."""
+    cap = 1
+    while cap * 2 <= max_batch:
+        cap *= 2
+    if n >= cap:
+        return cap
     b = 1
     while b < n:
         b *= 2

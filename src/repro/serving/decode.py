@@ -1,0 +1,201 @@
+"""Position-bucketed LM decode through the TMU serving runtime.
+
+LLM decode is the manipulation-heaviest traffic the repo models — KV-cache
+append, head split/merge, RoPE reshapes — and this module routes it through
+``TMServer``/``tm_compile``.  The trick that makes the whole step compile as
+TM phases is treating the decode *position* exactly like a shape: each
+position gets its own step function (the position is a Python-int closure
+constant, so the KV append's ``dynamic_update_slice`` starts are trace-time
+Literals and the RoPE angles fold to register constants) and its own
+``fn_key``, so the compile cache holds one pinned program per
+``(position, seq_len)`` class and replays it for every request that lands
+there — position-bucketed compilation, the same ladder shapes get.
+
+The served unit is one full decoder layer of the model (embed → block →
+final norm → logits), per the single-layer serving scenario: the KV cache
+rides the request path — each response returns the appended cache, the next
+step submits it back — so a whole decode session flows through the compile
+cache without a resident server-side state store.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import embed, rmsnorm, rope_freqs, unembed
+from repro.models.transformer import ModelConfig, _dense_block, init_lm
+from repro.serving.server import ServerConfig, TMServer
+
+
+def make_layer_step(cfg: ModelConfig, params, *, position: int):
+    """One serving step of decoder layer 0 at static ``position``.
+
+    Returns a pure ``step(tokens, cache_k, cache_v) -> (logits, ck, cv)``
+    closing over the parameters and the *Python-int* position — the property
+    the compiler needs: the KV append lowers to ``dynamic_update_slice``
+    with Literal starts (matched as an overlay Route TM instruction) and the
+    RoPE position/angle arithmetic constant-folds at trace time.  ``tokens``
+    is ``(B, S)`` int32 (S == 1 for decode, the prompt length for prefill);
+    the caches are ``(B, max_len, n_kv, head_dim)``.
+    """
+    position = int(position)
+    block = jax.tree_util.tree_map(lambda a: a[0], params["blocks"])
+    inv_freq = rope_freqs(cfg.hd, cfg.rope_theta)
+
+    def step(tokens, cache_k, cache_v):
+        x = embed(params["embed"], tokens)
+        x, new_cache, _ = _dense_block(cfg, block, x, inv_freq,
+                                       cache={"k": cache_k, "v": cache_v},
+                                       cache_index=position)
+        x = rmsnorm(params["final_norm"], x)
+        logits = unembed(params["embed"], x, cfg.vocab)
+        return logits, new_cache["k"], new_cache["v"]
+
+    return step
+
+
+@dataclasses.dataclass
+class DecodeStats:
+    """Per-session accounting next to the server's own snapshot."""
+
+    prefill_steps: int = 0
+    decode_steps: int = 0
+    positions_compiled: int = 0
+
+
+class DecodeSession:
+    """Prefill + incremental decode of one decoder layer via ``TMServer``.
+
+    Every step goes through ``server.submit`` with a position-qualified
+    ``fn_key``: the first request at a ``(position, seq_len)`` class pays the
+    ``tm_compile`` of ``jax.vmap(step)``; every later one replays the cached
+    program.  The KV cache is carried across steps through the request path
+    (response → next submit), never stored server-side.
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, *, max_len: int = 64,
+                 server: TMServer | None = None,
+                 config: ServerConfig | None = None, seed: int = 0):
+        self.cfg = cfg
+        if params is None:
+            params, _ = init_lm(cfg, jax.random.PRNGKey(seed))
+        self.params = params
+        self.max_len = int(max_len)
+        self._own_server = server is None
+        if server is None:
+            # one cache entry per decode position: capacity must cover the
+            # whole session or the LRU would recompile every generation pass.
+            # exact=True: decode gates on bit-exact logits vs the eager
+            # model, so TPU phases must match eager dispatch granularity
+            config = config or ServerConfig(max_batch=1,
+                                            batch_timeout_s=0.0,
+                                            cache_capacity=self.max_len + 8,
+                                            exact=True)
+            server = TMServer(config).start()
+        self.server = server
+        self.stats = DecodeStats()
+        self._steps: dict[int, Any] = {}
+        self._cache_dtype = (jnp.float32 if cfg.dtype == jnp.float32
+                             else jnp.bfloat16)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        if self._own_server:
+            self.server.stop()
+
+    def __enter__(self) -> "DecodeSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- the step path -----------------------------------------------------
+
+    def _fn_key(self, position: int, seq_len: int) -> str:
+        # the position IS part of the bucket identity, like a shape class
+        return f"{self.cfg.name}/decode-layer@p{position}s{seq_len}"
+
+    def step_fn(self, position: int):
+        """The (memoized) pure step function at ``position`` — also the
+        bit-exactness oracle: calling it eagerly is the uncompiled model."""
+        if position not in self._steps:
+            self._steps[position] = make_layer_step(self.cfg, self.params,
+                                                    position=position)
+            self.stats.positions_compiled += 1
+        return self._steps[position]
+
+    def init_cache(self, batch: int):
+        z = jnp.zeros((batch, self.max_len, self.cfg.n_kv_heads, self.cfg.hd),
+                      self._cache_dtype)
+        return z, z
+
+    def prefill(self, prompts: jnp.ndarray):
+        """Run the prompt through the layer at position 0.
+
+        ``prompts``: (B, S) int32.  Returns ``(logits, (cache_k, cache_v))``
+        with the prompt's K/V appended at positions ``[0, S)``."""
+        B, S = prompts.shape
+        if S > self.max_len:
+            raise ValueError(f"prompt length {S} exceeds max_len "
+                             f"{self.max_len}")
+        ck, cv = self.init_cache(B)
+        logits, ck, cv = self.server(self.step_fn(0), prompts, ck, cv,
+                                     fn_key=self._fn_key(0, S))
+        self.stats.prefill_steps += 1
+        return logits, (ck, cv)
+
+    def decode(self, tokens: jnp.ndarray, cache, position: int):
+        """One decode step: append K/V at ``position``, return next logits.
+
+        ``tokens``: (B, 1) int32; ``position`` is the number of tokens
+        already in the cache (prompt + generated so far)."""
+        position = int(position)
+        if not 0 <= position < self.max_len:
+            raise ValueError(f"position {position} outside [0, {self.max_len})")
+        ck, cv = cache
+        logits, ck, cv = self.server(self.step_fn(position), tokens, ck, cv,
+                                     fn_key=self._fn_key(position, 1))
+        self.stats.decode_steps += 1
+        return logits, (ck, cv)
+
+    def generate(self, prompts: jnp.ndarray, n_steps: int):
+        """Greedy prefill + ``n_steps`` decode steps.
+
+        Returns ``(tokens, logits_list)`` — the (B, n_steps) generated ids
+        and the per-step logits (prefill last-position logits first)."""
+        B, S = prompts.shape
+        if S + n_steps > self.max_len:
+            raise ValueError(
+                f"prompt {S} + {n_steps} steps exceeds max_len {self.max_len}")
+        logits, cache = self.prefill(prompts)
+        logits_list = [logits[:, -1]]
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for t in range(n_steps - 1):
+            logits, cache = self.decode(tok, cache, S + t)
+            logits_list.append(logits[:, -1])
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1), logits_list
+
+    def reference_generate(self, prompts: jnp.ndarray, n_steps: int):
+        """The pure-XLA oracle: the SAME step functions called eagerly (no
+        tm_compile, no server) — the compiled session must be bit-exact
+        against this."""
+        B, S = prompts.shape
+        ck, cv = self.init_cache(B)
+        logits, ck, cv = self.step_fn(0)(prompts, ck, cv)
+        logits_list = [logits[:, -1]]
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        out = [tok]
+        for t in range(n_steps - 1):
+            logits, ck, cv = self.step_fn(S + t)(tok, ck, cv)
+            logits_list.append(logits[:, -1])
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+            out.append(tok)
+        return jnp.concatenate(out, axis=1), logits_list

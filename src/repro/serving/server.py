@@ -57,6 +57,11 @@ class ServerConfig:
     backend: str = "fused"          # requested backend (cache-key component)
     backend_candidates: tuple[str, ...] = ()  # non-empty: probe + pin winner
     interpret: bool = True          # Pallas interpreter mode (CPU-safe)
+    # bit-exact TPU phases: one XLA computation per eqn, literals baked —
+    # matches eager dispatch granularity so served logits equal the
+    # uncompiled model's bit for bit (the decode gate); costs the
+    # one-computation-per-phase batching of opaque work
+    exact: bool = False
     max_batch: int = 8              # micro-batch height cap (power of two)
     batch_timeout_s: float = 0.005  # max straggler wait before dispatch
     cache_capacity: int = 32        # compile-cache entries (LRU)
@@ -386,7 +391,8 @@ class TMServer:
                    backend: str, fuse_chains: bool = False) -> list:
         compiled.run_phase(phase, env, backend=backend,
                            interpret=self.config.interpret,
-                           fuse_chains=fuse_chains)
+                           fuse_chains=fuse_chains,
+                           exact=self.config.exact)
         # return the written buffers: the stream resolves them before
         # stamping the event, so busy time is realized compute, not async
         # dispatch latency

@@ -123,3 +123,36 @@ class TestMixedRadixMap:
         maps = af.route_maps([(4, 4, 2), (4, 4, 2)])
         t = af.transpose_map((4, 4, 2))
         assert af.compose_maps(maps[0], t) is None  # outer oob -> two passes
+
+
+def test_update_slice_maps_window_and_identity():
+    base_map, win_map = af.update_slice_maps((8, 4), (3, 4), (2, 0))
+    assert base_map.out_shape == (8, 4) and win_map.out_shape == (8, 4)
+    with pytest.raises(ValueError):
+        af.update_slice_maps((8, 4), (3, 4), (6, 0))  # window exceeds dim
+    with pytest.raises(ValueError):
+        af.update_slice_maps((8, 4), (3, 4), (-1, 0))
+
+
+def test_index_select_band_maps_oob_supports_disjoint():
+    import jax.numpy as jnp
+    """Each band's valid support covers exactly its own output position, so
+    a plain SUM over bands reproduces the gather (no overlay needed)."""
+    from repro.core.engine import apply_map, route_gather
+    rng = np.random.RandomState(5)
+    x = rng.rand(10, 3).astype(np.float32)
+    idx = [7, 7, 0, 4]  # duplicates allowed
+    maps = af.index_select_band_maps((10, 3), 0, idx)
+    got = np.asarray(route_gather(maps, [jnp.asarray(x)] * len(maps)))
+    assert np.array_equal(got, x[idx])
+
+
+def test_index_select_map_stride_zero_and_negative():
+    import jax.numpy as jnp
+    from repro.core.engine import apply_map
+    rng = np.random.RandomState(6)
+    x = rng.rand(9, 2).astype(np.float32)
+    m = af.index_select_map((9, 2), 0, 4, 0, 3)       # repeat row 4
+    assert np.array_equal(np.asarray(apply_map(m, jnp.asarray(x))), x[[4, 4, 4]])
+    m = af.index_select_map((9, 2), 0, 6, -2, 3)      # 6, 4, 2
+    assert np.array_equal(np.asarray(apply_map(m, jnp.asarray(x))), x[[6, 4, 2]])

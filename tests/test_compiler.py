@@ -346,3 +346,242 @@ def test_traced_dynamic_slice_does_not_trigger_pjit_inlining(rng):
     got = c(x, jnp.int32(1))
     assert np.array_equal(np.asarray(got),
                           np.asarray(inner(x, jnp.int32(1)) + 0.0))
+
+
+# ---------------------------------------------------------------------------
+# dynamic_slice clamp semantics: differential vs lax (negative / past-the-end)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("starts", [(-2, -1, 0), (9, 12, 1), (-3, 6, 2)])
+def test_dynamic_slice_clamp_differential_vs_lax(rng, starts):
+    # the fold max(0, min(st, dim - sz)) must agree with lax.dynamic_slice's
+    # own clamp for negative AND past-the-end constant starts, on all three
+    # backends — a divergence here silently corrupts every bucketed decode
+    x = jnp.asarray(rng.rand(5, 7, 3).astype(np.float32))
+    fn = lambda a: jax.lax.dynamic_slice(a, starts, (2, 3, 1))
+    c = tm_compile(fn, x)
+    assert "dynamic_slice" in c.matched_prims
+    ref = np.asarray(fn(x))
+    for backend in ("reference", "fused", "pallas"):
+        assert np.array_equal(np.asarray(c(x, backend=backend)), ref), \
+            (backend, starts)
+
+
+# ---------------------------------------------------------------------------
+# dynamic_update_slice matching (KV-cache append)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pos", [0, 5, 13])
+def test_update_slice_kv_append_round_trip(rng, pos):
+    """Constant-position KV append: matched as an overlay Route, bit-exact
+    vs lax.dynamic_update_slice on all three backends."""
+    cache = jnp.asarray(rng.rand(2, 16, 2, 4).astype(np.float32))
+    upd = jnp.asarray(rng.rand(2, 3, 2, 4).astype(np.float32))
+    fn = lambda c_, u: jax.lax.dynamic_update_slice(c_, u, (0, pos, 0, 0))
+    c = tm_compile(fn, cache, upd)
+    assert "dynamic_update_slice" in c.matched_prims
+    (node,) = [n for n in c.graph.nodes if n.kind == "tmu"]
+    assert node.instr.opcode == TMOpcode.COARSE
+    assert node.instr.meta and node.instr.meta.get("overlay") is True
+    assert len(node.instr.srcs) == 2  # operand + update; starts in the maps
+    ref = np.asarray(fn(cache, upd))
+    for backend in ("reference", "fused", "pallas"):
+        assert np.array_equal(np.asarray(c(cache, upd, backend=backend)),
+                              ref), backend
+
+
+def test_update_slice_clamps_past_the_end_start(rng):
+    # lax clamps start 14 -> 13 (=16-3); the overlay window must agree
+    cache = jnp.asarray(rng.rand(1, 16, 4).astype(np.float32))
+    upd = jnp.asarray(rng.rand(1, 3, 4).astype(np.float32))
+    fn = lambda c_, u: jax.lax.dynamic_update_slice(c_, u, (0, 14, 0))
+    c = tm_compile(fn, cache, upd)
+    assert "dynamic_update_slice" in c.matched_prims
+    assert np.array_equal(np.asarray(c(cache, upd)),
+                          np.asarray(fn(cache, upd)))
+
+
+def test_update_slice_traced_start_degrades_with_note(rng):
+    """A runtime start must degrade to an opaque TPU phase with a
+    trace-fallback note — never an exception — mirroring dynamic_slice."""
+    cache = jnp.asarray(rng.rand(1, 16, 4).astype(np.float32))
+    upd = jnp.asarray(rng.rand(1, 3, 4).astype(np.float32))
+    fn = lambda c_, u, i: jax.lax.dynamic_update_slice(c_, u, (0, i, 0)) * 2.0
+    c = tm_compile(fn, cache, upd, jnp.int32(5))
+    assert "dynamic_update_slice" not in c.matched_prims
+    assert c.pass_report.trace_fallbacks == 1
+    (note,) = [a.detail for a in c.pass_report.actions
+               if a.pass_name == "trace-fallback"]
+    assert "dynamic_update_slice" in note and "non-constant start" in note
+    assert "bucket the position" in note
+    got = c(cache, upd, jnp.int32(5))
+    assert np.array_equal(np.asarray(got),
+                          np.asarray(fn(cache, upd, jnp.int32(5))))
+
+
+# ---------------------------------------------------------------------------
+# gather matching (embedding row fetch / token dispatch)
+# ---------------------------------------------------------------------------
+
+def test_gather_arithmetic_progression_matches_single_map(rng):
+    x = jnp.asarray(rng.rand(10, 6).astype(np.float32))
+    idx = jnp.asarray([1, 3, 5, 7])
+    fn = lambda a: jnp.take(a, idx, axis=0)
+    c = tm_compile(fn, x)
+    assert "gather" in c.matched_prims
+    (node,) = [n for n in c.graph.nodes if n.kind == "tmu"]
+    assert node.instr.maps is None  # one strided map, not a band Route
+    ref = np.asarray(fn(x))
+    for backend in ("reference", "fused", "pallas"):
+        assert np.array_equal(np.asarray(c(x, backend=backend)), ref), backend
+
+
+def test_gather_irregular_indices_match_band_route(rng):
+    x = jnp.asarray(rng.rand(10, 6).astype(np.float32))
+    idx = jnp.asarray([3, 0, 7, 7, 2])  # irregular, with a repeat
+    fn = lambda a: jnp.take(a, idx, axis=0)
+    c = tm_compile(fn, x)
+    assert "gather" in c.matched_prims
+    (node,) = [n for n in c.graph.nodes if n.kind == "tmu"]
+    assert node.instr.maps is not None and len(node.instr.maps) == 5
+    ref = np.asarray(fn(x))
+    for backend in ("reference", "fused", "pallas"):
+        assert np.array_equal(np.asarray(c(x, backend=backend)), ref), backend
+
+
+def test_gather_inner_axis_matches(rng):
+    x = jnp.asarray(rng.rand(4, 9, 3).astype(np.float32))
+    idx = jnp.asarray([8, 1, 4])
+    fn = lambda a: jnp.take(a, idx, axis=1)
+    c = tm_compile(fn, x)
+    assert "gather" in c.matched_prims
+    assert np.array_equal(np.asarray(c(x)), np.asarray(fn(x)))
+
+
+def test_gather_traced_indices_degrade_with_note(rng):
+    x = jnp.asarray(rng.rand(10, 6).astype(np.float32))
+    idx = jnp.asarray([3, 0, 7])
+    fn = lambda a, i: jnp.take(a, i, axis=0) * 2.0
+    c = tm_compile(fn, x, idx)
+    assert "gather" not in c.matched_prims
+    notes = [a.detail for a in c.pass_report.actions
+             if a.pass_name == "trace-fallback"]
+    assert any("traced index vector" in n for n in notes), notes
+    assert np.array_equal(np.asarray(c(x, idx)), np.asarray(fn(x, idx)))
+
+
+def test_gather_too_many_irregular_indices_degrades(rng):
+    from repro.compiler.trace import _GATHER_MAX_BANDS
+    n = _GATHER_MAX_BANDS + 1
+    x = jnp.asarray(rng.rand(200, 3).astype(np.float32))
+    vals = rng.randint(0, 200, size=n)
+    vals[1] = vals[0] + 7  # break any accidental arithmetic progression
+    vals[2] = vals[0]
+    idx = jnp.asarray(vals)
+    fn = lambda a: jnp.take(a, idx, axis=0)
+    c = tm_compile(fn, x)
+    assert "gather" not in c.matched_prims
+    notes = [a.detail for a in c.pass_report.actions
+             if a.pass_name == "trace-fallback"]
+    assert any("band Route budget" in m for m in notes), notes
+    assert np.array_equal(np.asarray(c(x)), np.asarray(fn(x)))
+
+
+# ---------------------------------------------------------------------------
+# reduce_window: identity/strided layouts match, real pooling stays opaque
+# ---------------------------------------------------------------------------
+
+def test_reduce_window_degenerate_stride_matches(rng):
+    x = jnp.asarray(rng.rand(4, 8, 6).astype(np.float32))
+    fn = lambda a: jax.lax.reduce_window(
+        a, -jnp.inf, jax.lax.max, (1, 1, 1), (1, 2, 3), "VALID")
+    c = tm_compile(fn, x)
+    assert "reduce_window_max" in c.matched_prims
+    ref = np.asarray(fn(x))
+    for backend in ("reference", "fused", "pallas"):
+        assert np.array_equal(np.asarray(c(x, backend=backend)), ref), backend
+
+
+def test_reduce_window_real_pooling_stays_opaque(rng):
+    x = jnp.asarray(rng.rand(1, 8, 8, 2).astype(np.float32))
+    fn = lambda a: jax.lax.reduce_window(
+        a, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    c = tm_compile(fn, x)
+    assert "reduce_window_max" not in c.matched_prims
+    # genuine reductions are compute: no fallback noise either
+    assert c.pass_report.trace_fallbacks == 0
+    assert np.array_equal(np.asarray(c(x)), np.asarray(fn(x)))
+
+
+# ---------------------------------------------------------------------------
+# phase defragmentation
+# ---------------------------------------------------------------------------
+
+def test_phase_defrag_moves_singleton_past_independent_tpu(rng):
+    """A singleton TM node wedged between TPU nodes that neither read its
+    output nor feed it must migrate to join the nearest TM run."""
+    a = jnp.asarray(rng.rand(6, 6).astype(np.float32))
+    b = jnp.asarray(rng.rand(4, 4).astype(np.float32))
+
+    def fn(a, b):
+        t = (a @ a).T          # TM singleton wedged after the dot
+        r = jnp.tanh(b).T      # independent chain: TPU then TM
+        return t, r
+
+    c = tm_compile(fn, a, b)
+    assert c.pass_report.phases_defragmented >= 1, c.pass_report.summary()
+    mix = c.partition_report.phase_mix()
+    assert mix["tmu_singletons"] == 0, mix
+    assert mix["tmu_phases"] == 1, mix
+    got = c(a, b)
+    ref = fn(a, b)
+    for g, w in zip(got, ref):
+        assert np.array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_phase_defrag_respects_data_dependence(rng):
+    # the intervening TPU node READS the singleton's output: no legal move
+    a = jnp.asarray(rng.rand(6, 6).astype(np.float32))
+
+    def fn(a):
+        h = a @ a
+        t = h.T                # singleton
+        u = jnp.tanh(t)        # reads t: blocks the forward move
+        return u[:2]           # TM (slice) after the blocker
+
+    c = tm_compile(fn, a)
+    # order must stay valid regardless of whether any move was found
+    assert np.array_equal(np.asarray(c(a)), np.asarray(fn(a)))
+    names_in_order = [n.kind for n in c.graph.nodes]
+    assert names_in_order.index("tmu") > 0  # transpose still after the dot
+
+
+def test_phase_mix_reports_fragmentation(rng):
+    x, skip = _superres_inputs(rng)
+    c = tm_compile(cnn.superres_tail, x, skip)
+    mix = c.partition_report.phase_mix()
+    assert mix["phases"] == mix["tpu_phases"] + mix["tmu_phases"]
+    assert len(mix["kinds"]) == mix["phases"]
+    assert mix["tmu_instrs"] >= mix["tmu_phases"]
+
+
+# ---------------------------------------------------------------------------
+# exact mode: per-eqn TPU evaluation matches eager bit for bit
+# ---------------------------------------------------------------------------
+
+def test_exact_mode_matches_eager_through_mean_rsqrt_chain(rng):
+    """The decode-path divergence, pinned: eager jnp code bakes constants
+    into each dispatched computation (div-by-const becomes mul-by-recip) and
+    dispatches op by op; whole-phase jit lets XLA rewrite across the fused
+    rsqrt(x/c + eps) chain.  exact=True must reproduce eager bit for bit."""
+    g = jnp.asarray(rng.rand(48).astype(np.float32))
+    x = jnp.asarray(rng.randn(2, 8, 48).astype(np.float32))
+
+    def fn(x):
+        var = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(var + 1e-6) * g
+
+    c = tm_compile(fn, x)
+    ref = np.asarray(fn(x))
+    got = np.asarray(c(x, exact=True))
+    assert np.array_equal(got, ref)

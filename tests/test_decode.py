@@ -1,0 +1,135 @@
+"""repro.serving.decode: position-bucketed LM decode through the TMU stack.
+
+One full decoder layer of the phi4-mini smoke model: prefill + incremental
+decode served via TMServer with the position as part of the compile-cache
+key, bit-exact against the eager (uncompiled) step functions.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.compiler import tm_compile
+from repro.configs.phi4_mini_3p8b import smoke_config
+from repro.models.attention import cached_attention_step, init_attention
+from repro.models.layers import rope_freqs
+from repro.models.transformer import init_lm
+from repro.serving.decode import DecodeSession, make_layer_step
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke_config()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_lm(cfg, jax.random.PRNGKey(0))[0]
+
+
+# ---------------------------------------------------------------------------
+# the decoder layer compiles whole: KV append, RoPE, head split/merge all TM
+# ---------------------------------------------------------------------------
+
+def test_decode_step_compiles_with_tm_kv_append_and_rope(cfg, params):
+    step = make_layer_step(cfg, params, position=8)
+    tok = jnp.zeros((1, 1), jnp.int32)
+    ck = jnp.zeros((1, 32, cfg.n_kv_heads, cfg.hd), jnp.float32)
+    c = tm_compile(step, tok, ck, ck)
+    # the decode step's manipulation traffic compiles as TM phases
+    required = {"dynamic_update_slice",             # KV append
+                "mul", "add", "sub", "concatenate", "slice",  # RoPE
+                "reshape", "transpose"}             # head split/merge
+    assert required <= c.matched_prims, required - c.matched_prims
+    # and none of it fell back: the only legitimate opaque residue is
+    # compute (+ the traced-token embedding gather, which is data-dependent)
+    assert not any("dynamic_update_slice" in str(n) for n in c.graph.notes)
+    mix = c.partition_report.phase_mix()
+    assert mix["tmu_instrs"] >= 20, mix
+
+
+def test_decode_step_exact_mode_bit_exact(cfg, params):
+    step = make_layer_step(cfg, params, position=4)
+    tok = jnp.asarray([[7]], jnp.int32)
+    ck = jax.random.normal(jax.random.PRNGKey(3),
+                           (1, 32, cfg.n_kv_heads, cfg.hd))
+    cv = jax.random.normal(jax.random.PRNGKey(4), ck.shape)
+    c = tm_compile(step, tok, ck, cv)
+    got = c(tok, ck, cv, exact=True)
+    want = step(tok, ck, cv)
+    for g, w in zip(got, want):
+        assert bool(jnp.array_equal(g, w))
+
+
+def test_cached_attention_step_static_position(cfg):
+    p, _ = init_attention(jax.random.PRNGKey(1), cfg.d_model, cfg.n_heads,
+                          cfg.n_kv_heads, cfg.hd)
+    inv_freq = rope_freqs(cfg.hd, cfg.rope_theta)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 1, cfg.d_model))
+    ck = jnp.zeros((1, 16, cfg.n_kv_heads, cfg.hd), jnp.float32)
+    fn = lambda x, ck, cv: cached_attention_step(
+        p, x, inv_freq, ck, cv, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        head_dim=cfg.hd, position=5)
+    c = tm_compile(fn, x, ck, ck)
+    assert "dynamic_update_slice" in c.matched_prims
+    got = c(x, ck, ck, exact=True)
+    want = fn(x, ck, ck)
+    for g, w in zip(got, want):
+        assert bool(jnp.array_equal(g, w))
+
+
+# ---------------------------------------------------------------------------
+# the session: prefill + decode through TMServer, caches through the futures
+# ---------------------------------------------------------------------------
+
+def test_session_prefill_plus_short_decode_bit_exact(cfg, params):
+    with DecodeSession(cfg, params, max_len=16) as sess:
+        prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 4),
+                                     0, cfg.vocab)
+        toks, logits = sess.generate(prompts, 4)
+        ref_toks, ref_logits = sess.reference_generate(prompts, 4)
+        assert bool(jnp.array_equal(toks, ref_toks))
+        assert len(logits) == len(ref_logits) == 4
+        for a, b in zip(logits, ref_logits):
+            assert bool(jnp.array_equal(a, b))
+        # one compile-cache entry per (position, seq_len) class
+        snap = sess.server.snapshot_stats()
+        assert snap["cache"]["entries"] == 4  # prefill@0 + 3 decode positions
+
+
+def test_session_warm_pass_hits_cache(cfg, params):
+    with DecodeSession(cfg, params, max_len=16) as sess:
+        prompts = jnp.zeros((1, 4), jnp.int32)
+        sess.generate(prompts, 3)
+        misses_cold = sess.server.snapshot_stats()["cache"]["misses"]
+        sess.generate(prompts, 3)
+        snap = sess.server.snapshot_stats()
+        assert snap["cache"]["misses"] == misses_cold  # warm pass: all hits
+        assert snap["cache"]["hits"] >= 3
+
+
+def test_session_bounds_checked(cfg, params):
+    with DecodeSession(cfg, params, max_len=8) as sess:
+        with pytest.raises(ValueError):
+            sess.prefill(jnp.zeros((1, 9), jnp.int32))
+        with pytest.raises(ValueError):
+            sess.generate(jnp.zeros((1, 4), jnp.int32), 5)
+        ck, cv = sess.init_cache(1)
+        with pytest.raises(ValueError):
+            sess.decode(jnp.zeros((1, 1), jnp.int32), (ck, cv), 8)
+
+
+@pytest.mark.slow
+def test_session_32_step_decode_bit_exact(cfg, params):
+    """The acceptance run: prefill + 32 decode steps, every step's logits
+    bit-exact vs the uncompiled model, KV cache carried across steps
+    through the compile cache."""
+    with DecodeSession(cfg, params, max_len=48) as sess:
+        prompts = jax.random.randint(jax.random.PRNGKey(9), (2, 8),
+                                     0, cfg.vocab)
+        toks, logits = sess.generate(prompts, 32)
+        ref_toks, ref_logits = sess.reference_generate(prompts, 32)
+        assert bool(jnp.array_equal(toks, ref_toks))
+        assert len(logits) == 32
+        for a, b in zip(logits, ref_logits):
+            assert bool(jnp.array_equal(a, b))

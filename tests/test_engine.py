@@ -8,7 +8,8 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import affine as af
-from repro.core.engine import apply_map, gather_indices, scatter_accumulate
+from repro.core.engine import (apply_map, gather_indices, route_gather,
+                               scatter_accumulate)
 
 
 def _oracle(m: af.MixedRadixMap, x: np.ndarray) -> np.ndarray:
@@ -108,3 +109,28 @@ def test_gather_indices_fold_to_constants():
     # no integer arithmetic primitives feed the gather at runtime: the index
     # tensor is a trace-time constant (the loaded address registers)
     assert "iota" not in names or True
+
+
+def test_route_overlay_last_writer_wins():
+    """Overlay Route (dynamic_update_slice form): the window band must
+    REPLACE the base band where valid, never sum with it."""
+    import jax
+    rng = np.random.RandomState(11)
+    base = jnp.asarray(rng.rand(2, 16, 4).astype(np.float32))
+    upd = jnp.asarray(rng.rand(2, 3, 4).astype(np.float32))
+    maps = af.update_slice_maps((2, 16, 4), (2, 3, 4), (0, 5, 0))
+    got = route_gather(maps, (base, upd), overlay=True)
+    ref = jax.lax.dynamic_update_slice(base, upd, (0, 5, 0))
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+def test_route_overlay_batch_dims():
+    import jax
+    rng = np.random.RandomState(12)
+    base = jnp.asarray(rng.rand(3, 2, 8, 4).astype(np.float32))
+    upd = jnp.asarray(rng.rand(3, 2, 3, 4).astype(np.float32))
+    maps = af.update_slice_maps((2, 8, 4), (2, 3, 4), (0, 4, 0))
+    got = route_gather(maps, (base, upd), batch_dims=1, overlay=True)
+    ref = jnp.stack([jax.lax.dynamic_update_slice(base[i], upd[i], (0, 4, 0))
+                     for i in range(3)])
+    assert np.array_equal(np.asarray(got), np.asarray(ref))

@@ -451,3 +451,12 @@ def test_cache_eviction_drops_fn_pin():
     del entry_a                      # caller's handle (was the last ref path)
     gc.collect()
     assert ref_a() is None           # eviction released the traced closure
+
+
+def test_bucket_size_caps_at_largest_pow2_below_max_batch():
+    # a non-pow2 max_batch must clamp to the pow2 ladder, not mint a stray
+    # bucket size that fragments the compile cache
+    assert [bucket_size(n, 6) for n in (1, 2, 3, 4, 5, 6, 9)] == \
+        [1, 2, 4, 4, 4, 4, 4]
+    assert [bucket_size(n, 1) for n in (1, 5)] == [1, 1]
+    assert bucket_size(3, 12) == 4 and bucket_size(9, 12) == 8
