@@ -18,11 +18,12 @@ them), and warm compiled decode at or above ``MIN_TOKENS_PER_S`` — the
 floor recorded in the JSON, lenient because the TM stack is a numerical
 emulation of the paper's datapath, not a tuned kernel path.
 
-    PYTHONPATH=src python benchmarks/decode_latency.py
+    PYTHONPATH=src python benchmarks/decode_latency.py [--trace out.json]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -32,6 +33,8 @@ import jax.numpy as jnp
 from repro.compiler import tm_compile
 from repro.configs.phi4_mini_3p8b import smoke_config
 from repro.models.transformer import init_lm
+from repro.obs import as_tracer
+from repro.serving import ServerConfig
 from repro.serving.decode import DecodeSession
 
 BATCH = 2
@@ -46,9 +49,13 @@ REQUIRED_TM_PRIMS = {"dynamic_update_slice",            # KV-cache append
                      "reshape", "transpose"}            # head split/merge
 
 
-def bench_compiled(cfg, params, prompts) -> dict:
+def bench_compiled(cfg, params, prompts, tracer=None) -> dict:
     """Cold pass (per-position compiles) + warm measured pass."""
-    with DecodeSession(cfg, params, max_len=MAX_LEN) as sess:
+    # mirror DecodeSession's default config, plus the trace timeline
+    srv_cfg = ServerConfig(max_batch=1, batch_timeout_s=0.0,
+                           cache_capacity=MAX_LEN + 8, exact=True,
+                           trace=tracer)
+    with DecodeSession(cfg, params, max_len=MAX_LEN, config=srv_cfg) as sess:
         t0 = time.perf_counter()
         toks_cold, logits_cold = sess.generate(prompts, N_DECODE)
         cold_wall = time.perf_counter() - t0
@@ -63,6 +70,7 @@ def bench_compiled(cfg, params, prompts) -> dict:
                  and all(bool(jnp.array_equal(a, b))
                          for a, b in zip(logits, ref_logits)))
         snap = sess.server.snapshot_stats()
+        session = sess.stats.snapshot()
     tokens = BATCH * N_DECODE
     return {
         "cold_wall_s": cold_wall,
@@ -71,6 +79,7 @@ def bench_compiled(cfg, params, prompts) -> dict:
         "tokens_per_s": tokens / warm_wall,
         "bit_exact_logits": exact,
         "cache": snap["cache"],
+        "session": session,
     }
 
 
@@ -125,14 +134,21 @@ def phase_mix_of_decode_step(cfg, params) -> dict:
     }
 
 
-def main() -> dict:
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="export the compiled decode pass as Chrome-trace "
+                         "JSON (open at https://ui.perfetto.dev)")
+    args = ap.parse_args(argv)
+    tracer = as_tracer(bool(args.trace))
+
     cfg = smoke_config()
     params, _ = init_lm(cfg, jax.random.PRNGKey(0))
     prompts = jax.random.randint(jax.random.PRNGKey(1),
                                  (BATCH, PROMPT_LEN), 0, cfg.vocab)
 
     mix = phase_mix_of_decode_step(cfg, params)
-    compiled = bench_compiled(cfg, params, prompts)
+    compiled = bench_compiled(cfg, params, prompts, tracer=tracer)
     baseline = bench_xla_baseline(cfg, params, prompts)
 
     report = {
@@ -155,6 +171,9 @@ def main() -> dict:
           f"(cold pass {compiled['cold_wall_s']:.1f}s, "
           f"warm {compiled['warm_wall_s']:.1f}s)")
     print(f"pure-XLA jit:  {baseline['tokens_per_s']:.2f} tok/s")
+    sess = compiled["session"]
+    print(f"per-step latency: p50 {sess['step_latency_p50_s']*1e3:.1f} ms / "
+          f"p99 {sess['step_latency_p99_s']*1e3:.1f} ms")
     print(f"TM share of the decode step: {mix['tm_instr_share']:.1%} of "
           f"instructions ({mix['tmu_instrs']} TM / {mix['tpu_eqns']} TPU), "
           f"phases [{mix['kinds']}]")
@@ -163,6 +182,9 @@ def main() -> dict:
     with open("BENCH_decode.json", "w") as f:
         json.dump(report, f, indent=2)
     print("\nwrote BENCH_decode.json")
+    if args.trace:
+        trace = tracer.export_chrome_trace(args.trace)
+        print(f"trace: {len(trace['traceEvents'])} events -> {args.trace}")
 
     if not compiled["bit_exact_logits"]:
         raise SystemExit("served decode logits diverged from the uncompiled "

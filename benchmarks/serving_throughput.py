@@ -10,16 +10,19 @@ by CI, like the compiler trajectory):
   vs. cache-warm batched throughput (second pass);
 * **pipeline overlap** — mixed conv+TM traffic (``espcn``) through the
   two-engine pipeline: measured overlap ratio next to the cycle model's
-  prediction.
+  prediction.  This pass runs traced, so the report also embeds the
+  :class:`~repro.obs.TraceReport` per-phase measured-vs-modeled table
+  (``--trace out.json`` additionally exports the Chrome-trace timeline).
 
 Acceptance gate: warm batched serving must clear 2x the uncached
 per-request throughput (the compile cache + micro-batching dividend).
 
-    PYTHONPATH=src python benchmarks/serving_throughput.py
+    PYTHONPATH=src python benchmarks/serving_throughput.py [--trace out.json]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import time
 
@@ -29,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.compiler import tm_compile
 from repro.models import cnn
+from repro.obs import Tracer, TraceReport
 from repro.serving import ServerConfig, TMServer
 
 SHAPE = (1, 8, 12, 8)          # superres_tail request: x (B,H,W,C), s=2
@@ -101,14 +105,17 @@ def bench_server(rng, max_batch: int) -> dict:
     }
 
 
-def bench_overlap(rng) -> dict:
-    """Mixed conv+TM traffic: the two-engine pipeline's overlap ratio."""
+def bench_overlap(rng, tracer: Tracer) -> dict:
+    """Mixed conv+TM traffic: the two-engine pipeline's overlap ratio.
+
+    Runs traced so the per-phase wall time of the espcn program can be
+    joined against the cycle model's predictions (``trace_report``)."""
     params = cnn.init_espcn(jax.random.PRNGKey(0), s=2)
 
     def espcn(img):
         return cnn.espcn(params, img)
 
-    cfg = ServerConfig(max_batch=2, batch_timeout_s=0.005)
+    cfg = ServerConfig(max_batch=2, batch_timeout_s=0.005, trace=tracer)
     with TMServer(cfg) as srv:
         for _ in range(2):  # warm the cache, then measure steady traffic
             futs = [srv.submit(espcn,
@@ -119,19 +126,36 @@ def bench_overlap(rng) -> dict:
             for f in futs:
                 f.result(timeout=300)
         snap = srv.snapshot_stats()
+        # join measured per-phase wall time (trace) with the cycle model's
+        # per-phase prediction for the one cached espcn program
+        entry = srv.cache.get(srv.cache.keys()[0])
+        report = TraceReport.from_tracer(tracer, entry.compiled)
     return {
         "overlap_ratio": snap["overlap_ratio"],
         "predicted_overlap": snap["predicted_overlap"],
         "engine_busy_s": snap["engine_busy_s"],
         "pipeline_span_s": snap["pipeline_span_s"],
+        "trace_report": {
+            "rows": [r.as_dict() for r in report.rows],
+            "covered": report.covered(),
+            "table": report.table(),
+            "summary": report.summary(),
+        },
     }
 
 
-def main() -> dict:
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="export the traced overlap pass as Chrome-trace "
+                         "JSON (open at https://ui.perfetto.dev)")
+    args = ap.parse_args(argv)
+
     rng = np.random.RandomState(0)
     uncached = bench_uncached(rng)
     rows = [bench_server(rng, mb) for mb in (1, 2, 4, 8)]
-    overlap = bench_overlap(rng)
+    tracer = Tracer()
+    overlap = bench_overlap(rng, tracer)
 
     best = max(rows, key=lambda r: r["warm_requests_per_s"])
     speedup = best["warm_requests_per_s"] / uncached["requests_per_s"]
@@ -158,10 +182,15 @@ def main() -> dict:
     print(f"pipeline overlap: {overlap['overlap_ratio']:.1%} measured / "
           f"{overlap['predicted_overlap']:.1%} predicted (espcn)")
     print(f"warm-batched over uncached: {speedup:.1f}x")
+    print("\n# per-phase measured vs modeled (espcn, traced overlap pass)")
+    print(overlap["trace_report"]["summary"])
 
     with open("BENCH_serving.json", "w") as f:
         json.dump(report, f, indent=2)
     print("\nwrote BENCH_serving.json")
+    if args.trace:
+        trace = tracer.export_chrome_trace(args.trace)
+        print(f"trace: {len(trace['traceEvents'])} events -> {args.trace}")
     if speedup < 2.0:
         raise SystemExit(
             f"cache-warm batched serving only {speedup:.2f}x over uncached "

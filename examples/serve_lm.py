@@ -10,6 +10,7 @@ import argparse
 
 from repro.configs import get_smoke, list_archs
 from repro.launch.serve import serve
+from repro.obs import as_tracer
 
 
 def main():
@@ -18,13 +19,19 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="export a Chrome-trace span timeline of the run")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch)
     print(f"serving {cfg.name} ({cfg.family}), batch={args.batch}, "
           f"prompt={args.prompt_len}, gen={args.gen}")
+    tracer = as_tracer(bool(args.trace))
     toks, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                        gen=args.gen)
+                        gen=args.gen, tracer=tracer)
+    if args.trace:
+        trace = tracer.export_chrome_trace(args.trace)
+        print(f"trace: {len(trace['traceEvents'])} events -> {args.trace}")
     if stats.get("prefill_only"):
         print(f"prefill: {stats['prefill_s']*1e3:.1f} ms | "
               f"{stats['tokens_per_s']:.1f} prompt tok/s (prefill-only)")

@@ -35,6 +35,7 @@ from repro.core.dispatch import LoweringReport
 from repro.core.instr import TMProgram
 from repro.core.schedule import CycleParams
 from repro.core.tm_primitive import tag_tm_ops
+from repro.obs.tracer import NULL_TRACER
 from repro.compiler.allocate import ScratchPlan, allocate
 from repro.compiler.ir import TMGraph, eval_tpu_node, eval_tpu_node_exact
 from repro.compiler.partition import PartitionReport, Phase, partition
@@ -165,11 +166,30 @@ class CompiledTMProgram:
             env[name] = val
         return env
 
+    def _phase_hbm_bytes(self, phase: Phase) -> int:
+        """Data-movement estimate of one phase execution: every external
+        read plus every downstream-visible write through HBM once.
+        Memoized per phase — it sits on the traced hot path."""
+        cache = self.__dict__.setdefault("_hbm_bytes_cache", {})
+        total = cache.get(phase.index)
+        if total is None:
+            import numpy as np
+            total = 0
+            for name in tuple(phase.reads) + tuple(phase.writes):
+                buf = self.graph.buffers[name]
+                n = int(np.dtype(buf.dtype).itemsize)
+                for d in buf.shape:
+                    n *= int(d)
+                total += n
+            cache[phase.index] = total
+        return total
+
     def run_phase(self, phase: Phase, env: dict[str, Any], *,
                   backend: str = "fused",
                   interpret: bool = True,
                   fuse_chains: bool = False,
                   exact: bool = False,
+                  tracer=None,
                   ) -> LoweringReport | TPUPhaseReport:
         """Execute one partition phase against ``env`` (mutated in place).
 
@@ -187,7 +207,47 @@ class CompiledTMProgram:
         (:func:`~repro.compiler.ir.eval_tpu_node_exact`), matching eager
         dispatch granularity so XLA's cross-op algebraic rewrites (the
         ``rsqrt(x/c + e)`` class) cannot perturb the rounding.  TM phases are
-        data movement and are bit-exact in every mode."""
+        data movement and are bit-exact in every mode.
+
+        ``tracer`` (a :class:`repro.obs.Tracer`) wraps the execution in a
+        ``phase/{index}/{kind}`` span; at ``Tracer(detail="instr")`` the
+        span also carries the phase's launch/segment accounting and the
+        ``tmu/launches``, ``tmu/segments``, ``tpu/xla_computations`` and
+        ``hbm/bytes`` counters accumulate (evaluating that payload per
+        phase is NOT free, which is why the default "phase" detail records
+        the bare interval); the default no-op tracer costs one attribute
+        check."""
+        tracer = NULL_TRACER if tracer is None else tracer
+        if not tracer.enabled:
+            return self._exec_phase(phase, env, backend=backend,
+                                    interpret=interpret,
+                                    fuse_chains=fuse_chains, exact=exact)
+        with tracer.span(f"phase/{phase.index}/{phase.kind}",
+                         backend=backend) as sp:
+            rep = self._exec_phase(phase, env, backend=backend,
+                                   interpret=interpret,
+                                   fuse_chains=fuse_chains, exact=exact,
+                                   tracer=tracer)
+            if tracer.detail == "instr":
+                if isinstance(rep, TPUPhaseReport):
+                    sp.set(n_eqns=rep.n_eqns, jitted=rep.jitted,
+                           xla_computations=rep.xla_computations)
+                    tracer.count("tpu/xla_computations",
+                                 rep.xla_computations)
+                else:
+                    launches = rep.launch_count()
+                    segments = sum(r.segments or 0 for r in rep.records)
+                    sp.set(instrs=rep.instr_count(), launches=launches,
+                           segments=segments, chains=rep.chain_count())
+                    tracer.count("tmu/launches", launches)
+                    tracer.count("tmu/segments", segments)
+                tracer.count("hbm/bytes", self._phase_hbm_bytes(phase))
+        return rep
+
+    def _exec_phase(self, phase: Phase, env: dict[str, Any], *,
+                    backend: str, interpret: bool, fuse_chains: bool,
+                    exact: bool, tracer=NULL_TRACER,
+                    ) -> LoweringReport | TPUPhaseReport:
         if phase.kind == "tpu":
             if exact:
                 for i in phase.node_indices:
@@ -227,7 +287,8 @@ class CompiledTMProgram:
                 phase_index=phase.index, n_eqns=len(phase.node_indices),
                 jitted=False, xla_computations=len(phase.node_indices))
         ex = TMExecutor(backend=backend, interpret=interpret,
-                        params=self.params, fuse_chains=fuse_chains)
+                        params=self.params, fuse_chains=fuse_chains,
+                        tracer=tracer)
         bufs = {n: env[n] for n in phase.program.inputs}
         out, lowering, _ = ex.run(phase.program, bufs)
         env.update(out)
@@ -240,7 +301,7 @@ class CompiledTMProgram:
     def run_async(self, env: dict[str, Any], *, runtime,
                   backend: str = "fused", interpret: bool = True,
                   fuse_chains: bool = False, exact: bool = False,
-                  label: str = ""):
+                  label: str = "", tracer=None):
         """Submit every phase of the DAG onto ``runtime``'s engine streams.
 
         Each phase becomes one stream task whose event dependencies are its
@@ -259,7 +320,8 @@ class CompiledTMProgram:
             def task(ph=phase):
                 rep = self.run_phase(ph, env, backend=backend,
                                      interpret=interpret,
-                                     fuse_chains=fuse_chains, exact=exact)
+                                     fuse_chains=fuse_chains, exact=exact,
+                                     tracer=tracer)
                 return [env[n] for n in ph.writes], rep
             events.append(runtime.submit(
                 phase.engine, task, deps=[events[d] for d in phase.deps],
@@ -268,7 +330,7 @@ class CompiledTMProgram:
 
     def run(self, *args, backend: str = "fused", interpret: bool = True,
             fuse_chains: bool = False, exact: bool = False, runtime=None,
-            ) -> tuple[Any, list[LoweringReport]]:
+            tracer=None) -> tuple[Any, list[LoweringReport]]:
         """Execute and return ``(outputs, per-TM-phase lowering reports)``.
 
         With ``runtime`` (a :class:`~repro.runtime.streams.StreamRuntime`)
@@ -283,7 +345,8 @@ class CompiledTMProgram:
         if runtime is not None:
             events = self.run_async(env, runtime=runtime, backend=backend,
                                     interpret=interpret,
-                                    fuse_chains=fuse_chains, exact=exact)
+                                    fuse_chains=fuse_chains, exact=exact,
+                                    tracer=tracer)
             for ev in events:   # sink sync: deps complete transitively
                 reports.append(ev.wait()[1])
         else:
@@ -291,37 +354,53 @@ class CompiledTMProgram:
                 reports.append(self.run_phase(phase, env, backend=backend,
                                               interpret=interpret,
                                               fuse_chains=fuse_chains,
-                                              exact=exact))
+                                              exact=exact, tracer=tracer))
         lowerings = [r for r in reports if isinstance(r, LoweringReport)]
         return self.outputs_from(env), lowerings
 
     def __call__(self, *args, backend: str = "fused",
                  interpret: bool = True, fuse_chains: bool = False,
-                 exact: bool = False, runtime=None):
+                 exact: bool = False, runtime=None, tracer=None):
         out, lowerings = self.run(*args, backend=backend, interpret=interpret,
                                   fuse_chains=fuse_chains, exact=exact,
-                                  runtime=runtime)
+                                  runtime=runtime, tracer=tracer)
         self.last_lowering = lowerings
         return out
 
 
-def tm_compile(fn, *example_args,
-               params: CycleParams | None = None) -> CompiledTMProgram:
+def tm_compile(fn, *example_args, params: CycleParams | None = None,
+               tracer=None) -> CompiledTMProgram:
     """Trace ``fn`` at ``example_args`` and lower it through the pipeline:
 
     jaxpr -> TM IR (trace) -> passes (map composition, copy elim, epilogue
     sink, RME legalization) -> TPU/TMU phase DAG + pipeline schedule ->
     scratch allocation.
+
+    ``tracer`` (a :class:`repro.obs.Tracer`) records each stage as a nested
+    span under ``compile`` with the stage's report summary attached.
     """
+    tracer = NULL_TRACER if tracer is None else tracer
     flat_in, in_tree = jax.tree_util.tree_flatten(example_args)
-    with tag_tm_ops():
-        closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
-            *example_args)
-    out_tree = jax.tree_util.tree_structure(out_shape)
-    graph = graph_from_jaxpr(closed)
-    pass_report = run_pipeline(graph)
-    part = partition(graph, params)
-    scratch = allocate(graph, part, params)
+    with tracer.span("compile") as root:
+        with tracer.span("compile/trace") as sp:
+            with tag_tm_ops():
+                closed, out_shape = jax.make_jaxpr(fn, return_shape=True)(
+                    *example_args)
+            out_tree = jax.tree_util.tree_structure(out_shape)
+            graph = graph_from_jaxpr(closed)
+            sp.set(summary=graph.summary())
+        with tracer.span("compile/passes") as sp:
+            pass_report = run_pipeline(graph)
+            sp.set(summary=pass_report.summary())
+        with tracer.span("compile/partition") as sp:
+            part = partition(graph, params)
+            sp.set(summary=part.summary(), phases=len(part.phases),
+                   dag_edges=part.dag_edges)
+        with tracer.span("compile/allocate") as sp:
+            scratch = allocate(graph, part, params)
+            sp.set(summary=scratch.summary())
+        root.set(phases="".join("T" if p.kind == "tpu" else "M"
+                                for p in part.phases))
     return CompiledTMProgram(graph=graph, pass_report=pass_report,
                              partition_report=part, scratch_plan=scratch,
                              in_tree=in_tree, out_tree=out_tree,

@@ -63,6 +63,11 @@ class TMExecutor:
     # instructions.  Chains the chain registry declines fall back to
     # per-instruction lowering, bit-exact either way.
     fuse_chains: bool = False
+    # duck-typed repro.obs Tracer: per-instruction / per-chain spans on the
+    # calling thread's track, recorded only at Tracer(detail="instr")
+    # (None or the no-op tracer = tracing off; the hot path pays one
+    # attribute check per instruction)
+    tracer: object = None
     last_report: FusionReport | None = None
     last_lowering: LoweringReport | None = None
 
@@ -98,15 +103,32 @@ class TMExecutor:
         chain_at: dict[int, ForwardChain] = {}
         if self.backend == "pallas" and self.fuse_chains:
             chain_at = {c.instrs[0]: c for c in forwarding_chains(prog)}
+        tr = self.tracer
+        # instruction/chain spans only at Tracer(detail="instr") — at the
+        # default "phase" detail a traced serving run stays lock-cheap
+        traced = (tr is not None and tr.enabled
+                  and getattr(tr, "detail", "phase") == "instr")
         i = 0
         while i < len(prog.instrs):  # Fetch
             chain = chain_at.get(i)
             if chain is not None:
-                self._run_chain(chain, prog, bufs, batch_dims, lowering)
+                if traced:
+                    with tr.span(f"chain/{prog.instrs[chain.instrs[-1]].dst}",
+                                 instrs=len(chain.instrs)):
+                        self._run_chain(chain, prog, bufs, batch_dims,
+                                        lowering)
+                else:
+                    self._run_chain(chain, prog, bufs, batch_dims, lowering)
                 i = chain.instrs[-1] + 1
                 continue
             ins = prog.instrs[i]
-            bufs[ins.dst] = self._dispatch(ins, bufs, batch_dims, lowering)
+            if traced:
+                with tr.span(f"instr/{ins.opcode.value}/{ins.dst}"):
+                    bufs[ins.dst] = self._dispatch(ins, bufs, batch_dims,
+                                                   lowering)
+            else:
+                bufs[ins.dst] = self._dispatch(ins, bufs, batch_dims,
+                                               lowering)
             i += 1
         missing = [o for o in prog.outputs if o not in bufs]
         if missing:

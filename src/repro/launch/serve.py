@@ -21,10 +21,13 @@ import jax.numpy as jnp
 
 from repro.configs.registry import get_config, get_smoke, list_archs
 from repro.models.transformer import init_caches, init_lm, init_states
+from repro.obs.tracer import as_tracer
 from repro.runtime.step import make_decode_step, make_prefill_step
 
 
-def serve(cfg, *, batch=4, prompt_len=32, gen=32, seed=0, log=print):
+def serve(cfg, *, batch=4, prompt_len=32, gen=32, seed=0, log=print,
+          tracer=None):
+    tracer = as_tracer(tracer)
     params, _ = init_lm(cfg, jax.random.PRNGKey(seed))
     max_len = prompt_len + gen
     caches = init_caches(cfg, batch, max_len,
@@ -39,9 +42,11 @@ def serve(cfg, *, batch=4, prompt_len=32, gen=32, seed=0, log=print):
                      static_argnames=())
 
     t0 = time.monotonic()
-    lg, caches, states = prefill(params, prompts, caches, states)
-    tok = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    jax.block_until_ready(tok)
+    with tracer.span(f"prefill@{batch}x{prompt_len}", track="lm",
+                     batch=batch, prompt_len=prompt_len):
+        lg, caches, states = prefill(params, prompts, caches, states)
+        tok = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        jax.block_until_ready(tok)
     t_prefill = time.monotonic() - t0
 
     if gen <= 0:
@@ -57,8 +62,15 @@ def serve(cfg, *, batch=4, prompt_len=32, gen=32, seed=0, log=print):
 
     out = [tok]
     t0 = time.monotonic()
+    traced = tracer.enabled
     for t in range(prompt_len, prompt_len + gen - 1):
-        tok, lg, caches, states = decode(params, tok, caches, states, t)
+        if traced:
+            with tracer.span(f"decode/step@p{t}", track="lm"):
+                tok, lg, caches, states = decode(params, tok, caches,
+                                                 states, t)
+                jax.block_until_ready(tok)
+        else:
+            tok, lg, caches, states = decode(params, tok, caches, states, t)
         out.append(tok)
     jax.block_until_ready(tok)
     t_decode = time.monotonic() - t0
@@ -71,7 +83,7 @@ def serve(cfg, *, batch=4, prompt_len=32, gen=32, seed=0, log=print):
 
 
 def serve_cnn(*, n_requests=24, max_batch=4, backend="fused", seed=0,
-              log=print):
+              log=print, tracer=None):
     """Drive the paper's CNN demo blocks through :class:`TMServer`.
 
     Mixed traffic over the tm_compile demo fragments (``superres_tail`` /
@@ -118,7 +130,7 @@ def serve_cnn(*, n_requests=24, max_batch=4, backend="fused", seed=0,
 
     t0 = time.monotonic()
     with TMServer(ServerConfig(max_batch=max_batch, backend=backend,
-                               batch_timeout_s=0.01)) as srv:
+                               batch_timeout_s=0.01, trace=tracer)) as srv:
         futs = [(fn, args, srv.submit(fn, *args, fn_key=key))
                 for key, fn, args in workload]
         for fn, args, fut in futs:
@@ -152,17 +164,25 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--backend", default="fused",
                     choices=("reference", "fused", "pallas"))
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record a span timeline and export Chrome-trace "
+                         "JSON (open at https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
+    tracer = as_tracer(bool(args.trace))
     if args.cnn:
         serve_cnn(n_requests=args.requests, max_batch=args.max_batch,
-                  backend=args.backend)
-        return
-    if args.arch is None:
-        ap.error("--arch is required unless --cnn is given")
-    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
-    toks, stats = serve(cfg, batch=args.batch, prompt_len=args.prompt_len,
-                        gen=args.gen)
-    print("generated token ids (first row):", toks[0][:16].tolist())
+                  backend=args.backend, tracer=tracer)
+    else:
+        if args.arch is None:
+            ap.error("--arch is required unless --cnn is given")
+        cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+        toks, stats = serve(cfg, batch=args.batch,
+                            prompt_len=args.prompt_len, gen=args.gen,
+                            tracer=tracer)
+        print("generated token ids (first row):", toks[0][:16].tolist())
+    if args.trace:
+        trace = tracer.export_chrome_trace(args.trace)
+        print(f"trace: {len(trace['traceEvents'])} events -> {args.trace}")
 
 
 if __name__ == "__main__":

@@ -148,9 +148,13 @@ class Stream:
     """
 
     def __init__(self, engine: str,
-                 observer: Callable[[StreamEvent], None] | None = None):
+                 observer: Callable[[StreamEvent], None] | None = None,
+                 tracer=None):
         self.engine = engine
         self.observer = observer
+        # duck-typed repro.obs Tracer (kept import-free: obs.report imports
+        # this module's interval helpers); None means tracing off
+        self.tracer = tracer
         self._queue: deque[_Task] = deque()
         self._cond = threading.Condition()
         self._closed = False
@@ -244,6 +248,14 @@ class Stream:
             except BaseException as e:  # noqa: BLE001 — delivered via event
                 event.error = e
             event.t_end = time.monotonic()
+            if self.tracer is not None and self.tracer.enabled:
+                # the realized busy interval, on the ENGINE's track — the
+                # exact timestamps the serving stats ingest, so the trace
+                # and the overlap accounting share one source of truth
+                self.tracer.add_span(
+                    event.label or "task", self.engine,
+                    event.t_start, event.t_end,
+                    ok=event.error is None)
         event._complete()
         if self.observer is not None:
             try:
@@ -278,13 +290,15 @@ class StreamRuntime:
 
     def __init__(self, engines: Iterable[str] = ENGINE_KINDS,
                  observer: Callable[[StreamEvent], None] | None = None,
-                 keep_events: int = 4096):
+                 keep_events: int = 4096, tracer=None):
         self._observers: list[Callable[[StreamEvent], None]] = \
             [observer] if observer is not None else []
         self._lock = threading.Lock()
+        self.tracer = tracer
         self.events: deque[EventRecord] = deque(maxlen=keep_events)
         self.streams: dict[str, Stream] = {
-            kind: Stream(kind, observer=self._on_event) for kind in engines}
+            kind: Stream(kind, observer=self._on_event, tracer=self.tracer)
+            for kind in engines}
 
     def add_observer(self, cb: Callable[[StreamEvent], None]) -> None:
         with self._lock:

@@ -16,6 +16,10 @@ program; this subsystem applies the same scheme at *request* granularity:
 * :class:`ServerStats` (stats.py) — throughput/latency accounting + the
   measured-from-event-timestamps overlap ratio next to the cycle model's
   prediction.
+
+Observability: ``ServerConfig(trace=True)`` (or ``trace=<repro.obs.Tracer>``)
+threads one span timeline through admission, compile, phase execution and
+the engine streams — see :mod:`repro.obs` and ``docs/observability.md``.
 """
 
 from repro.serving.batcher import (BucketKey, Request, bucket_size, coalesce,
@@ -26,7 +30,7 @@ from repro.serving.pipeline import PipelineJob, RequestPipeline
 from repro.serving.server import (ServerConfig, TMServer, predict_cycles,
                                   predict_overlap, select_chain_fusion,
                                   select_cycle_params)
-from repro.serving.stats import ServerStats
+from repro.serving.stats import ServerStats, latency_percentiles
 
 __all__ = [
     "BucketKey", "Request", "bucket_size", "coalesce", "split",
@@ -35,5 +39,5 @@ __all__ = [
     "PipelineJob", "RequestPipeline",
     "ServerConfig", "TMServer", "predict_cycles", "predict_overlap",
     "select_chain_fusion", "select_cycle_params",
-    "ServerStats",
+    "ServerStats", "latency_percentiles",
 ]

@@ -21,6 +21,7 @@ cache without a resident server-side state store.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any
 
 import jax
@@ -29,6 +30,7 @@ import jax.numpy as jnp
 from repro.models.layers import embed, rmsnorm, rope_freqs, unembed
 from repro.models.transformer import ModelConfig, _dense_block, init_lm
 from repro.serving.server import ServerConfig, TMServer
+from repro.serving.stats import latency_percentiles
 
 
 def make_layer_step(cfg: ModelConfig, params, *, position: int):
@@ -65,6 +67,18 @@ class DecodeStats:
     prefill_steps: int = 0
     decode_steps: int = 0
     positions_compiled: int = 0
+    prefill_latency_s: list = dataclasses.field(default_factory=list)
+    step_latency_s: list = dataclasses.field(default_factory=list)
+
+    def snapshot(self) -> dict:
+        """Counts + per-decode-step / prefill latency percentiles."""
+        return {
+            "prefill_steps": self.prefill_steps,
+            "decode_steps": self.decode_steps,
+            "positions_compiled": self.positions_compiled,
+            **latency_percentiles(self.prefill_latency_s, "prefill_latency"),
+            **latency_percentiles(self.step_latency_s, "step_latency"),
+        }
 
 
 class DecodeSession:
@@ -144,9 +158,14 @@ class DecodeSession:
             raise ValueError(f"prompt length {S} exceeds max_len "
                              f"{self.max_len}")
         ck, cv = self.init_cache(B)
-        logits, ck, cv = self.server(self.step_fn(0), prompts, ck, cv,
-                                     fn_key=self._fn_key(0, S))
+        t0 = time.monotonic()
+        with self.server.tracer.span(f"decode/prefill@s{S}",
+                                     track="decode") as sp:
+            logits, ck, cv = self.server(self.step_fn(0), prompts, ck, cv,
+                                         fn_key=self._fn_key(0, S))
+            sp.set(batch=B, seq_len=S)
         self.stats.prefill_steps += 1
+        self.stats.prefill_latency_s.append(time.monotonic() - t0)
         return logits, (ck, cv)
 
     def decode(self, tokens: jnp.ndarray, cache, position: int):
@@ -158,9 +177,14 @@ class DecodeSession:
         if not 0 <= position < self.max_len:
             raise ValueError(f"position {position} outside [0, {self.max_len})")
         ck, cv = cache
-        logits, ck, cv = self.server(self.step_fn(position), tokens, ck, cv,
-                                     fn_key=self._fn_key(position, 1))
+        t0 = time.monotonic()
+        with self.server.tracer.span(f"decode/step@p{position}",
+                                     track="decode"):
+            logits, ck, cv = self.server(self.step_fn(position), tokens,
+                                         ck, cv,
+                                         fn_key=self._fn_key(position, 1))
         self.stats.decode_steps += 1
+        self.stats.step_latency_s.append(time.monotonic() - t0)
         return logits, (ck, cv)
 
     def generate(self, prompts: jnp.ndarray, n_steps: int):

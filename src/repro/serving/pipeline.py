@@ -46,17 +46,25 @@ class PipelineJob:
     step *i* must wait for (all < i); ``deps=None`` means the sequential
     chain ``i-1 -> i``.  ``on_done(error)`` fires exactly once, off the
     admission lock, with None on success or the first failing step's
-    exception."""
+    exception.  ``step_labels`` overrides the per-step event label
+    (default ``{label}#{i}:{kind}``) — the server uses it to name stream
+    events ``phase/{index}/{kind}`` so the engine-lane trace spans double
+    as the phase spans."""
 
     steps: list[tuple[str, Callable[[], object]]]
     on_done: Callable[[BaseException | None], None]
     label: str = ""
     deps: Sequence[Sequence[int]] | None = None
+    step_labels: Sequence[str] | None = None
 
     def __post_init__(self):
         for kind, _ in self.steps:
             if kind not in ENGINE_KINDS:
                 raise ValueError(f"unknown engine kind {kind!r}")
+        if self.step_labels is not None and \
+                len(self.step_labels) != len(self.steps):
+            raise ValueError(f"step_labels length {len(self.step_labels)} "
+                             f"!= steps length {len(self.steps)}")
         if self.deps is not None:
             if len(self.deps) != len(self.steps):
                 raise ValueError(f"deps length {len(self.deps)} != "
@@ -73,11 +81,12 @@ class RequestPipeline:
     TMU/TPU streams of one :class:`~repro.runtime.streams.StreamRuntime`."""
 
     def __init__(self, stats=None, depth: int = 2,
-                 runtime: StreamRuntime | None = None):
+                 runtime: StreamRuntime | None = None, tracer=None):
         if depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {depth}")
         self.depth = depth
         self.stats = stats
+        self.tracer = tracer      # handed to a self-owned StreamRuntime
         self._ext_runtime = runtime       # caller-owned: never closed here
         self.runtime: StreamRuntime | None = None
         self._lock = threading.Lock()
@@ -97,7 +106,8 @@ class RequestPipeline:
                 self._ext_runtime.add_observer(self._observe)
                 self.runtime = self._ext_runtime
             else:
-                self.runtime = StreamRuntime(observer=self._observe)
+                self.runtime = StreamRuntime(observer=self._observe,
+                                             tracer=self.tracer)
             self._stop = False
 
     def stop(self) -> None:
@@ -131,6 +141,9 @@ class RequestPipeline:
                 raise RuntimeError("pipeline is stopped")
             self._backlog.append(job)
             to_launch, runtime = self._admit_locked(), self.runtime
+            depth_now = self._in_flight + len(self._backlog)
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.counter("pipeline/depth", depth_now, track="server")
         for j in to_launch:   # outside the lock: completion callbacks of an
             self._launch(j, runtime)  # instant job re-enter the admission path
 
@@ -159,9 +172,11 @@ class RequestPipeline:
         for i, (kind, thunk) in enumerate(job.steps):
             dep_idx = job.deps[i] if job.deps is not None else \
                 ((i - 1,) if i else ())
+            label = (job.step_labels[i] if job.step_labels is not None
+                     else f"{job.label}#{i}:{kind}")
             events.append(runtime.submit(
                 kind, thunk, deps=[events[d] for d in dep_idx],
-                label=f"{job.label}#{i}:{kind}"))
+                label=label))
 
         remaining = [len(events)]
         counter_lock = threading.Lock()
@@ -194,6 +209,9 @@ class RequestPipeline:
             # keep admitting during stop(): it drains the backlog, it does
             # not abandon it (submissions are what _stop forbids)
             to_launch, runtime = self._admit_locked(), self.runtime
+            depth_now = self._in_flight + len(self._backlog)
             self._drained.notify_all()
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.counter("pipeline/depth", depth_now, track="server")
         for j in to_launch:
             self._launch(j, runtime)

@@ -40,6 +40,7 @@ from repro.compiler.api import CompiledTMProgram, tm_compile
 from repro.compiler.partition import partition
 from repro.core.executor import BACKENDS
 from repro.core.schedule import CycleParams
+from repro.obs.tracer import as_tracer
 from repro.serving.batcher import (BucketQueue, Request, bucket_size,
                                    coalesce, split)
 from repro.serving.cache import (CacheEntry, CacheKey, CompileCache,
@@ -73,6 +74,11 @@ class ServerConfig:
     # per-instruction execution through the cycle model (+ a per-launch
     # charge) and pin the winner on the entry
     select_chaining: bool = True
+    # observability: None/False = off (the no-op tracer — one attribute
+    # check on the hot path), True = the server creates a repro.obs.Tracer
+    # (exposed as ``TMServer.tracer``), or pass a Tracer to share one
+    # timeline across servers/sessions
+    trace: Any = None
 
     def __post_init__(self):
         for b in (self.backend,) + self.backend_candidates:
@@ -202,10 +208,12 @@ class TMServer:
 
     def __init__(self, config: ServerConfig | None = None):
         self.config = config or ServerConfig()
+        self.tracer = as_tracer(self.config.trace)
         self.stats = ServerStats()
         self.cache = CompileCache(capacity=self.config.cache_capacity)
         self.pipeline = RequestPipeline(stats=self.stats,
-                                        depth=self.config.pipeline_depth)
+                                        depth=self.config.pipeline_depth,
+                                        tracer=self.tracer)
         self._queue = BucketQueue()
         self._batcher: threading.Thread | None = None
         self._admit_pool: concurrent.futures.ThreadPoolExecutor | None = None
@@ -263,6 +271,13 @@ class TMServer:
             self._release(1)
             raise RuntimeError("server is not running (use `with TMServer()`)")
         self.stats.record_submit()
+        if self.tracer.enabled:
+            self.tracer.instant("request/submit", track="server",
+                                fn_key=str(req.fn_key))
+            # racy unlocked read — a monitoring sample must not contend
+            # with the batcher on the admission lock
+            self.tracer.counter("server/outstanding", self._outstanding,
+                                track="server")
         return req.future
 
     def __call__(self, fn: Callable, *args, fn_key: str | None = None):
@@ -333,13 +348,20 @@ class TMServer:
         n = len(batch)
         try:
             size = bucket_size(n, cfg.max_batch)
-            stacked, pad = coalesce(batch, size)
-            self.stats.record_batch(n, pad)
-            key = CacheKey.for_call(batch[0].fn, stacked,
-                                    backend=cfg.backend, params=None,
-                                    fn_key=batch[0].fn_key)
-            entry, hit = self.cache.get_or_compile(
-                key, lambda: self._build_entry(key, batch[0].fn, stacked))
+            # default track: the admit-pool thread, so concurrent
+            # admissions render on their own lanes
+            with self.tracer.span(f"admit/{batch[0].fn_key}x{size}") as sp:
+                stacked, pad = coalesce(batch, size)
+                self.stats.record_batch(n, pad)
+                key = CacheKey.for_call(batch[0].fn, stacked,
+                                        backend=cfg.backend, params=None,
+                                        fn_key=batch[0].fn_key)
+                entry, hit = self.cache.get_or_compile(
+                    key, lambda: self._build_entry(key, batch[0].fn, stacked))
+                sp.set(requests=n, pad_rows=pad, cache_hit=hit)
+            if self.tracer.enabled:
+                self.tracer.count("cache/hits" if hit else "cache/misses",
+                                  track="server")
         except BaseException as e:  # noqa: BLE001 — delivered to futures
             self._fail_batch(batch, e, cold=True)
             return
@@ -354,12 +376,24 @@ class TMServer:
         # in-edges — independent phases of this batch overlap, and the
         # streams interleave this batch's phases with other admitted batches
         phases = compiled.partition_report.phases
+        # at the default "phase" trace detail the stream event's span IS the
+        # phase span: the steps are labelled ``phase/{index}/{kind}`` so the
+        # engine-lane busy interval (recorded once, after the event's t_end
+        # is stamped) doubles as the phase timing, and run_phase itself runs
+        # untraced — one record per phase is what keeps tracing inside the
+        # overhead gate.  "instr" detail flips both: run_phase traces the
+        # rich per-instruction spans on the worker thread, and the stream
+        # labels keep the batch identity instead.
+        detail = self.tracer.detail if self.tracer.enabled else None
         steps = [(phase.engine,
                   lambda ph=phase: self._run_phase(compiled, ph, env,
                                                    entry.backend,
-                                                   entry.fuse_chains))
+                                                   entry.fuse_chains,
+                                                   traced=detail == "instr"))
                  for phase in phases]
         deps = [phase.deps for phase in phases]
+        step_labels = ([f"phase/{p.index}/{p.kind}" for p in phases]
+                       if detail == "phase" else None)
 
         def on_done(err: BaseException | None) -> None:
             t_end = time.monotonic()
@@ -378,21 +412,34 @@ class TMServer:
                 for r, res in zip(batch, parts):
                     r.future.set_result(res)
                     self.stats.record_done(t_end - r.t_submit, cold=not hit)
+            if self.tracer.enabled:
+                # one span per request on the requests track: submit ->
+                # respond, the client-visible latency
+                for r in batch:
+                    self.tracer.add_span(
+                        f"request/{r.fn_key}", "requests",
+                        r.t_submit, t_end, overlap_ok=True,
+                        cold=not hit, ok=err is None)
             self._release(n)
 
         try:
             self.pipeline.submit(PipelineJob(
                 steps=steps, deps=deps, on_done=on_done,
-                label=f"{batch[0].fn_key}x{size}"))
+                label=f"{batch[0].fn_key}x{size}",
+                step_labels=step_labels))
         except BaseException as e:  # noqa: BLE001 — shutdown race
             self._fail_batch(batch, e, cold=not hit)
 
     def _run_phase(self, compiled: CompiledTMProgram, phase, env: dict,
-                   backend: str, fuse_chains: bool = False) -> list:
+                   backend: str, fuse_chains: bool = False,
+                   traced: bool = False) -> list:
+        # ``traced`` only at Tracer(detail="instr"): the default phase-level
+        # timing comes from the stream event's span (see _process_batch)
         compiled.run_phase(phase, env, backend=backend,
                            interpret=self.config.interpret,
                            fuse_chains=fuse_chains,
-                           exact=self.config.exact)
+                           exact=self.config.exact,
+                           tracer=self.tracer if traced else None)
         # return the written buffers: the stream resolves them before
         # stamping the event, so busy time is realized compute, not async
         # dispatch latency
@@ -416,7 +463,8 @@ class TMServer:
                      stacked_args: tuple) -> CacheEntry:
         cfg = self.config
         t0 = time.perf_counter()
-        compiled = tm_compile(jax.vmap(fn), *stacked_args)
+        compiled = tm_compile(jax.vmap(fn), *stacked_args,
+                              tracer=self.tracer)
         selection: dict = {}
         if cfg.select_config:
             params, part, rows = select_cycle_params(

@@ -25,17 +25,36 @@ import dataclasses
 import threading
 from collections import deque
 
-# intervals kept per engine for cross-engine intersection; incoming events
-# arrive in near-time order, so anything older than this window cannot
-# overlap a new interval in practice (each engine's stream is serial)
+# default intervals kept per engine for cross-engine intersection; incoming
+# events arrive in near-time order, so anything older than this window cannot
+# overlap a new interval in practice (each engine's stream is serial).
+# ``ServerStats(recent_intervals=...)`` overrides it; ``dropped_intervals``
+# counts window truncations so long soaks can see the measurement degrade.
 _RECENT_INTERVALS = 512
 
 
 def _percentile(sorted_xs: list[float], q: float) -> float:
+    """Linear-interpolated quantile of an ascending-sorted sample.
+
+    (Nearest-rank rounding made p99 equal the max for small samples and
+    biased mid quantiles; interpolation matches ``numpy.percentile``'s
+    default.)"""
     if not sorted_xs:
         return 0.0
-    i = min(len(sorted_xs) - 1, int(q * (len(sorted_xs) - 1) + 0.5))
-    return sorted_xs[i]
+    pos = q * (len(sorted_xs) - 1)
+    lo = int(pos)
+    hi = min(lo + 1, len(sorted_xs) - 1)
+    frac = pos - lo
+    return sorted_xs[lo] * (1.0 - frac) + sorted_xs[hi] * frac
+
+
+def latency_percentiles(latencies_s: list[float], prefix: str) -> dict:
+    """p50/p95/p99 of a latency sample, keyed ``{prefix}_p{q}_s`` — the
+    shared report shape for request and per-decode-step latencies."""
+    xs = sorted(latencies_s)
+    return {f"{prefix}_p50_s": _percentile(xs, 0.50),
+            f"{prefix}_p95_s": _percentile(xs, 0.95),
+            f"{prefix}_p99_s": _percentile(xs, 0.99)}
 
 
 @dataclasses.dataclass
@@ -53,6 +72,12 @@ class ServerStats:
     warm_latency_s: list = dataclasses.field(default_factory=list)
 
     predicted_overlap: list = dataclasses.field(default_factory=list)
+
+    # per-engine interval window for the cross-engine intersection; when it
+    # truncates (an interval falls off before a counterpart engine interval
+    # could intersect it) ``dropped_intervals`` records the loss
+    recent_intervals: int = _RECENT_INTERVALS
+    dropped_intervals: int = 0
 
     def __post_init__(self):
         self._lock = threading.Lock()
@@ -114,9 +139,15 @@ class ServerStats:
                         break
                     self._both_busy += max(
                         0.0, min(a1, t_end) - max(a0, t_start))
-            self._recent.setdefault(
-                engine, deque(maxlen=_RECENT_INTERVALS)).append(
-                    (t_start, t_end))
+            recent = self._recent.get(engine)
+            if recent is None:
+                recent = self._recent[engine] = deque(
+                    maxlen=max(1, int(self.recent_intervals)))
+            if len(recent) == recent.maxlen:
+                # the window truncates: an interval leaves before a late
+                # counterpart could intersect it — overlap may under-report
+                self.dropped_intervals += 1
+            recent.append((t_start, t_end))
             if self._span_start is None or t_start < self._span_start:
                 self._span_start = t_start
             if self._span_end is None or t_end > self._span_end:
@@ -139,6 +170,7 @@ class ServerStats:
             "overlap_ratio": (self._both_busy / any_busy
                               if any_busy > 0 else 0.0),
             "pipeline_span_s": span,
+            "dropped_intervals": self.dropped_intervals,
         }
 
     def overlap_ratio(self) -> float:
@@ -170,8 +202,11 @@ class ServerStats:
                 "mean_batch_size": (self.batched_requests / self.batches
                                     if self.batches else 0.0),
                 "cold_latency_p50_s": _percentile(cold, 0.5),
+                "cold_latency_p95_s": _percentile(cold, 0.95),
+                "cold_latency_p99_s": _percentile(cold, 0.99),
                 "warm_latency_p50_s": _percentile(warm, 0.5),
                 "warm_latency_p95_s": _percentile(warm, 0.95),
+                "warm_latency_p99_s": _percentile(warm, 0.99),
                 "predicted_overlap": pred,
             }
             snap.update(self._measure_locked())
