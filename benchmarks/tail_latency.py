@@ -1,0 +1,297 @@
+"""Tail-latency benchmark — continuous scheduler vs the FIFO micro-batcher.
+
+The continuous scheduler's acceptance measurement: the SAME seeded open-loop
+arrival process (:mod:`repro.sched.loadgen` — Poisson arrivals, mixed sizes,
+mixed priority classes, a deadline-carrying slice) is replayed against two
+servers that differ only in admission policy —
+
+* **fifo** — the PR-3 power-of-two micro-batcher at its documented operating
+  point (5 ms straggler window): a request's group is bound when the batcher
+  pops its bucket, and every partial bucket pays the hold;
+* **continuous** — :class:`repro.sched.ContinuousScheduler` with a 1 ms
+  partial-group hold: groups are re-formed from the live queue each time a
+  slot frees (a full group never waits), priorities order dispatch, and
+  deadline-risk requests may preempt at phase boundaries.
+
+Both servers are pre-warmed over every (size, bucket-height) shape class, so
+the measured window contains no demand compiles; per-request latency is
+stamped by future done-callbacks (end-to-end) and by the server's own
+admit→first-phase-start series (queue delay).
+
+Emits ``BENCH_tail.json``.  Acceptance gates (CI):
+
+* p99 end-to-end latency under the mixed open-loop load must be >= 1.2x
+  BETTER (lower) with the continuous scheduler than with FIFO — best round
+  per scheduler over alternating rounds (the ``trace_gate`` discipline);
+* scheduler overhead on warm *uniform* traffic (full-group bursts, where
+  rolling admission can add nothing) within 5% of FIFO, best wall vs best
+  wall;
+* served outputs bit-exact against the eager oracle on both paths.
+
+    PYTHONPATH=src python benchmarks/tail_latency.py
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import statistics
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.sched import LoadSpec, run_load
+from repro.serving import ServerConfig, TMServer
+from repro.serving.stats import latency_percentiles
+
+GATE_P99_IMPROVEMENT = 1.2      # fifo_p99 / continuous_p99, best-round
+GATE_OVERHEAD = 0.05            # uniform warm traffic, best wall vs best wall
+
+MAX_BATCH = 4
+SIZES = ((8, 0.6), (16, 0.4))   # square-matrix dims, weighted mix
+RATE_UTIL = 0.35                # offered rate vs calibrated serial capacity
+TARGET_REQUESTS = 200           # arrivals per measured round
+MAX_DURATION_S = 12.0
+N_LOAD_ROUNDS = 2               # alternating open-loop rounds per scheduler
+N_OVERHEAD_ROUNDS = 8           # alternating uniform-burst rounds
+# requests per uniform burst (full groups).  Large on purpose: a burst is
+# the overhead gate's unit of observation, and short (~10 ms) bursts left
+# the min-of-rounds ratio dominated by single-core scheduling jitter (±10%
+# swings between identical runs); ~40 ms bursts average the jitter out and
+# the ratio reproduces within ~2%
+OVERHEAD_BURST = 128
+DEADLINE_FRAC = 0.15            # slice of arrivals carrying a deadline
+
+
+def workload(x):
+    """Manipulation-heavy mixed phases: transpose → einsum (TPU) → pad."""
+    y = jnp.tanh(x @ jnp.transpose(x))
+    return jnp.pad(y, ((0, 1), (0, 1)))
+
+
+def _inputs(rng):
+    return {dim: jnp.asarray(rng.rand(dim, dim).astype(np.float32))
+            for dim, _ in SIZES}
+
+
+def _make_server(scheduler: str) -> TMServer:
+    # identical everywhere but the admission policy; FIFO keeps its
+    # documented 5 ms straggler window.  Continuous gets a 1 ms hold: its
+    # hold applies to PARTIAL groups only (a full group dispatches the
+    # instant it forms), so bursts never wait — the window exists purely so
+    # an isolated arrival gives near-simultaneous stragglers one service
+    # quantum to coalesce instead of fragmenting into singleton groups
+    return TMServer(ServerConfig(
+        scheduler=scheduler,
+        max_batch=MAX_BATCH,
+        batch_timeout_s=0.001 if scheduler == "continuous" else 0.005,
+        pipeline_depth=2,
+        cache_capacity=64)).start()
+
+
+def _prewarm(srv: TMServer, inputs) -> None:
+    """Compile every (size, bucket-height) class ahead of the measured
+    window — the run must contain zero demand compiles."""
+    want = 0
+    for dim, _ in SIZES:
+        h = 1
+        while h <= MAX_BATCH:
+            srv.prewarm(workload, inputs[dim], fn_key="tail", height=h)
+            want += 1
+            h *= 2
+    deadline = time.monotonic() + 300.0
+    while len(srv.cache) < want:
+        if time.monotonic() > deadline:
+            raise SystemExit(f"prewarm stalled: {len(srv.cache)}/{want} "
+                             f"entries after 300 s")
+        time.sleep(0.05)
+
+
+def _calibrate(srv: TMServer, inputs) -> float:
+    """Weighted mean warm single-request latency (the serial service time
+    the offered rate is scaled against)."""
+    per_size = {}
+    for dim, _ in SIZES:
+        walls = []
+        for _ in range(10):
+            t0 = time.perf_counter()
+            srv(workload, inputs[dim], fn_key="tail")
+            walls.append(time.perf_counter() - t0)
+        per_size[dim] = statistics.median(walls)
+    wtotal = sum(w for _, w in SIZES)
+    return sum(per_size[dim] * w for dim, w in SIZES) / wtotal
+
+
+def _open_loop_round(srv: TMServer, inputs, spec: LoadSpec) -> dict:
+    """Replay one seeded arrival schedule; returns e2e + queue-delay
+    percentiles for the round."""
+    srv.stats.reset_series()
+    records = []
+
+    def submit(gr):
+        x = inputs[gr.size]
+        t0 = time.monotonic()
+        fut = srv.submit(workload, x, fn_key="tail",
+                         priority=gr.priority, deadline_s=gr.deadline_s)
+        rec = {"t0": t0, "fut": fut}
+        fut.add_done_callback(
+            lambda _f, rec=rec: rec.__setitem__(
+                "e2e", time.monotonic() - rec["t0"]))
+        records.append(rec)
+        return rec
+
+    run_load(submit, spec)
+    for rec in records:
+        rec["fut"].result(timeout=300)
+    e2e = [rec["e2e"] for rec in records]
+    snap = srv.snapshot_stats()
+    out = {"requests": len(e2e), **latency_percentiles(e2e, "e2e"),
+           "e2e_mean_s": sum(e2e) / len(e2e)}
+    for k in ("queue_delay_p50_s", "queue_delay_p95_s", "queue_delay_p99_s",
+              "mean_batch_size"):
+        out[k] = snap[k]
+    return out
+
+
+def _uniform_burst_wall(srv: TMServer, x) -> float:
+    t0 = time.perf_counter()
+    futs = [srv.submit(workload, x, fn_key="tail")
+            for _ in range(OVERHEAD_BURST)]
+    for f in futs:
+        f.result(timeout=300)
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    rng = np.random.RandomState(0)
+    inputs = _inputs(rng)
+
+    servers = {"fifo": _make_server("fifo"),
+               "continuous": _make_server("continuous")}
+    try:
+        for srv in servers.values():
+            _prewarm(srv, inputs)
+
+        # parity: both paths must be bit-exact against the eager oracle
+        exact = True
+        for dim, _ in SIZES:
+            want = np.asarray(workload(inputs[dim]))
+            for srv in servers.values():
+                got = np.asarray(srv(workload, inputs[dim], fn_key="tail"))
+                exact = exact and bool(np.array_equal(got, want))
+
+        service_s = _calibrate(servers["continuous"], inputs)
+        rate = RATE_UTIL / max(service_s, 1e-4)
+        duration = min(TARGET_REQUESTS / rate, MAX_DURATION_S)
+        spec = LoadSpec(rate_rps=rate, duration_s=duration, seed=7,
+                        sizes=SIZES,
+                        priorities=(("interactive", 0.7), ("batch", 0.3)),
+                        deadline_s=max(8.0 * service_s, 0.05),
+                        deadline_frac=DEADLINE_FRAC)
+
+        # discarded warm round per scheduler: the first open-loop pass pays
+        # one-time costs (thread pools spinning up, allocator warm-up) that
+        # inflate its tail by orders of magnitude on both paths
+        warm_spec = dataclasses.replace(spec, duration_s=min(
+            spec.duration_s, 0.1))
+        for srv in servers.values():
+            _open_loop_round(srv, inputs, warm_spec)
+
+        rounds = {"fifo": [], "continuous": []}
+        for i in range(N_LOAD_ROUNDS):          # alternating order: drift
+            order = ["fifo", "continuous"]      # hits both schedulers
+            if i % 2:                           # equally
+                order.reverse()
+            for name in order:
+                rounds[name].append(
+                    _open_loop_round(servers[name], inputs, spec))
+
+        # best round per scheduler: its least-noise observation of the tail
+        best = {name: min(rs, key=lambda r: r["e2e_p99_s"])
+                for name, rs in rounds.items()}
+        p99_improvement = (best["fifo"]["e2e_p99_s"]
+                           / best["continuous"]["e2e_p99_s"])
+
+        # uniform warm traffic: full-group bursts, where rolling admission
+        # can add nothing — any wall difference IS scheduler overhead
+        walls = {"fifo": [], "continuous": []}
+        for i in range(N_OVERHEAD_ROUNDS):
+            order = ["fifo", "continuous"]
+            if i % 2:
+                order.reverse()
+            for name in order:
+                walls[name].append(
+                    _uniform_burst_wall(servers[name], inputs[8]))
+        overhead = (min(walls["continuous"]) / min(walls["fifo"])) - 1.0
+
+        snaps = {name: srv.snapshot_stats()
+                 for name, srv in servers.items()}
+    finally:
+        for srv in servers.values():
+            srv.stop()
+
+    result = {
+        "benchmark": "tail_latency",
+        "workload": {
+            "sizes": SIZES,
+            "max_batch": MAX_BATCH,
+            "rate_rps": rate,
+            "duration_s": duration,
+            "deadline_frac": DEADLINE_FRAC,
+            "deadline_s": spec.deadline_s,
+            "warm_service_s": service_s,
+            "load_rounds": N_LOAD_ROUNDS,
+            "seed": spec.seed,
+        },
+        "fifo": {"rounds": rounds["fifo"], "best": best["fifo"]},
+        "continuous": {"rounds": rounds["continuous"],
+                       "best": best["continuous"],
+                       "sched": snaps["continuous"]["sched"]},
+        "p99_improvement": p99_improvement,
+        "gate_p99_improvement": GATE_P99_IMPROVEMENT,
+        "overhead_uniform": overhead,
+        "overhead_walls_s": walls,
+        "gate_overhead": GATE_OVERHEAD,
+        "bit_exact": exact,
+        "cache": {name: snaps[name]["cache"] for name in snaps},
+    }
+    with open("BENCH_tail.json", "w") as f:
+        json.dump(result, f, indent=2)
+
+    print("# tail_latency (open-loop Poisson, mixed sizes + priorities)")
+    print(f"offered: {rate:.1f} req/s for {duration:.1f} s "
+          f"(warm service {service_s * 1e3:.1f} ms, "
+          f"{best['fifo']['requests']} arrivals/round)")
+    for name in ("fifo", "continuous"):
+        b = best[name]
+        print(f"{name:>11}: e2e p50 {b['e2e_p50_s'] * 1e3:7.1f} ms | "
+              f"p95 {b['e2e_p95_s'] * 1e3:7.1f} ms | "
+              f"p99 {b['e2e_p99_s'] * 1e3:7.1f} ms | "
+              f"queue-delay p99 {b['queue_delay_p99_s'] * 1e3:7.1f} ms | "
+              f"mean batch {b['mean_batch_size']:.2f}")
+    print(f"p99 improvement: {p99_improvement:.2f}x "
+          f"(gate >= {GATE_P99_IMPROVEMENT}x)")
+    print(f"uniform-traffic overhead: {overhead:+.1%} "
+          f"(gate <= {GATE_OVERHEAD:.0%})")
+    print(f"bit-exact vs eager oracle: {exact}")
+    print(f"sched: {snaps['continuous']['sched']}")
+    print("wrote BENCH_tail.json")
+
+    if not exact:
+        raise SystemExit("FAIL: served outputs diverged from the eager "
+                         "oracle")
+    if p99_improvement < GATE_P99_IMPROVEMENT:
+        raise SystemExit(
+            f"FAIL: continuous p99 only {p99_improvement:.2f}x better than "
+            f"FIFO (gate {GATE_P99_IMPROVEMENT}x)")
+    if overhead > GATE_OVERHEAD:
+        raise SystemExit(
+            f"FAIL: scheduler overhead {overhead:+.1%} on uniform traffic "
+            f"exceeds the {GATE_OVERHEAD:.0%} gate")
+    print("PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,6 +25,16 @@ work, and propagate the *original* exception — so a sink wait surfaces the
 first failure without deadlocking, and a skipped task never stamps a busy
 interval.
 
+Preemption hooks (:mod:`repro.sched`): a **not-yet-issued** task can be
+removed from its queue with :meth:`Stream.try_cancel` — its event is marked
+``cancelled`` and never completes, so a dependent gated on it can never
+issue (and is therefore itself cancellable; the scheduler cancels the whole
+dependent suffix and re-submits it later).  A task the worker has already
+claimed cannot be cancelled: work is preempted only at task (phase)
+boundaries, never mid-kernel.  ``submit(front=True)`` queues a task ahead of
+the existing backlog — the deadline-risk path uses it so a preemptor's
+phases bypass lower-priority work that was submitted earlier.
+
 :func:`overlap_from_events` turns completed events into the measured
 two-engine overlap ratio (both-busy time over any-busy time), directly
 comparable to the cycle model's :func:`repro.serving.server.predict_overlap`.
@@ -71,6 +81,11 @@ class StreamEvent:
     t_end: float | None = None
     error: BaseException | None = None
     result: Any = None
+    # set by Stream.try_cancel: the task was dequeued before it ever issued.
+    # A cancelled event NEVER completes (wait() would block forever) — its
+    # owner drops it and submits a replacement; it stamps no busy interval
+    # and reaches no observer, exactly like work that never existed.
+    cancelled: bool = False
 
     def __post_init__(self):
         self._done = threading.Event()
@@ -166,14 +181,21 @@ class Stream:
     # --- submission -------------------------------------------------------
     def submit(self, fn: Callable[[], Any],
                deps: Sequence[StreamEvent] = (),
-               label: str = "") -> StreamEvent:
+               label: str = "", front: bool = False) -> StreamEvent:
         event = StreamEvent(engine=self.engine, label=label,
                             t_submit=time.monotonic())
         task = _Task(fn=fn, deps=tuple(deps), event=event)
         with self._cond:
             if self._closed:
                 raise StreamError(f"stream {self.engine!r} is closed")
-            self._queue.append(task)
+            if front:
+                # bypass the backlog: the preemption path queues a
+                # deadline-risk job's phases ahead of earlier-submitted
+                # lower-priority work (issue order among READY tasks scans
+                # from the left)
+                self._queue.appendleft(task)
+            else:
+                self._queue.append(task)
             self._cond.notify_all()
         # a dependency completing (possibly on the OTHER engine's thread)
         # may make this task issuable: poke the worker to re-scan
@@ -185,6 +207,21 @@ class Stream:
     def _poke(self, _event: StreamEvent) -> None:
         with self._cond:
             self._cond.notify_all()
+
+    def try_cancel(self, event: StreamEvent) -> bool:
+        """Remove ``event``'s task from the queue if the worker has not
+        claimed it yet.  Returns True on success: the task will never run,
+        the event is marked ``cancelled`` and never completes.  Returns
+        False when the task already issued (running or done) — preemption
+        happens at task boundaries only."""
+        with self._cond:
+            for i, task in enumerate(self._queue):
+                if task.event is event:
+                    del self._queue[i]
+                    event.cancelled = True
+                    self._cond.notify_all()
+                    return True
+        return False
 
     def synchronize(self, timeout: float | None = None) -> bool:
         """Block until every submitted task has completed."""
@@ -321,11 +358,18 @@ class StreamRuntime:
 
     def submit(self, engine: str, fn: Callable[[], Any],
                deps: Sequence[StreamEvent] = (),
-               label: str = "") -> StreamEvent:
+               label: str = "", front: bool = False) -> StreamEvent:
         if engine not in self.streams:
             raise ValueError(f"unknown engine {engine!r}; expected one of "
                              f"{tuple(self.streams)}")
-        return self.streams[engine].submit(fn, deps=deps, label=label)
+        return self.streams[engine].submit(fn, deps=deps, label=label,
+                                           front=front)
+
+    def try_cancel(self, event: StreamEvent) -> bool:
+        """Cancel a not-yet-issued task on whichever stream holds it (see
+        :meth:`Stream.try_cancel`)."""
+        stream = self.streams.get(event.engine)
+        return stream.try_cancel(event) if stream is not None else False
 
     def synchronize(self, timeout: float | None = None) -> bool:
         ok = True

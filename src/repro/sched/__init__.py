@@ -1,0 +1,25 @@
+"""repro.sched — continuous batching, priority classes, and phase-boundary
+preemption over the TMU/TPU stream runtime.
+
+:class:`ContinuousScheduler` is the default admission path of
+:class:`~repro.serving.server.TMServer` (``ServerConfig(scheduler=
+"continuous")``); :mod:`repro.sched.loadgen` drives the open-loop
+tail-latency benchmark.
+"""
+
+from repro.sched.loadgen import (GenRequest, LoadSpec, arrival_times,
+                                 generate, run_load)
+from repro.sched.scheduler import (ContinuousScheduler, Priority, SchedConfig,
+                                   SchedStats)
+
+__all__ = [
+    "ContinuousScheduler",
+    "GenRequest",
+    "LoadSpec",
+    "Priority",
+    "SchedConfig",
+    "SchedStats",
+    "arrival_times",
+    "generate",
+    "run_load",
+]

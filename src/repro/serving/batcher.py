@@ -36,12 +36,20 @@ class BucketKey:
 
 @dataclasses.dataclass
 class Request:
-    """One queued call: ``fn(*args)`` with a future for the result."""
+    """One queued call: ``fn(*args)`` with a future for the result.
+
+    ``priority`` is a :class:`repro.sched.Priority` class rank (0 =
+    deadline, 1 = interactive, 2 = batch); ``deadline`` is an *absolute*
+    ``time.monotonic()`` second or None.  The FIFO batcher ignores both —
+    they drive ordering and preemption in the continuous scheduler
+    (:mod:`repro.sched`)."""
 
     fn: Callable
     fn_key: Any
     args: tuple
     future: Any                      # concurrent.futures.Future
+    priority: int = 1                # Priority.INTERACTIVE
+    deadline: float | None = None    # absolute monotonic second
     t_submit: float = dataclasses.field(default_factory=time.monotonic)
     _bucket: BucketKey | None = dataclasses.field(default=None, repr=False)
 

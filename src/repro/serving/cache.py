@@ -83,6 +83,12 @@ class CacheEntry:
     selection: dict = dataclasses.field(default_factory=dict)
     compile_s: float = 0.0
     hits: int = 0
+    # born from a speculative pre-compile (repro.sched): demand hits on such
+    # entries count as speculative_hits; evicted with zero demand hits they
+    # count as speculative_wasted — so the benchmark can tell whether
+    # speculation pays for itself
+    speculative: bool = False
+    demand_hits: int = 0            # non-speculative lookups that landed here
 
 
 class CompileCache:
@@ -98,6 +104,12 @@ class CompileCache:
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        # speculative pre-compiles live OUTSIDE the demand hit/miss ledger:
+        # a prewarm that compiles counts speculative_compiles (not misses),
+        # and hit_rate keeps describing demand traffic only
+        self.speculative_compiles = 0
+        self.speculative_hits = 0
+        self.speculative_wasted = 0
 
     def __len__(self) -> int:
         with self._lock:
@@ -112,6 +124,13 @@ class CompileCache:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def _record_hit_locked(self, entry: CacheEntry) -> None:
+        self.hits += 1
+        entry.hits += 1
+        entry.demand_hits += 1
+        if entry.speculative:
+            self.speculative_hits += 1
+
     def get(self, key: CacheKey) -> CacheEntry | None:
         """Plain lookup (counts a hit/miss; no compile, no de-dup)."""
         with self._lock:
@@ -120,27 +139,42 @@ class CompileCache:
                 self.misses += 1
                 return None
             self._entries.move_to_end(key)
-            self.hits += 1
-            entry.hits += 1
+            self._record_hit_locked(entry)
             return entry
+
+    def contains_or_inflight(self, key: CacheKey) -> bool:
+        """True when ``key`` is cached or a compile for it is already in
+        flight — the speculative path's de-dup check (no stats recorded)."""
+        with self._lock:
+            return key in self._entries or key in self._inflight
 
     def get_or_compile(self, key: CacheKey,
                        build: Callable[[], CacheEntry],
+                       speculative: bool = False,
                        ) -> tuple[CacheEntry, bool]:
         """Return ``(entry, was_hit)``; ``build()`` runs at most once per key
-        across concurrent callers (losers wait and count as hits)."""
+        across concurrent callers (losers wait and count as hits).
+
+        ``speculative=True`` marks a pre-compile ahead of demand: it stays
+        out of the demand hit/miss ledger (a compile counts
+        ``speculative_compiles``, a race into an existing entry counts
+        nothing) and stamps the entry so later demand hits and wasted
+        evictions are attributed to speculation."""
         while True:
             with self._lock:
                 entry = self._entries.get(key)
                 if entry is not None:
                     self._entries.move_to_end(key)
-                    self.hits += 1
-                    entry.hits += 1
+                    if not speculative:
+                        self._record_hit_locked(entry)
                     return entry, True
                 event = self._inflight.get(key)
                 if event is None:
                     self._inflight[key] = threading.Event()
-                    self.misses += 1
+                    if speculative:
+                        self.speculative_compiles += 1
+                    else:
+                        self.misses += 1
                     break
             # another thread is compiling this key: wait, then re-check (the
             # re-check counts the hit; a failed compile falls through to retry)
@@ -151,6 +185,7 @@ class CompileCache:
             with self._lock:
                 self._inflight.pop(key).set()
             raise
+        entry.speculative = speculative
         with self._lock:
             self._entries[key] = entry
             self._entries.move_to_end(key)
@@ -161,6 +196,8 @@ class CompileCache:
                 # keep the traced closure (and everything it captures) alive
                 # for as long as anyone holds the evicted entry
                 evicted.fn = None
+                if evicted.speculative and evicted.demand_hits == 0:
+                    self.speculative_wasted += 1
                 self.evictions += 1
             self._inflight.pop(key).set()
         return entry, False
@@ -175,4 +212,7 @@ class CompileCache:
                 "evictions": self.evictions,
                 "hit_rate": (self.hits / (self.hits + self.misses)
                              if (self.hits + self.misses) else 0.0),
+                "speculative_compiles": self.speculative_compiles,
+                "speculative_hits": self.speculative_hits,
+                "speculative_wasted": self.speculative_wasted,
             }

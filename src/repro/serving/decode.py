@@ -16,6 +16,16 @@ final norm → logits), per the single-layer serving scenario: the KV cache
 rides the request path — each response returns the appended cache, the next
 step submits it back — so a whole decode session flows through the compile
 cache without a resident server-side state store.
+
+Under the continuous scheduler (:mod:`repro.sched`) sessions are no longer
+pinned to singleton batches: a session-owned server defaults to
+``max_batch=4``, so concurrent sessions sharing one server coalesce when
+their steps land on the same ``(position, seq_len)`` class (a lone session
+still dispatches height-1 groups with zero hold).  Sessions carry a
+priority class and optional per-step deadline through to the scheduler, and
+— when the server runs with ``speculative=True`` — each decode step
+pre-compiles the *next* position's program through the compile cache while
+the current step executes, hiding the position ladder's compile latency.
 """
 
 from __future__ import annotations
@@ -67,6 +77,7 @@ class DecodeStats:
     prefill_steps: int = 0
     decode_steps: int = 0
     positions_compiled: int = 0
+    speculated_positions: int = 0      # next-position prewarms scheduled
     prefill_latency_s: list = dataclasses.field(default_factory=list)
     step_latency_s: list = dataclasses.field(default_factory=list)
 
@@ -76,6 +87,7 @@ class DecodeStats:
             "prefill_steps": self.prefill_steps,
             "decode_steps": self.decode_steps,
             "positions_compiled": self.positions_compiled,
+            "speculated_positions": self.speculated_positions,
             **latency_percentiles(self.prefill_latency_s, "prefill_latency"),
             **latency_percentiles(self.step_latency_s, "step_latency"),
         }
@@ -93,7 +105,9 @@ class DecodeSession:
 
     def __init__(self, cfg: ModelConfig, params=None, *, max_len: int = 64,
                  server: TMServer | None = None,
-                 config: ServerConfig | None = None, seed: int = 0):
+                 config: ServerConfig | None = None, seed: int = 0,
+                 priority: str = "interactive",
+                 deadline_s: float | None = None):
         self.cfg = cfg
         if params is None:
             params, _ = init_lm(cfg, jax.random.PRNGKey(seed))
@@ -104,13 +118,19 @@ class DecodeSession:
             # one cache entry per decode position: capacity must cover the
             # whole session or the LRU would recompile every generation pass.
             # exact=True: decode gates on bit-exact logits vs the eager
-            # model, so TPU phases must match eager dispatch granularity
-            config = config or ServerConfig(max_batch=1,
+            # model, so TPU phases must match eager dispatch granularity.
+            # max_batch > 1 (continuous batching lifted the old singleton
+            # pin): a lone session still runs height-1 groups — the bucket
+            # ladder pads per arrival count, so nothing changes until
+            # concurrent sessions actually share a position class
+            config = config or ServerConfig(max_batch=4,
                                             batch_timeout_s=0.0,
                                             cache_capacity=self.max_len + 8,
                                             exact=True)
             server = TMServer(config).start()
         self.server = server
+        self.priority = priority          # class for every step this session
+        self.deadline_s = deadline_s      # per-STEP relative deadline
         self.stats = DecodeStats()
         self._steps: dict[int, Any] = {}
         self._cache_dtype = (jnp.float32 if cfg.dtype == jnp.float32
@@ -162,7 +182,9 @@ class DecodeSession:
         with self.server.tracer.span(f"decode/prefill@s{S}",
                                      track="decode") as sp:
             logits, ck, cv = self.server(self.step_fn(0), prompts, ck, cv,
-                                         fn_key=self._fn_key(0, S))
+                                         fn_key=self._fn_key(0, S),
+                                         priority=self.priority,
+                                         deadline_s=self.deadline_s)
             sp.set(batch=B, seq_len=S)
         self.stats.prefill_steps += 1
         self.stats.prefill_latency_s.append(time.monotonic() - t0)
@@ -180,9 +202,21 @@ class DecodeSession:
         t0 = time.monotonic()
         with self.server.tracer.span(f"decode/step@p{position}",
                                      track="decode"):
-            logits, ck, cv = self.server(self.step_fn(position), tokens,
-                                         ck, cv,
-                                         fn_key=self._fn_key(position, 1))
+            fut = self.server.submit(self.step_fn(position), tokens, ck, cv,
+                                     fn_key=self._fn_key(position, 1),
+                                     priority=self.priority,
+                                     deadline_s=self.deadline_s)
+            # position speculation: while this step executes, pre-compile
+            # the NEXT position's program (its shape class is this step's —
+            # the position ladder advances by one each step, the most
+            # predictable future traffic there is)
+            if (self.server.config.speculative
+                    and position + 1 < self.max_len):
+                if self.server.prewarm(self.step_fn(position + 1), tokens,
+                                       ck, cv,
+                                       fn_key=self._fn_key(position + 1, 1)):
+                    self.stats.speculated_positions += 1
+            logits, ck, cv = fut.result()
         self.stats.decode_steps += 1
         self.stats.step_latency_s.append(time.monotonic() - t0)
         return logits, (ck, cv)

@@ -34,6 +34,7 @@ import time
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 
 from repro.compiler.allocate import allocate
 from repro.compiler.api import CompiledTMProgram, tm_compile
@@ -49,6 +50,12 @@ from repro.serving.pipeline import PipelineJob, RequestPipeline
 from repro.serving.stats import ServerStats
 
 DEFAULT_SEGMENT_CANDIDATES = (4096, 16384, 65536)
+
+# request priority classes (repro.sched): lower rank schedules first.  A
+# request carrying a deadline is always deadline-class; the continuous
+# scheduler orders that class earliest-deadline-first and may preempt
+# lower-priority work at phase boundaries for it.
+PRIORITIES = {"deadline": 0, "interactive": 1, "batch": 2}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +86,17 @@ class ServerConfig:
     # (exposed as ``TMServer.tracer``), or pass a Tracer to share one
     # timeline across servers/sessions
     trace: Any = None
+    # admission scheduler: "continuous" (repro.sched — rolling group
+    # formation at dispatch time, priority/deadline ordering, phase-boundary
+    # preemption, speculative pre-compile) or "fifo" (the PR-3
+    # power-of-two micro-batcher + depth-limited FIFO pipeline, kept as the
+    # measured baseline).  Both honor ``batch_timeout_s`` as the partial-
+    # group straggler window and ``pipeline_depth`` as the in-flight cap.
+    scheduler: str = "continuous"
+    # continuous scheduler knobs (ignored under "fifo"):
+    preempt_margin_s: float = 0.002  # deadline slack floor before preempting
+    aging_s: float = 0.05            # waiting this long boosts one class
+    speculative: bool = False        # pre-compile the next likely bucket
 
     def __post_init__(self):
         for b in (self.backend,) + self.backend_candidates:
@@ -87,6 +105,9 @@ class ServerConfig:
         if self.max_batch < 1 or self.max_batch & (self.max_batch - 1):
             raise ValueError(f"max_batch must be a power of two, "
                              f"got {self.max_batch}")
+        if self.scheduler not in ("continuous", "fifo"):
+            raise ValueError(f"unknown scheduler {self.scheduler!r}; "
+                             f"expected 'continuous' or 'fifo'")
 
 
 # ---------------------------------------------------------------------------
@@ -194,6 +215,28 @@ def predict_overlap(compiled: CompiledTMProgram,
 # the server
 # ---------------------------------------------------------------------------
 
+@dataclasses.dataclass
+class _AdmittedBatch:
+    """One coalesced group admitted through the compile cache, ready to
+    launch.  Both schedulers consume it: the FIFO path wraps ``steps`` in a
+    :class:`PipelineJob`; the continuous scheduler submits them itself (so
+    it can cancel/re-queue unissued phases) — either way the run ends in
+    ``TMServer._finalize``.  Step thunks are idempotent (pure writes into
+    ``env``), which is what makes a cancelled phase safely re-runnable."""
+
+    batch: list[Request]            # live member requests (cancelled dropped)
+    n: int                          # real rows
+    size: int                       # padded (power-of-two) batch height
+    hit: bool                       # compile-cache hit?
+    entry: CacheEntry
+    env: dict                       # bound input/intermediate buffers
+    phases: list                    # compiled phase DAG (partition order)
+    steps: list                     # [(engine_kind, thunk)] per phase
+    deps: list                      # per-phase dep indices (earlier phases)
+    step_labels: list | None        # stream-event labels at "phase" detail
+    label: str
+
+
 class TMServer:
     """Serve JAX functions through the TMU compile/execute stack.
 
@@ -211,9 +254,6 @@ class TMServer:
         self.tracer = as_tracer(self.config.trace)
         self.stats = ServerStats()
         self.cache = CompileCache(capacity=self.config.cache_capacity)
-        self.pipeline = RequestPipeline(stats=self.stats,
-                                        depth=self.config.pipeline_depth,
-                                        tracer=self.tracer)
         self._queue = BucketQueue()
         self._batcher: threading.Thread | None = None
         self._admit_pool: concurrent.futures.ThreadPoolExecutor | None = None
@@ -221,6 +261,26 @@ class TMServer:
         self._started = False
         self._outstanding = 0
         self._idle = threading.Condition()
+        if self.config.scheduler == "fifo":
+            self.pipeline = RequestPipeline(stats=self.stats,
+                                            depth=self.config.pipeline_depth,
+                                            tracer=self.tracer)
+            self.sched = None
+        else:
+            # deferred import: repro.sched builds on the serving primitives,
+            # importing it at module scope would cycle
+            from repro.sched.scheduler import ContinuousScheduler, SchedConfig
+            self.pipeline = None
+            self.sched = ContinuousScheduler(
+                SchedConfig(slots=self.config.pipeline_depth,
+                            hold_s=self.config.batch_timeout_s,
+                            max_batch=self.config.max_batch,
+                            aging_s=self.config.aging_s,
+                            preempt_margin_s=self.config.preempt_margin_s,
+                            speculative=self.config.speculative),
+                prepare=self._prepare, finalize=self._finalize,
+                speculate=self._speculate_next,
+                stats=self.stats, tracer=self.tracer)
 
     # --- lifecycle --------------------------------------------------------
     def start(self) -> "TMServer":
@@ -228,25 +288,33 @@ class TMServer:
             return self
         self._started = True
         self._stopping = False
-        self.pipeline.start()
         self._admit_pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=2, thread_name_prefix="tm-serve-admit")
-        self._batcher = threading.Thread(target=self._batch_loop,
-                                         name="tm-serve-batcher", daemon=True)
-        self._batcher.start()
+        if self.pipeline is not None:
+            self.pipeline.start()
+            self._batcher = threading.Thread(
+                target=self._batch_loop, name="tm-serve-batcher", daemon=True)
+            self._batcher.start()
+        else:
+            self.sched.start()
         return self
 
     def stop(self) -> None:
-        """Drain queued work, then stop the batcher, admission workers and
-        both engines."""
+        """Drain queued work, then stop the scheduler (or batcher +
+        pipeline), admission workers and both engines."""
         if not self._started:
             return
-        with self._queue.nonempty:
+        if self.pipeline is not None:
+            with self._queue.nonempty:
+                self._stopping = True
+                self._queue.nonempty.notify_all()
+            self._batcher.join()
+            self._admit_pool.shutdown(wait=True)
+            self.pipeline.stop()
+        else:
             self._stopping = True
-            self._queue.nonempty.notify_all()
-        self._batcher.join()
-        self._admit_pool.shutdown(wait=True)
-        self.pipeline.stop()
+            self.sched.stop()          # drains queued + in-flight groups
+            self._admit_pool.shutdown(wait=True)
         self._started = False
 
     def __enter__(self) -> "TMServer":
@@ -256,17 +324,40 @@ class TMServer:
         self.stop()
 
     # --- request surface --------------------------------------------------
-    def submit(self, fn: Callable, *args,
-               fn_key: str | None = None) -> concurrent.futures.Future:
-        """Queue ``fn(*args)``; the future resolves to exactly its result."""
+    def submit(self, fn: Callable, *args, fn_key: str | None = None,
+               priority: str | int = "interactive",
+               deadline_s: float | None = None) -> concurrent.futures.Future:
+        """Queue ``fn(*args)``; the future resolves to exactly its result.
+
+        ``priority`` is a :data:`PRIORITIES` class name (or a raw rank);
+        ``deadline_s`` is a relative latency target in seconds — carrying one
+        escalates the request to the deadline class, which the continuous
+        scheduler orders earliest-deadline-first and may preempt for.  The
+        FIFO scheduler accepts both and ignores them."""
+        if isinstance(priority, str):
+            if priority not in PRIORITIES:
+                raise ValueError(f"unknown priority {priority!r}; expected "
+                                 f"one of {tuple(PRIORITIES)}")
+            rank = PRIORITIES[priority]
+        else:
+            rank = int(priority)
+        deadline = (None if deadline_s is None
+                    else time.monotonic() + deadline_s)
+        if deadline is not None:
+            rank = PRIORITIES["deadline"]
         req = Request(fn=fn, fn_key=fn_identity(fn, fn_key), args=args,
-                      future=concurrent.futures.Future())
+                      future=concurrent.futures.Future(),
+                      priority=rank, deadline=deadline)
         with self._idle:
             self._outstanding += 1
         # the running-state check happens under the queue lock, so a push can
-        # never land after the batcher observed _stopping and drained
-        ok = self._queue.push(
-            req, allow=lambda: self._started and not self._stopping)
+        # never land after the batcher (or scheduler) observed _stopping and
+        # drained
+        if self.pipeline is not None:
+            ok = self._queue.push(
+                req, allow=lambda: self._started and not self._stopping)
+        else:
+            ok = self.sched.submit(req)
         if not ok:
             self._release(1)
             raise RuntimeError("server is not running (use `with TMServer()`)")
@@ -280,8 +371,11 @@ class TMServer:
                                 track="server")
         return req.future
 
-    def __call__(self, fn: Callable, *args, fn_key: str | None = None):
-        return self.submit(fn, *args, fn_key=fn_key).result()
+    def __call__(self, fn: Callable, *args, fn_key: str | None = None,
+                 priority: str | int = "interactive",
+                 deadline_s: float | None = None):
+        return self.submit(fn, *args, fn_key=fn_key, priority=priority,
+                           deadline_s=deadline_s).result()
 
     def flush(self, timeout: float | None = None) -> bool:
         """Block until every submitted request has resolved."""
@@ -296,9 +390,53 @@ class TMServer:
                                 else min(left, 0.05))
             return True
 
+    def prewarm(self, fn: Callable, *args, fn_key: str | None = None,
+                height: int = 1) -> bool:
+        """Speculatively pre-compile ``fn`` at batch height ``height`` (the
+        stacked shape class a future micro-batch would hit), off-thread and
+        de-duplicated against cached entries and in-flight misses.  Returns
+        True when a compile was actually scheduled.  The compile is marked
+        speculative on the cache (``speculative_compiles`` /
+        ``speculative_hits`` / ``speculative_wasted``), so traffic stats can
+        tell whether speculation paid for itself."""
+        if not self._started or self._stopping or self._admit_pool is None:
+            return False
+        cfg = self.config
+        size = bucket_size(height, cfg.max_batch)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, axis=0), *([args] * size))
+        key = CacheKey.for_call(fn, stacked, backend=cfg.backend, params=None,
+                                fn_key=fn_identity(fn, fn_key))
+        if self.cache.contains_or_inflight(key):
+            return False
+        if self.tracer.enabled:
+            self.tracer.instant("cache/prewarm", track="server",
+                                fn_key=str(key.fn_key), height=size)
+        self._admit_pool.submit(
+            lambda: self.cache.get_or_compile(
+                key, lambda: self._build_entry(key, fn, stacked),
+                speculative=True))
+        return True
+
+    def _speculate_next(self, batch: list[Request], size: int) -> None:
+        """Continuous-scheduler hook, fired after dispatching a group at
+        height ``size``: pre-compile the next bucket up for the same shape
+        class — under rising load the next group of this class is most
+        likely to land one power of two higher."""
+        nxt = size * 2
+        if nxt > bucket_size(self.config.max_batch, self.config.max_batch):
+            return
+        r = batch[0]
+        try:
+            self.prewarm(r.fn, *r.args, fn_key=r.fn_key, height=nxt)
+        except BaseException:  # noqa: BLE001 — speculation must never fail
+            pass               # the dispatch that triggered it
+
     def snapshot_stats(self) -> dict:
         snap = self.stats.snapshot()
         snap["cache"] = self.cache.snapshot()
+        if self.sched is not None:
+            snap["sched"] = self.sched.snapshot()
         return snap
 
     # --- batcher thread ---------------------------------------------------
@@ -330,6 +468,24 @@ class TMServer:
             self._admit_pool.submit(self._process_batch, batch)
 
     def _process_batch(self, batch: list[Request]) -> None:
+        """FIFO path: admit, then hand the phase DAG to the depth-limited
+        pipeline as one job."""
+        prep = self._prepare(batch)
+        if prep is None:
+            return
+        try:
+            self.pipeline.submit(PipelineJob(
+                steps=prep.steps, deps=prep.deps,
+                on_done=lambda err: self._finalize(prep, err),
+                label=prep.label, step_labels=prep.step_labels))
+        except BaseException as e:  # noqa: BLE001 — shutdown race
+            self._fail_batch(prep.batch, e, cold=not prep.hit)
+
+    def _prepare(self, batch: list[Request]) -> _AdmittedBatch | None:
+        """Admission: transition futures to RUNNING, coalesce, hit the
+        compile cache, bind inputs, and build the per-phase step thunks.
+        Returns None when nothing is left to run (all members cancelled, or
+        a failure was already delivered to the futures)."""
         cfg = self.config
         # transition futures to RUNNING so a client cancel() can no longer
         # race set_result(); drop requests cancelled while queued
@@ -344,11 +500,11 @@ class TMServer:
                 self._release(1)
         batch = live
         if not batch:
-            return
+            return None
         n = len(batch)
         try:
             size = bucket_size(n, cfg.max_batch)
-            # default track: the admit-pool thread, so concurrent
+            # default track: the admitting thread, so concurrent
             # admissions render on their own lanes
             with self.tracer.span(f"admit/{batch[0].fn_key}x{size}") as sp:
                 stacked, pad = coalesce(batch, size)
@@ -364,13 +520,13 @@ class TMServer:
                                   track="server")
         except BaseException as e:  # noqa: BLE001 — delivered to futures
             self._fail_batch(batch, e, cold=True)
-            return
+            return None
         compiled = entry.compiled
         try:
             env = compiled.bind_inputs(*stacked)
         except BaseException as e:  # noqa: BLE001
             self._fail_batch(batch, e, cold=not hit)
-            return
+            return None
         # the compiled phase DAG maps 1:1 onto pipeline steps: each phase
         # goes to its engine's stream, synchronized only at its data
         # in-edges — independent phases of this batch overlap, and the
@@ -385,50 +541,69 @@ class TMServer:
         # rich per-instruction spans on the worker thread, and the stream
         # labels keep the batch identity instead.
         detail = self.tracer.detail if self.tracer.enabled else None
-        steps = [(phase.engine,
-                  lambda ph=phase: self._run_phase(compiled, ph, env,
-                                                   entry.backend,
-                                                   entry.fuse_chains,
-                                                   traced=detail == "instr"))
-                 for phase in phases]
+        # queue delay (admit -> first phase START) is stamped exactly once
+        # per group, by whichever phase thunk an engine issues first — it is
+        # the pure scheduling cost, measured per member request
+        first_start = [True]
+        start_lock = threading.Lock()
+
+        def mark_started() -> None:
+            with start_lock:
+                if not first_start[0]:
+                    return
+                first_start[0] = False
+            t = time.monotonic()
+            for r in batch:
+                self.stats.record_queue_delay(t - r.t_submit)
+
+        def make_step(ph):
+            def run():
+                mark_started()
+                return self._run_phase(compiled, ph, env, entry.backend,
+                                       entry.fuse_chains,
+                                       traced=detail == "instr")
+            return run
+
+        steps = [(phase.engine, make_step(phase)) for phase in phases]
         deps = [phase.deps for phase in phases]
         step_labels = ([f"phase/{p.index}/{p.kind}" for p in phases]
                        if detail == "phase" else None)
+        return _AdmittedBatch(batch=batch, n=n, size=size, hit=hit,
+                              entry=entry, env=env, phases=phases,
+                              steps=steps, deps=deps, step_labels=step_labels,
+                              label=f"{batch[0].fn_key}x{size}")
 
-        def on_done(err: BaseException | None) -> None:
-            t_end = time.monotonic()
-            parts: list = []
-            if err is None:
-                try:
-                    parts = split(compiled.outputs_from(env), n)
-                except BaseException as e:  # noqa: BLE001 — futures must
-                    err = e                 # resolve no matter what
-            if err is not None:
-                for r in batch:
-                    r.future.set_exception(err)
-                    self.stats.record_done(t_end - r.t_submit,
-                                           cold=not hit, failed=True)
-            else:
-                for r, res in zip(batch, parts):
-                    r.future.set_result(res)
-                    self.stats.record_done(t_end - r.t_submit, cold=not hit)
-            if self.tracer.enabled:
-                # one span per request on the requests track: submit ->
-                # respond, the client-visible latency
-                for r in batch:
-                    self.tracer.add_span(
-                        f"request/{r.fn_key}", "requests",
-                        r.t_submit, t_end, overlap_ok=True,
-                        cold=not hit, ok=err is None)
-            self._release(n)
-
-        try:
-            self.pipeline.submit(PipelineJob(
-                steps=steps, deps=deps, on_done=on_done,
-                label=f"{batch[0].fn_key}x{size}",
-                step_labels=step_labels))
-        except BaseException as e:  # noqa: BLE001 — shutdown race
-            self._fail_batch(batch, e, cold=not hit)
+    def _finalize(self, prep: _AdmittedBatch,
+                  err: BaseException | None) -> None:
+        """Completion: split outputs, resolve futures, record latencies —
+        fires exactly once per admitted group, from either scheduler."""
+        t_end = time.monotonic()
+        batch, hit = prep.batch, prep.hit
+        parts: list = []
+        if err is None:
+            try:
+                parts = split(prep.entry.compiled.outputs_from(prep.env),
+                              prep.n)
+            except BaseException as e:  # noqa: BLE001 — futures must
+                err = e                 # resolve no matter what
+        if err is not None:
+            for r in batch:
+                r.future.set_exception(err)
+                self.stats.record_done(t_end - r.t_submit,
+                                       cold=not hit, failed=True)
+        else:
+            for r, res in zip(batch, parts):
+                r.future.set_result(res)
+                self.stats.record_done(t_end - r.t_submit, cold=not hit)
+        if self.tracer.enabled:
+            # one span per request on the requests track: submit ->
+            # respond, the client-visible latency
+            for r in batch:
+                self.tracer.add_span(
+                    f"request/{r.fn_key}", "requests",
+                    r.t_submit, t_end, overlap_ok=True,
+                    cold=not hit, ok=err is None)
+        self._release(prep.n)
 
     def _run_phase(self, compiled: CompiledTMProgram, phase, env: dict,
                    backend: str, fuse_chains: bool = False,

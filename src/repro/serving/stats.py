@@ -70,6 +70,10 @@ class ServerStats:
 
     cold_latency_s: list = dataclasses.field(default_factory=list)
     warm_latency_s: list = dataclasses.field(default_factory=list)
+    # admit -> first phase start, per request: the pure scheduling cost, its
+    # own percentile series (folded into total latency it was invisible —
+    # the tail-latency benchmark gates on it separately)
+    queue_delay_s: list = dataclasses.field(default_factory=list)
 
     predicted_overlap: list = dataclasses.field(default_factory=list)
 
@@ -113,6 +117,21 @@ class ServerStats:
             self.completed += 1
             (self.cold_latency_s if cold else
              self.warm_latency_s).append(latency_s)
+
+    def record_queue_delay(self, delay_s: float, n: int = 1) -> None:
+        """One request's admit→first-phase-start delay (``n`` requests of a
+        coalesced group share the batch's first phase start)."""
+        with self._lock:
+            self.queue_delay_s.extend([delay_s] * n)
+
+    def reset_series(self) -> None:
+        """Clear the per-request sample series (latencies, queue delays) —
+        benchmarks call this after warmup so percentiles describe only the
+        measured window.  Counters and busy-time accounting are kept."""
+        with self._lock:
+            self.cold_latency_s.clear()
+            self.warm_latency_s.clear()
+            self.queue_delay_s.clear()
 
     def record_event(self, event) -> None:
         """Ingest one completed stream event's realized busy interval.
@@ -207,6 +226,9 @@ class ServerStats:
                 "warm_latency_p50_s": _percentile(warm, 0.5),
                 "warm_latency_p95_s": _percentile(warm, 0.95),
                 "warm_latency_p99_s": _percentile(warm, 0.99),
+                "queue_delays": len(self.queue_delay_s),
+                **latency_percentiles(list(self.queue_delay_s),
+                                      "queue_delay"),
                 "predicted_overlap": pred,
             }
             snap.update(self._measure_locked())

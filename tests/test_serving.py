@@ -48,6 +48,7 @@ class _FakeEntry:
     def __init__(self, tag):
         self.tag = tag
         self.hits = 0
+        self.demand_hits = 0
 
 
 def _key(tag, shape=(4, 4)):
