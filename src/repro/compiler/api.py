@@ -47,6 +47,10 @@ from repro.compiler.trace import graph_from_jaxpr
 # later executions go straight to the eager per-eqn fallback
 _JIT_DECLINED = object()
 
+# repro.ft.FaultInjector.install() points this at its fire() method; None in
+# production — run_phase pays one attribute load per phase
+fault_hook = None
+
 
 @dataclasses.dataclass
 class TPUPhaseReport:
@@ -190,6 +194,7 @@ class CompiledTMProgram:
                   fuse_chains: bool = False,
                   exact: bool = False,
                   tracer=None,
+                  quarantine: set | None = None,
                   ) -> LoweringReport | TPUPhaseReport:
         """Execute one partition phase against ``env`` (mutated in place).
 
@@ -216,18 +221,26 @@ class CompiledTMProgram:
         ``hbm/bytes`` counters accumulate (evaluating that payload per
         phase is NOT free, which is why the default "phase" detail records
         the bare interval); the default no-op tracer costs one attribute
-        check."""
+        check.
+
+        ``quarantine`` (the owning cache entry's mutable set) arms the
+        kernel degradation ladder on the pallas backend — see
+        :func:`repro.core.dispatch.lower_instr`."""
+        hook = fault_hook
+        if hook is not None:
+            hook("phase", f"phase/{phase.index}/{phase.kind}")
         tracer = NULL_TRACER if tracer is None else tracer
         if not tracer.enabled:
             return self._exec_phase(phase, env, backend=backend,
                                     interpret=interpret,
-                                    fuse_chains=fuse_chains, exact=exact)
+                                    fuse_chains=fuse_chains, exact=exact,
+                                    quarantine=quarantine)
         with tracer.span(f"phase/{phase.index}/{phase.kind}",
                          backend=backend) as sp:
             rep = self._exec_phase(phase, env, backend=backend,
                                    interpret=interpret,
                                    fuse_chains=fuse_chains, exact=exact,
-                                   tracer=tracer)
+                                   tracer=tracer, quarantine=quarantine)
             if tracer.detail == "instr":
                 if isinstance(rep, TPUPhaseReport):
                     sp.set(n_eqns=rep.n_eqns, jitted=rep.jitted,
@@ -247,6 +260,7 @@ class CompiledTMProgram:
     def _exec_phase(self, phase: Phase, env: dict[str, Any], *,
                     backend: str, interpret: bool, fuse_chains: bool,
                     exact: bool, tracer=NULL_TRACER,
+                    quarantine: set | None = None,
                     ) -> LoweringReport | TPUPhaseReport:
         if phase.kind == "tpu":
             if exact:
@@ -288,7 +302,7 @@ class CompiledTMProgram:
                 jitted=False, xla_computations=len(phase.node_indices))
         ex = TMExecutor(backend=backend, interpret=interpret,
                         params=self.params, fuse_chains=fuse_chains,
-                        tracer=tracer)
+                        tracer=tracer, quarantine=quarantine)
         bufs = {n: env[n] for n in phase.program.inputs}
         out, lowering, _ = ex.run(phase.program, bufs)
         env.update(out)
@@ -301,7 +315,8 @@ class CompiledTMProgram:
     def run_async(self, env: dict[str, Any], *, runtime,
                   backend: str = "fused", interpret: bool = True,
                   fuse_chains: bool = False, exact: bool = False,
-                  label: str = "", tracer=None):
+                  label: str = "", tracer=None,
+                  quarantine: set | None = None):
         """Submit every phase of the DAG onto ``runtime``'s engine streams.
 
         Each phase becomes one stream task whose event dependencies are its
@@ -321,7 +336,7 @@ class CompiledTMProgram:
                 rep = self.run_phase(ph, env, backend=backend,
                                      interpret=interpret,
                                      fuse_chains=fuse_chains, exact=exact,
-                                     tracer=tracer)
+                                     tracer=tracer, quarantine=quarantine)
                 return [env[n] for n in ph.writes], rep
             events.append(runtime.submit(
                 phase.engine, task, deps=[events[d] for d in phase.deps],
@@ -330,7 +345,8 @@ class CompiledTMProgram:
 
     def run(self, *args, backend: str = "fused", interpret: bool = True,
             fuse_chains: bool = False, exact: bool = False, runtime=None,
-            tracer=None) -> tuple[Any, list[LoweringReport]]:
+            tracer=None, quarantine: set | None = None,
+            ) -> tuple[Any, list[LoweringReport]]:
         """Execute and return ``(outputs, per-TM-phase lowering reports)``.
 
         With ``runtime`` (a :class:`~repro.runtime.streams.StreamRuntime`)
@@ -346,7 +362,7 @@ class CompiledTMProgram:
             events = self.run_async(env, runtime=runtime, backend=backend,
                                     interpret=interpret,
                                     fuse_chains=fuse_chains, exact=exact,
-                                    tracer=tracer)
+                                    tracer=tracer, quarantine=quarantine)
             for ev in events:   # sink sync: deps complete transitively
                 reports.append(ev.wait()[1])
         else:
@@ -354,7 +370,8 @@ class CompiledTMProgram:
                 reports.append(self.run_phase(phase, env, backend=backend,
                                               interpret=interpret,
                                               fuse_chains=fuse_chains,
-                                              exact=exact, tracer=tracer))
+                                              exact=exact, tracer=tracer,
+                                              quarantine=quarantine))
         lowerings = [r for r in reports if isinstance(r, LoweringReport)]
         return self.outputs_from(env), lowerings
 

@@ -23,6 +23,11 @@ import jax.numpy as jnp
 
 from repro.core.instr import TMInstr
 
+# repro.ft.FaultInjector.install() points this at its fire() method; None in
+# production.  It fires INSIDE the rule-execution try below, so an injected
+# lowering fault exercises the quarantine/fallback ladder, not a crash.
+fault_hook: Callable[[str, str], None] | None = None
+
 
 @dataclasses.dataclass(frozen=True)
 class Lowering:
@@ -48,6 +53,8 @@ class Lowering:
     #                              executor-level batch lifts)
     launches: int = 1  # kernel launches (engine passes for fallbacks)
     instrs: int = 1    # TM instructions this record covers (>1: fused chain)
+    degraded: bool = False  # a preferred kernel failed/was quarantined and
+    #                         this record is the surviving fallback path
 
     @property
     def is_pallas(self) -> bool:
@@ -90,6 +97,11 @@ class LoweringReport:
     def chain_count(self) -> int:
         """Fused forwarding chains executed as single kernels."""
         return sum(1 for r in self.records if r.is_chain)
+
+    def degraded_count(self) -> int:
+        """Records that took a fallback because a kernel failed or was
+        quarantined (the degradation ladder's per-run footprint)."""
+        return sum(1 for r in self.records if r.degraded)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -176,8 +188,20 @@ def rules() -> list[KernelRule]:
     return list(_RULES)
 
 
+def quarantine_key(rule_name: str, opcode: str,
+                   srcs: Sequence[jnp.ndarray | None]) -> tuple:
+    """The (rule, shape-class) identity a failing kernel is quarantined
+    under: same rule + same opcode + same source shapes means the same
+    lowering and is skipped without re-failing."""
+    shapes = tuple(tuple(int(d) for d in getattr(s, "shape", ()))
+                   for s in srcs if s is not None)
+    return (rule_name, opcode, shapes)
+
+
 def lower_instr(ins: TMInstr, srcs: Sequence[jnp.ndarray], batch_dims: int,
                 interpret: bool, segment_bytes: int | None = None,
+                quarantine: set | None = None,
+                faults: list | None = None,
                 ) -> tuple[jnp.ndarray, Lowering] | None:
     """Lower one instruction through the registry.
 
@@ -186,21 +210,56 @@ def lower_instr(ins: TMInstr, srcs: Sequence[jnp.ndarray], batch_dims: int,
     ``segment_bytes`` propagates a custom ping-pong budget into the kernels
     (None = the :class:`~repro.core.schedule.CycleParams` default), so a
     non-default budget reconfigures the launched grids, not just the model.
+
+    ``quarantine`` (a mutable set owned by the caller, usually the compile
+    cache entry) arms the degradation ladder: a rule whose
+    :func:`quarantine_key` is in the set is skipped outright, and a rule
+    that *raises* is added to the set and skipped — lowering falls through
+    to the next rule, or to the caller's engine fallback, and the surviving
+    record is marked ``degraded``.  Without a quarantine set (the default)
+    a raising rule propagates, preserving fail-fast semantics for direct
+    executor use.  ``faults`` (optional caller-owned list) collects one
+    ``(rule name, why)`` row per skipped rule, so a None return can still
+    tell the caller its engine fallback is a degradation.
     """
     _ensure_registered()
+    degraded = False
     for rule in _RULES:
         path = rule.matches(ins, srcs, batch_dims, segment_bytes=segment_bytes)
-        if path is not None:
+        if path is None:
+            continue
+        if quarantine is not None:
+            qkey = quarantine_key(rule.name, ins.opcode.value, srcs)
+            if qkey in quarantine:
+                degraded = True
+                if faults is not None:
+                    faults.append((rule.name, "quarantined"))
+                continue
+        try:
+            hook = fault_hook
+            if hook is not None:
+                hook("lowering", f"{rule.name}:{ins.opcode.value}:{ins.dst}")
             val = rule.run(ins, srcs, batch_dims, interpret,
                            segment_bytes=segment_bytes)
-            seg = (rule.segments(ins, srcs, batch_dims,
-                                 segment_bytes=segment_bytes)
-                   if rule.segments is not None else None)
-            n_launch = (rule.launches(ins, srcs, batch_dims)
-                        if rule.launches is not None else 1)
-            return val, Lowering(dst=ins.dst, opcode=ins.opcode.value,
-                                 path=path, kernel=rule.name, segments=seg,
-                                 launches=n_launch)
+        except Exception as e:
+            if quarantine is None:
+                raise
+            quarantine.add(quarantine_key(rule.name, ins.opcode.value, srcs))
+            degraded = True
+            if faults is not None:
+                faults.append((rule.name, f"failed: {e!r}"))
+            continue
+        seg = (rule.segments(ins, srcs, batch_dims,
+                             segment_bytes=segment_bytes)
+               if rule.segments is not None else None)
+        n_launch = (rule.launches(ins, srcs, batch_dims)
+                    if rule.launches is not None else 1)
+        return val, Lowering(dst=ins.dst, opcode=ins.opcode.value,
+                             path=path, kernel=rule.name, segments=seg,
+                             launches=n_launch, degraded=degraded,
+                             reason=("degraded: preferred kernel "
+                                     "failed or quarantined"
+                                     if degraded else ""))
     return None
 
 
@@ -208,6 +267,7 @@ def lower_chain(instrs: Sequence[TMInstr],
                 srcs: Sequence[Sequence[jnp.ndarray | None]],
                 batch_dims: int, interpret: bool,
                 segment_bytes: int | None = None,
+                quarantine: set | None = None,
                 ) -> tuple[jnp.ndarray, Lowering] | None:
     """Lower a whole forwarding chain through the chain registry.
 
@@ -219,11 +279,26 @@ def lower_chain(instrs: Sequence[TMInstr],
     one record, ``launches=1``, covering ``len(instrs)`` instructions — or
     None when no rule does (caller executes the links one by one, exactly
     like an unfused program).
+
+    With a ``quarantine`` set, a quarantined or raising chain rule is
+    skipped the same way as in :func:`lower_instr` — the chain then
+    executes link-by-link, each link taking its own (quarantine-aware)
+    instruction lowering.
     """
     _ensure_registered()
     for rule in _CHAIN_RULES:
-        lowered = rule.lower(instrs, srcs, batch_dims, interpret,
-                             segment_bytes=segment_bytes)
+        if quarantine is not None:
+            qkey = quarantine_key(rule.name, "chain", srcs[0])
+            if qkey in quarantine:
+                continue
+        try:
+            lowered = rule.lower(instrs, srcs, batch_dims, interpret,
+                                 segment_bytes=segment_bytes)
+        except Exception:
+            if quarantine is None:
+                raise
+            quarantine.add(quarantine_key(rule.name, "chain", srcs[0]))
+            continue
         if lowered is not None:
             val, path, seg = lowered
             return val, Lowering(dst=instrs[-1].dst, opcode="chain",

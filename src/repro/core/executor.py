@@ -68,6 +68,12 @@ class TMExecutor:
     # (None or the no-op tracer = tracing off; the hot path pays one
     # attribute check per instruction)
     tracer: object = None
+    # pallas only: the degradation-ladder quarantine (a mutable set shared
+    # with the owning compile-cache entry).  When set, a kernel rule that
+    # raises is quarantined and the instruction falls through to the next
+    # rule / the reference engine instead of failing the run — see
+    # dispatch.lower_instr.  None keeps fail-fast semantics.
+    quarantine: set | None = None
     last_report: FusionReport | None = None
     last_lowering: LoweringReport | None = None
 
@@ -175,7 +181,8 @@ class TMExecutor:
                 srcs = [[None if s in streamed else bufs[s]
                          for s in ins.srcs] for ins in instrs]
                 lowered = lower_chain(instrs, srcs, batch_dims,
-                                      self.interpret, segment_bytes=sb)
+                                      self.interpret, segment_bytes=sb,
+                                      quarantine=self.quarantine)
                 if lowered is not None:
                     claimed = (end, lowered)
                     break
@@ -201,20 +208,27 @@ class TMExecutor:
         if self.backend == "pallas":
             srcs = [bufs[s] for s in ins.srcs]  # Tensor Load
             sb = self.params.segment_bytes if self.params is not None else None
+            faults: list | None = [] if self.quarantine is not None else None
             lowered = lower_instr(ins, srcs, batch_dims, self.interpret,
-                                  segment_bytes=sb)
+                                  segment_bytes=sb,
+                                  quarantine=self.quarantine, faults=faults)
             if lowered is not None:
                 val, rec = lowered
                 lowering.records.append(rec)
                 return val
             # the registry cannot tell us *why* every rule declined; report
             # the one observable condition without guessing at causes
-            reason = (f"no matching kernel rule (batch_dims={batch_dims})"
-                      if batch_dims else "no matching kernel rule")
+            if faults:
+                reason = ("degraded to engine fallback: "
+                          + "; ".join(f"{name} {why}" for name, why in faults))
+            else:
+                reason = (f"no matching kernel rule (batch_dims={batch_dims})"
+                          if batch_dims else "no matching kernel rule")
             val = self._exec(ins, bufs, batch_dims)
             lowering.records.append(Lowering(
                 dst=ins.dst, opcode=ins.opcode.value,
-                path=f"reference.{ins.opcode.value}", reason=reason))
+                path=f"reference.{ins.opcode.value}", reason=reason,
+                degraded=bool(faults)))
             return val
         val = self._exec(ins, bufs, batch_dims)
         lowering.records.append(Lowering(

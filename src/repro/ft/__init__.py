@@ -1,0 +1,37 @@
+"""``repro.ft`` — seeded fault injection and recovery for the serving stack.
+
+A production serving deployment earns the paper's end-to-end win only while
+the pipeline keeps streaming; this subsystem is the failure half of that
+contract:
+
+* :class:`FaultInjector` (inject.py) — a seeded, deterministic fault plan
+  (:class:`FaultPlan` of :class:`FaultSpec`) installed into four hook sites
+  across the stack: stream task execution
+  (:meth:`repro.runtime.streams.Stream._run`), kernel lowering
+  (:func:`repro.core.dispatch.lower_instr`), phase execution
+  (:meth:`repro.compiler.api.CompiledTMProgram.run_phase`) and compilation
+  (:meth:`repro.serving.cache.CompileCache.get_or_compile`) — so every
+  failure mode the recovery layer claims to handle is reproducible in tests
+  and CI (``benchmarks/chaos_soak.py`` gates on it).
+* :class:`PhaseWatchdog` (watchdog.py) — per-phase deadline enforcement over
+  a :class:`~repro.runtime.streams.StreamRuntime`: a hung phase is poisoned
+  with :class:`PhaseTimeoutError` and the engine's worker is replaced, so a
+  stuck kernel loses its result instead of wedging the stream.  The seed's
+  :class:`~repro.runtime.fault_tolerance.Heartbeat` and
+  :class:`~repro.runtime.fault_tolerance.StragglerDetector` are wired onto
+  the completed-event flow here.
+
+Recovery itself (bisect-retry failure isolation, the backend degradation
+ladder) lives in :class:`repro.serving.server.TMServer` — see
+``docs/robustness.md`` for the full fault model.
+"""
+
+from repro.ft.inject import (SITES, FaultInjector, FaultPlan, FaultSpec,
+                             InjectedFault, active_injector, poisson_plan)
+from repro.ft.watchdog import PhaseTimeoutError, PhaseWatchdog
+
+__all__ = [
+    "SITES", "FaultInjector", "FaultPlan", "FaultSpec", "InjectedFault",
+    "active_injector", "poisson_plan",
+    "PhaseTimeoutError", "PhaseWatchdog",
+]

@@ -10,6 +10,13 @@ This module is runnable on one host (the monitor watches the training
 thread) and is what ``launch/train.py`` wires around the step loop; the
 same logic runs per-host in a multi-controller deployment, with the
 coordinator acting on reports.
+
+In the serving stack the same primitives are wired by ``repro.ft``:
+:class:`~repro.ft.PhaseWatchdog` beats a :class:`Heartbeat` on every
+completed stream event and feeds a per-engine :class:`StragglerDetector`
+with phase wall times (slow phases become trace instants), and
+:class:`~repro.serving.decode.DecodeSession` runs both over decode-step
+timings — see ``docs/robustness.md``.
 """
 
 from __future__ import annotations
@@ -23,22 +30,23 @@ class Heartbeat:
     """Liveness monitor: the training loop beats once per step; a watcher
     thread flags a stall when no beat arrives within ``deadline_s``."""
 
-    def __init__(self, deadline_s: float = 300.0):
+    def __init__(self, deadline_s: float = 300.0, clock=time.monotonic):
         self.deadline_s = deadline_s
-        self._last = time.monotonic()
+        self._clock = clock   # injectable for tests
+        self._last = clock()
         self._lock = threading.Lock()
 
     def beat(self):
         with self._lock:
-            self._last = time.monotonic()
+            self._last = self._clock()
 
     def stalled(self) -> bool:
         with self._lock:
-            return (time.monotonic() - self._last) > self.deadline_s
+            return (self._clock() - self._last) > self.deadline_s
 
     def seconds_since_beat(self) -> float:
         with self._lock:
-            return time.monotonic() - self._last
+            return self._clock() - self._last
 
 
 @dataclasses.dataclass
@@ -64,6 +72,11 @@ class StragglerDetector:
         if is_straggler:
             self.flagged += 1
         return is_straggler
+
+    @property
+    def mean(self) -> float:
+        """The current EWMA step time (0.0 until the first record)."""
+        return self._mean
 
 
 class RestartSupervisor:

@@ -43,10 +43,9 @@ comparable to the cycle model's :func:`repro.serving.server.predict_overlap`.
 from __future__ import annotations
 
 import dataclasses
-import sys
+import logging
 import threading
 import time
-import traceback
 from collections import deque
 from typing import Any, Callable, Iterable, Sequence
 
@@ -54,15 +53,22 @@ import jax
 
 ENGINE_KINDS = ("tmu", "tpu")
 
+_LOG = logging.getLogger("repro.runtime.streams")
+
+# repro.ft.FaultInjector.install() points this at its fire() method; None in
+# production — Stream._run pays one attribute load per task
+fault_hook: Callable[[str, str], None] | None = None
+
 
 class StreamError(RuntimeError):
     """Raised when interacting with a closed stream."""
 
 
-def _report_callback_error(label: str) -> None:
-    print(f"[repro.runtime] event done-callback failed for {label!r}:",
-          file=sys.stderr)
-    traceback.print_exc()
+def _report_callback_error(label: str, owner: "Stream | None") -> None:
+    _LOG.exception("event done-callback failed for %r", label)
+    if owner is not None:
+        with owner._cond:
+            owner.callback_errors += 1
 
 
 @dataclasses.dataclass
@@ -86,11 +92,15 @@ class StreamEvent:
     # owner drops it and submits a replacement; it stamps no busy interval
     # and reaches no observer, exactly like work that never existed.
     cancelled: bool = False
+    # watchdog deadline: once RUNNING for longer than this, PhaseWatchdog
+    # poisons the event with PhaseTimeoutError (None = never)
+    timeout_s: float | None = None
 
     def __post_init__(self):
         self._done = threading.Event()
         self._callbacks: list[Callable[["StreamEvent"], None]] = []
         self._cb_lock = threading.Lock()
+        self._owner: "Stream | None" = None  # set by Stream.submit
 
     # --- completion -------------------------------------------------------
     @property
@@ -125,7 +135,7 @@ class StreamEvent:
         try:
             cb(self)
         except BaseException:  # noqa: BLE001 — see _complete
-            _report_callback_error(self.label)
+            _report_callback_error(self.label, self._owner)
 
     def _complete(self) -> None:
         with self._cb_lock:
@@ -137,7 +147,7 @@ class StreamEvent:
             except BaseException:  # noqa: BLE001 — a raising callback runs
                 # on the stream's worker thread; letting it escape would
                 # kill the worker and wedge the whole stream
-                _report_callback_error(self.label)
+                _report_callback_error(self.label, self._owner)
 
 
 @dataclasses.dataclass
@@ -174,16 +184,25 @@ class Stream:
         self._cond = threading.Condition()
         self._closed = False
         self._inflight = 0          # popped but not yet completed
+        self._running: _Task | None = None   # the task whose fn is executing
+        self.callback_errors = 0    # done-callbacks that raised (see _LOG)
+        # worker generation: poison_running bumps this and spawns a fresh
+        # worker, disowning one stuck in task.fn() — the abandoned thread
+        # notices the stale generation when (if) fn returns and exits
+        self._gen = 0
         self._thread = threading.Thread(
-            target=self._worker, name=f"tm-stream-{engine}", daemon=True)
+            target=self._worker, args=(0,),
+            name=f"tm-stream-{engine}", daemon=True)
         self._thread.start()
 
     # --- submission -------------------------------------------------------
     def submit(self, fn: Callable[[], Any],
                deps: Sequence[StreamEvent] = (),
-               label: str = "", front: bool = False) -> StreamEvent:
+               label: str = "", front: bool = False,
+               timeout_s: float | None = None) -> StreamEvent:
         event = StreamEvent(engine=self.engine, label=label,
-                            t_submit=time.monotonic())
+                            t_submit=time.monotonic(), timeout_s=timeout_s)
+        event._owner = self
         task = _Task(fn=fn, deps=tuple(deps), event=event)
         with self._cond:
             if self._closed:
@@ -243,6 +262,71 @@ class Stream:
             self._cond.notify_all()
         self._thread.join()
 
+    # --- watchdog / diagnostics -------------------------------------------
+    def running_info(self) -> tuple[StreamEvent, float] | None:
+        """The currently-executing task's (event, t_start), or None.  The
+        watchdog polls this to find tasks past their deadline."""
+        with self._cond:
+            task = self._running
+            if task is None:
+                return None
+            return task.event, (task.event.t_start or time.monotonic())
+
+    def poison_running(self, event: StreamEvent,
+                       error: BaseException) -> bool:
+        """Force-complete ``event`` with ``error`` while its fn is still
+        executing, and replace the worker thread so the queue keeps
+        draining.  Returns False if ``event`` is not the running task (it
+        finished, or was never ours) — the caller lost the race and must
+        not treat it as hung.
+
+        The abandoned worker is left to finish (Python threads cannot be
+        killed); it detects the generation bump when fn returns and exits
+        without touching the event or the queue.  Its still-referenced
+        result is dropped.
+        """
+        with self._cond:
+            task = self._running
+            if task is None or task.event is not event or event.done:
+                return False
+            event.error = error
+            event.t_end = time.monotonic()
+            self._running = None
+            self._inflight -= 1
+            self._gen += 1
+            self._thread = threading.Thread(
+                target=self._worker, args=(self._gen,),
+                name=f"tm-stream-{self.engine}-g{self._gen}", daemon=True)
+            self._thread.start()
+            self._cond.notify_all()
+        if self.tracer is not None and self.tracer.enabled:
+            self.tracer.add_span(event.label or "task", self.engine,
+                                 event.t_start, event.t_end, ok=False)
+        event._complete()
+        if self.observer is not None:
+            try:
+                self.observer(event)
+            except BaseException:  # noqa: BLE001 — see _run
+                pass
+        return True
+
+    def pending(self) -> list[dict]:
+        """Diagnostic rows for undone work: the running task plus the
+        queued backlog (label, engine, state, age in seconds)."""
+        now = time.monotonic()
+        out: list[dict] = []
+        with self._cond:
+            run = self._running
+            if run is not None:
+                out.append({"engine": self.engine, "label": run.event.label,
+                            "state": "running",
+                            "age_s": now - (run.event.t_start or now)})
+            for task in self._queue:
+                out.append({"engine": self.engine, "label": task.event.label,
+                            "state": "queued",
+                            "age_s": now - task.event.t_submit})
+        return out
+
     # --- worker -----------------------------------------------------------
     def _claim_locked(self) -> _Task | None:
         """The oldest task whose in-edges have all signalled (caller holds
@@ -253,38 +337,64 @@ class Stream:
                 return task
         return None
 
-    def _worker(self) -> None:
+    def _worker(self, gen: int) -> None:
         while True:
             with self._cond:
+                if gen != self._gen:
+                    return  # replaced by poison_running while idle
                 task = self._claim_locked()
                 while task is None:
                     if self._closed and not self._queue:
                         return
                     self._cond.wait(timeout=0.1)
+                    if gen != self._gen:
+                        return
                     task = self._claim_locked()
                 self._inflight += 1
-            self._run(task)
+            if not self._run(task, gen):
+                return  # our task was poisoned mid-fn; a fresh worker owns
+                #         the queue and poison_running settled the counters
             with self._cond:
                 self._inflight -= 1
                 self._cond.notify_all()
 
-    def _run(self, task: _Task) -> None:
+    def _run(self, task: _Task, gen: int) -> bool:
+        """Execute one claimed task.  Returns False when the task was
+        poisoned (watchdog timeout) while fn was executing — this worker is
+        stale and must exit without completing anything."""
         event = task.event
         for dep in task.deps:   # already complete (issue condition); pick
             if dep.error is not None and event.error is None:
                 event.error = dep.error   # up the ORIGINAL failure
         if event.error is None:
-            event.t_start = time.monotonic()
+            with self._cond:
+                self._running = task
+                event.t_start = time.monotonic()
+            result: Any = None
+            err: BaseException | None = None
             try:
+                hook = fault_hook
+                if hook is not None:
+                    hook("stream", f"{self.engine}:{event.label}")
                 result = task.fn()
                 # resolve async dispatch on OUR thread so t_end is the work's
                 # completion (a device-event timestamp), not its enqueue; the
                 # other stream and the host keep running meanwhile
                 jax.block_until_ready(result)
-                event.result = result
             except BaseException as e:  # noqa: BLE001 — delivered via event
-                event.error = e
-            event.t_end = time.monotonic()
+                err = e
+            t_end = time.monotonic()
+            with self._cond:
+                if gen != self._gen or event.done:
+                    # poison_running fired while fn was stuck: the event
+                    # already completed with the watchdog's error and a
+                    # replacement worker owns the queue — drop the late
+                    # result and die quietly
+                    return False
+                self._running = None
+                event.result = result
+                event.error = err
+                event.t_end = t_end
             if self.tracer is not None and self.tracer.enabled:
                 # the realized busy interval, on the ENGINE's track — the
                 # exact timestamps the serving stats ingest, so the trace
@@ -298,7 +408,8 @@ class Stream:
             try:
                 self.observer(event)
             except BaseException:  # noqa: BLE001 — observers must not kill
-                pass               # the engine thread
+                _LOG.exception("stream observer failed for %r", event.label)
+        return True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -358,12 +469,13 @@ class StreamRuntime:
 
     def submit(self, engine: str, fn: Callable[[], Any],
                deps: Sequence[StreamEvent] = (),
-               label: str = "", front: bool = False) -> StreamEvent:
+               label: str = "", front: bool = False,
+               timeout_s: float | None = None) -> StreamEvent:
         if engine not in self.streams:
             raise ValueError(f"unknown engine {engine!r}; expected one of "
                              f"{tuple(self.streams)}")
         return self.streams[engine].submit(fn, deps=deps, label=label,
-                                           front=front)
+                                           front=front, timeout_s=timeout_s)
 
     def try_cancel(self, event: StreamEvent) -> bool:
         """Cancel a not-yet-issued task on whichever stream holds it (see
@@ -380,6 +492,18 @@ class StreamRuntime:
     def close(self) -> None:
         for stream in self.streams.values():
             stream.close()
+
+    def pending(self) -> list[dict]:
+        """Undone work across both engines — running + queued task rows
+        (engine, label, state, age_s); the drain-timeout diagnostic."""
+        rows: list[dict] = []
+        for stream in self.streams.values():
+            rows.extend(stream.pending())
+        return rows
+
+    def callback_errors(self) -> int:
+        """Total done-callbacks that raised, across both streams."""
+        return sum(s.callback_errors for s in self.streams.values())
 
     def timeline(self) -> list[EventRecord]:
         with self._lock:

@@ -93,6 +93,8 @@ class SchedStats:
     preemptions: int = 0            # victim parkings
     phases_cancelled: int = 0       # unissued phases pulled back
     phases_resubmitted: int = 0     # cancelled phases re-submitted on resume
+    phases_aborted: int = 0         # unissued phases cancelled because a
+    #                                 sibling phase of their group failed
     resumes: int = 0                # parked groups resumed
     speculations: int = 0           # speculative pre-compiles requested
     max_queue_depth: int = 0
@@ -131,6 +133,7 @@ class _JobRun:
         """(Re)submit every pending phase onto its engine stream; returns
         how many were *re*-submissions of previously cancelled phases."""
         resubmitted = 0
+        timeouts = getattr(self.prep, "step_timeouts", None)
         with self.lock:
             self.state = "running"
             for i, (kind, thunk) in enumerate(self.prep.steps):
@@ -148,7 +151,9 @@ class _JobRun:
                          if self.prep.step_labels is not None
                          else f"{self.prep.label}#{i}:{kind}")
                 new_ev = self.sched.runtime.submit(
-                    kind, thunk, deps=deps, label=label, front=front)
+                    kind, thunk, deps=deps, label=label, front=front,
+                    timeout_s=(timeouts[i] if timeouts is not None
+                               else None))
                 self.events[i] = new_ev
                 new_ev.add_done_callback(
                     functools.partial(self._phase_done, i, new_ev))
@@ -177,14 +182,32 @@ class _JobRun:
             return cancelled
 
     def _phase_done(self, i: int, ev, _event) -> None:
+        aborted = 0
         with self.lock:
             if self.events[i] is not ev:
                 return                  # stale callback from a replaced event
             self.done[i] = True
             if ev.error is not None and self._error is None:
                 self._error = ev.error
+                # error-abort: pull back the group's unissued phases — they
+                # could only burn the engines on dead (skip-with-error)
+                # work.  Same forward-order guarantee as preempt(): a
+                # cancelled phase's dependents can never issue, so the
+                # whole dependent suffix comes back in one pass.  Cancelled
+                # events never complete, so mark their slots done here —
+                # the job finishes once the already-issued phases settle.
+                for j, other in enumerate(self.events):
+                    if other is None or self.done[j] or other.cancelled \
+                            or other.done:
+                        continue
+                    if self.sched.runtime.try_cancel(other):
+                        self.done[j] = True
+                        aborted += 1
             finished = all(self.done)
             err = self._error
+        if aborted:                     # job lock released first: the lock
+            with self.sched._work:      # order is scheduler -> job, never
+                self.sched.sstats.phases_aborted += aborted  # the reverse
         if finished:
             self.sched._job_finished(self, err)
 

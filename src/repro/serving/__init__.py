@@ -27,8 +27,9 @@ from repro.serving.batcher import (BucketKey, Request, bucket_size, coalesce,
 from repro.serving.cache import CacheEntry, CacheKey, CompileCache
 from repro.serving.decode import DecodeSession, DecodeStats, make_layer_step
 from repro.serving.pipeline import PipelineJob, RequestPipeline
-from repro.serving.server import (ServerConfig, TMServer, predict_cycles,
-                                  predict_overlap, select_chain_fusion,
+from repro.serving.server import (DrainTimeoutError, ServerConfig, TMServer,
+                                  predict_cycles, predict_overlap,
+                                  predict_phase_cycles, select_chain_fusion,
                                   select_cycle_params)
 from repro.serving.stats import ServerStats, latency_percentiles
 
@@ -37,7 +38,8 @@ __all__ = [
     "CacheEntry", "CacheKey", "CompileCache",
     "DecodeSession", "DecodeStats", "make_layer_step",
     "PipelineJob", "RequestPipeline",
-    "ServerConfig", "TMServer", "predict_cycles", "predict_overlap",
-    "select_chain_fusion", "select_cycle_params",
+    "DrainTimeoutError", "ServerConfig", "TMServer", "predict_cycles",
+    "predict_overlap", "predict_phase_cycles", "select_chain_fusion",
+    "select_cycle_params",
     "ServerStats", "latency_percentiles",
 ]

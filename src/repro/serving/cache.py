@@ -35,6 +35,11 @@ import jax
 
 from repro.core.schedule import CycleParams
 
+# repro.ft.FaultInjector.install() points this at its fire() method; None in
+# production — fired around build() so an injected compile fault surfaces as
+# a (retryable) admission failure, exactly like a real trace/staging error
+fault_hook: Callable[[str, str], None] | None = None
+
 
 def fn_identity(fn: Callable, fn_key: Any = None) -> Any:
     """THE fn-identity rule, shared by bucket keys and cache keys: an
@@ -89,6 +94,18 @@ class CacheEntry:
     # speculation pays for itself
     speculative: bool = False
     demand_hits: int = 0            # non-speculative lookups that landed here
+    # degradation-ladder state (repro.ft / docs/robustness.md), both mutated
+    # in place so warm traffic sees prior failures without re-failing:
+    # * quarantine — (rule, opcode, shape-class) keys of kernel lowerings
+    #   that raised; dispatch skips them (see dispatch.lower_instr)
+    # * degraded_phases — phase index -> backend the server's phase-level
+    #   ladder settled on after the entry's own backend failed that phase
+    quarantine: set = dataclasses.field(default_factory=set)
+    degraded_phases: dict = dataclasses.field(default_factory=dict)
+    # per-phase predicted cycles (watchdog deadlines) — a pure function of
+    # the pinned compilation, memoized on first warm admission so the hot
+    # path never re-walks the graph
+    phase_cycle_pred: tuple | None = None
 
 
 class CompileCache:
@@ -180,6 +197,9 @@ class CompileCache:
             # re-check counts the hit; a failed compile falls through to retry)
             event.wait()
         try:
+            hook = fault_hook
+            if hook is not None:
+                hook("compile", str(key.fn_key))
             entry = build()
         except BaseException:
             with self._lock:

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 
 from repro.models.layers import embed, rmsnorm, rope_freqs, unembed
 from repro.models.transformer import ModelConfig, _dense_block, init_lm
+from repro.runtime.fault_tolerance import Heartbeat, StragglerDetector
 from repro.serving.server import ServerConfig, TMServer
 from repro.serving.stats import latency_percentiles
 
@@ -78,6 +79,7 @@ class DecodeStats:
     decode_steps: int = 0
     positions_compiled: int = 0
     speculated_positions: int = 0      # next-position prewarms scheduled
+    slow_steps: int = 0                # straggler-flagged decode steps
     prefill_latency_s: list = dataclasses.field(default_factory=list)
     step_latency_s: list = dataclasses.field(default_factory=list)
 
@@ -88,6 +90,7 @@ class DecodeStats:
             "decode_steps": self.decode_steps,
             "positions_compiled": self.positions_compiled,
             "speculated_positions": self.speculated_positions,
+            "slow_steps": self.slow_steps,
             **latency_percentiles(self.prefill_latency_s, "prefill_latency"),
             **latency_percentiles(self.step_latency_s, "step_latency"),
         }
@@ -132,6 +135,13 @@ class DecodeSession:
         self.priority = priority          # class for every step this session
         self.deadline_s = deadline_s      # per-STEP relative deadline
         self.stats = DecodeStats()
+        # liveness over STEP walls (the seed's training-loop primitives,
+        # re-aimed at serving): the heartbeat beats on every completed step
+        # — ``heartbeat.stalled()`` means no step finished for deadline_s —
+        # and the straggler detector EWMA-flags outlier decode steps
+        # (warmup absorbs the first compile-heavy positions)
+        self.heartbeat = Heartbeat(deadline_s=30.0)
+        self.straggler = StragglerDetector(threshold=3.0)
         self._steps: dict[int, Any] = {}
         self._cache_dtype = (jnp.float32 if cfg.dtype == jnp.float32
                              else jnp.bfloat16)
@@ -188,6 +198,7 @@ class DecodeSession:
             sp.set(batch=B, seq_len=S)
         self.stats.prefill_steps += 1
         self.stats.prefill_latency_s.append(time.monotonic() - t0)
+        self.heartbeat.beat()
         return logits, (ck, cv)
 
     def decode(self, tokens: jnp.ndarray, cache, position: int):
@@ -218,7 +229,16 @@ class DecodeSession:
                     self.stats.speculated_positions += 1
             logits, ck, cv = fut.result()
         self.stats.decode_steps += 1
-        self.stats.step_latency_s.append(time.monotonic() - t0)
+        wall = time.monotonic() - t0
+        self.stats.step_latency_s.append(wall)
+        self.heartbeat.beat()
+        if self.straggler.record(wall):
+            self.stats.slow_steps += 1
+            if self.server.tracer.enabled:
+                self.server.tracer.instant(
+                    "decode/slow_step", track="decode", position=position,
+                    wall_s=round(wall, 6),
+                    ewma_s=round(self.straggler.mean, 6))
         return logits, (ck, cv)
 
     def generate(self, prompts: jnp.ndarray, n_steps: int):

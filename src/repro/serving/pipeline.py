@@ -25,14 +25,15 @@ prediction.
 from __future__ import annotations
 
 import dataclasses
-import sys
+import logging
 import threading
-import traceback
 from typing import Callable, Sequence
 
 from repro.runtime.streams import ENGINE_KINDS, StreamRuntime
 
 __all__ = ["ENGINE_KINDS", "PipelineJob", "RequestPipeline"]
+
+_LOG = logging.getLogger("repro.serving.pipeline")
 
 
 @dataclasses.dataclass
@@ -56,6 +57,9 @@ class PipelineJob:
     label: str = ""
     deps: Sequence[Sequence[int]] | None = None
     step_labels: Sequence[str] | None = None
+    # per-step watchdog deadlines (seconds; None = unbounded) — forwarded to
+    # StreamEvent.timeout_s so PhaseWatchdog can poison a hung step
+    step_timeouts: Sequence[float | None] | None = None
 
     def __post_init__(self):
         for kind, _ in self.steps:
@@ -65,6 +69,11 @@ class PipelineJob:
                 len(self.step_labels) != len(self.steps):
             raise ValueError(f"step_labels length {len(self.step_labels)} "
                              f"!= steps length {len(self.steps)}")
+        if self.step_timeouts is not None and \
+                len(self.step_timeouts) != len(self.steps):
+            raise ValueError(f"step_timeouts length "
+                             f"{len(self.step_timeouts)} != steps length "
+                             f"{len(self.steps)}")
         if self.deps is not None:
             if len(self.deps) != len(self.steps):
                 raise ValueError(f"deps length {len(self.deps)} != "
@@ -94,6 +103,7 @@ class RequestPipeline:
         self._backlog: list[PipelineJob] = []
         self._in_flight = 0
         self._stop = True                 # not started yet
+        self.callback_errors = 0          # on_done callbacks that raised
 
     # --- lifecycle --------------------------------------------------------
     def start(self) -> None:
@@ -176,18 +186,44 @@ class RequestPipeline:
                      else f"{job.label}#{i}:{kind}")
             events.append(runtime.submit(
                 kind, thunk, deps=[events[d] for d in dep_idx],
-                label=label))
+                label=label,
+                timeout_s=(job.step_timeouts[i]
+                           if job.step_timeouts is not None else None)))
 
-        remaining = [len(events)]
+        # completion accounting: every event either completes (its callback
+        # decrements) or is error-aborted below before it ever issued (the
+        # abort decrements; a cancelled event never completes).  The first
+        # error pulls the job's unissued steps back — they could only
+        # produce dead work or, if their poisoned dependency was
+        # watchdog-cancelled, wedge the job forever.
+        state = {"remaining": len(events), "err": None, "finished": False}
         counter_lock = threading.Lock()
 
-        def on_event_done(_ev) -> None:
+        def on_event_done(ev) -> None:
+            first_error = False
             with counter_lock:
-                remaining[0] -= 1
-                if remaining[0]:
+                state["remaining"] -= 1
+                if ev.error is not None and state["err"] is None:
+                    state["err"] = ev.error
+                    first_error = True
+            if first_error:
+                aborted = 0
+                for other in events:
+                    if other.done or other.cancelled:
+                        continue
+                    if runtime.try_cancel(other):
+                        aborted += 1
+                if aborted:
+                    with counter_lock:
+                        state["remaining"] -= aborted
+            with counter_lock:
+                if state["remaining"] or state["finished"]:
                     return
-            err = next((ev.error for ev in events if ev.error is not None),
-                       None)
+                state["finished"] = True
+                err = state["err"]
+            if err is None:
+                err = next((e.error for e in events if e.error is not None),
+                           None)
             self._finish(job, err)
 
         for ev in events:
@@ -201,9 +237,9 @@ class RequestPipeline:
             # (it would stall every later job of this engine), but it must
             # not vanish either: the callback owns future resolution, so a
             # failure here likely strands clients
-            print(f"[repro.serving] on_done callback failed for "
-                  f"job {job.label!r}:", file=sys.stderr)
-            traceback.print_exc()
+            _LOG.exception("on_done callback failed for job %r", job.label)
+            with self._lock:
+                self.callback_errors += 1
         with self._drained:
             self._in_flight -= 1
             # keep admitting during stop(): it drains the backlog, it does

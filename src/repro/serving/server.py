@@ -23,12 +23,21 @@ The request path:
    the measured one.
 5. Results are split back per request and futures resolve bit-exact with
    direct ``fn(*args)`` calls.
+
+Failure handling (``docs/robustness.md``): a failed group enters
+bisect-retry **isolation** on a dedicated retry worker — the stacked batch
+is re-executed in halves down to singletons so only the request(s) actually
+poisoning it keep the error and innocents resolve bit-exact; a hung phase is
+poisoned by the :class:`~repro.ft.watchdog.PhaseWatchdog` (enabled via
+``phase_timeout_factor``); a TMU phase whose kernel path raises falls down
+the ``degrade_backends`` ladder and the entry remembers the working backend.
 """
 
 from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import logging
 import threading
 import time
 from typing import Any, Callable
@@ -49,7 +58,18 @@ from repro.serving.cache import (CacheEntry, CacheKey, CompileCache,
 from repro.serving.pipeline import PipelineJob, RequestPipeline
 from repro.serving.stats import ServerStats
 
+_LOG = logging.getLogger("repro.serving.server")
+
 DEFAULT_SEGMENT_CANDIDATES = (4096, 16384, 65536)
+
+
+class DrainTimeoutError(RuntimeError):
+    """:meth:`TMServer.drain` timed out; ``pending`` holds diagnostic rows
+    (engine, label, state, age_s) for the stream work still undone."""
+
+    def __init__(self, message: str, pending: list[dict] | None = None):
+        super().__init__(message)
+        self.pending = pending or []
 
 # request priority classes (repro.sched): lower rank schedules first.  A
 # request carrying a deadline is always deadline-class; the continuous
@@ -97,9 +117,26 @@ class ServerConfig:
     preempt_margin_s: float = 0.002  # deadline slack floor before preempting
     aging_s: float = 0.05            # waiting this long boosts one class
     speculative: bool = False        # pre-compile the next likely bucket
+    # --- fault tolerance (repro.ft, docs/robustness.md) -------------------
+    # bisect-retry isolation: a failed group is re-executed in halves down
+    # to singletons so only the poisoning request(s) keep the error;
+    # retry_attempts bounds re-executions of one singleton (0 = groups fail
+    # whole, no isolation), retry_backoff_s is the base of the exponential
+    # backoff between rounds
+    retry_attempts: int = 2
+    retry_backoff_s: float = 0.01
+    # per-phase watchdog: deadline = max(floor, factor * predicted wall),
+    # attached to WARM (cache-hit) executions only — cold runs include jit
+    # tracing and would false-trip.  factor 0.0 disables the watchdog.
+    phase_timeout_factor: float = 0.0
+    phase_timeout_floor_s: float = 0.25
+    # backend ladder a failing TMU phase falls down (in order, skipping the
+    # entry's own backend); the working rung is memoized per (entry, phase)
+    degrade_backends: tuple[str, ...] = ("fused", "reference")
 
     def __post_init__(self):
-        for b in (self.backend,) + self.backend_candidates:
+        for b in (self.backend,) + self.backend_candidates \
+                + self.degrade_backends:
             if b not in BACKENDS:
                 raise ValueError(f"unknown backend {b!r}; expected {BACKENDS}")
         if self.max_batch < 1 or self.max_batch & (self.max_batch - 1):
@@ -108,6 +145,12 @@ class ServerConfig:
         if self.scheduler not in ("continuous", "fifo"):
             raise ValueError(f"unknown scheduler {self.scheduler!r}; "
                              f"expected 'continuous' or 'fifo'")
+        if self.retry_attempts < 0:
+            raise ValueError(f"retry_attempts must be >= 0, "
+                             f"got {self.retry_attempts}")
+        if self.phase_timeout_factor < 0:
+            raise ValueError(f"phase_timeout_factor must be >= 0, "
+                             f"got {self.phase_timeout_factor}")
 
 
 # ---------------------------------------------------------------------------
@@ -198,6 +241,28 @@ def _size(shape: tuple[int, ...]) -> int:
     return n
 
 
+def predict_phase_cycles(compiled: CompiledTMProgram, phase,
+                         fuse_chains: bool = False) -> float:
+    """Cycle-model price of ONE phase — the watchdog's deadline input.
+
+    TMU phases use their scheduled (or realized-chained) cycles; TPU phases
+    use the same data-movement proxy as :func:`predict_cycles`, restricted
+    to the phase's nodes."""
+    if phase.kind == "tmu":
+        if phase.schedule is None:
+            return 0.0
+        return (phase.schedule.chained_cycles if fuse_chains
+                else phase.schedule.forwarded_cycles)
+    p = compiled.params or CycleParams()
+    nodes = compiled.graph.nodes
+    elems = sum(
+        _size(compiled.graph.shape(n))
+        for i in phase.node_indices
+        for n in tuple(nodes[i].src_names) + tuple(nodes[i].dst_names)
+        if n is not None)
+    return elems * p.itemsize / p.bandwidth_bytes
+
+
 def predict_overlap(compiled: CompiledTMProgram,
                     fuse_chains: bool = False) -> float:
     """Steady-state fraction of busy time the two-engine pipeline hides:
@@ -235,6 +300,9 @@ class _AdmittedBatch:
     deps: list                      # per-phase dep indices (earlier phases)
     step_labels: list | None        # stream-event labels at "phase" detail
     label: str
+    # per-phase watchdog deadlines (seconds; None = unbounded) — set only
+    # for WARM executions when the watchdog is enabled
+    step_timeouts: list | None = None
 
 
 class TMServer:
@@ -257,6 +325,11 @@ class TMServer:
         self._queue = BucketQueue()
         self._batcher: threading.Thread | None = None
         self._admit_pool: concurrent.futures.ThreadPoolExecutor | None = None
+        # failure isolation runs on its own worker, off the engine streams
+        # and the admission pool — a retry must never deadlock behind the
+        # (possibly wedged) work it is recovering from.  Shut down LAST.
+        self._retry_pool: concurrent.futures.ThreadPoolExecutor | None = None
+        self.watchdog = None            # PhaseWatchdog when enabled
         self._stopping = False
         self._started = False
         self._outstanding = 0
@@ -290,6 +363,8 @@ class TMServer:
         self._stopping = False
         self._admit_pool = concurrent.futures.ThreadPoolExecutor(
             max_workers=2, thread_name_prefix="tm-serve-admit")
+        self._retry_pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="tm-serve-retry")
         if self.pipeline is not None:
             self.pipeline.start()
             self._batcher = threading.Thread(
@@ -297,6 +372,16 @@ class TMServer:
             self._batcher.start()
         else:
             self.sched.start()
+        if self.config.phase_timeout_factor > 0:
+            # deferred import: repro.ft imports the serving layer's hosts
+            from repro.ft.watchdog import PhaseWatchdog
+            runtime = (self.pipeline.runtime if self.pipeline is not None
+                       else self.sched.runtime)
+            self.watchdog = PhaseWatchdog(
+                runtime, floor_s=self.config.phase_timeout_floor_s,
+                factor=self.config.phase_timeout_factor,
+                tracer=self.tracer, stats=self.stats)
+            self.watchdog.start()
         return self
 
     def stop(self) -> None:
@@ -315,6 +400,13 @@ class TMServer:
             self._stopping = True
             self.sched.stop()          # drains queued + in-flight groups
             self._admit_pool.shutdown(wait=True)
+        if self.watchdog is not None:
+            self.watchdog.stop()
+            self.watchdog = None
+        # last: isolation re-executes blocking (no streams), so failed
+        # groups handed off before the drain still resolve their futures
+        self._retry_pool.shutdown(wait=True)
+        self._retry_pool = None
         self._started = False
 
     def __enter__(self) -> "TMServer":
@@ -389,6 +481,33 @@ class TMServer:
                 self._idle.wait(timeout=0.05 if left is None
                                 else min(left, 0.05))
             return True
+
+    def drain(self, timeout: float | None = None) -> None:
+        """Like :meth:`flush`, but a timeout RAISES — with a diagnostic of
+        exactly what is stuck — instead of silently returning False and
+        leaving the caller to hang (or guess) at :meth:`stop`.
+
+        :class:`DrainTimeoutError` lists the outstanding request count and
+        every undone stream task (engine, label, running/queued, age) from
+        :meth:`~repro.runtime.streams.StreamRuntime.pending`."""
+        if self.flush(timeout=timeout):
+            return
+        runtime = None
+        if self.pipeline is not None:
+            runtime = self.pipeline.runtime
+        elif self.sched is not None:
+            runtime = self.sched.runtime
+        rows = runtime.pending() if runtime is not None else []
+        with self._idle:
+            outstanding = self._outstanding
+        detail = "; ".join(
+            f"{r['engine']}:{r['label'] or '<unlabelled>'} [{r['state']}] "
+            f"age={r['age_s']:.2f}s" for r in rows)
+        raise DrainTimeoutError(
+            f"drain timed out after {timeout}s: {outstanding} request(s) "
+            f"outstanding; stream backlog: "
+            f"{detail or 'empty (work queued before dispatch?)'}",
+            pending=rows)
 
     def prewarm(self, fn: Callable, *args, fn_key: str | None = None,
                 height: int = 1) -> bool:
@@ -477,7 +596,8 @@ class TMServer:
             self.pipeline.submit(PipelineJob(
                 steps=prep.steps, deps=prep.deps,
                 on_done=lambda err: self._finalize(prep, err),
-                label=prep.label, step_labels=prep.step_labels))
+                label=prep.label, step_labels=prep.step_labels,
+                step_timeouts=prep.step_timeouts))
         except BaseException as e:  # noqa: BLE001 — shutdown race
             self._fail_batch(prep.batch, e, cold=not prep.hit)
 
@@ -556,22 +676,43 @@ class TMServer:
             for r in batch:
                 self.stats.record_queue_delay(t - r.t_submit)
 
-        def make_step(ph):
+        # watchdog deadlines: every phase execution calibrates the
+        # seconds-per-cycle estimate; deadlines attach to WARM runs only
+        # (a cold run includes jit tracing and would false-trip the monitor)
+        wd = self.watchdog
+        pred = None
+        if wd is not None:
+            pred = entry.phase_cycle_pred
+            if pred is None:
+                pred = tuple(predict_phase_cycles(compiled, p,
+                                                  entry.fuse_chains)
+                             for p in phases)
+                entry.phase_cycle_pred = pred
+        step_timeouts = ([wd.deadline_for(c) for c in pred]
+                         if wd is not None and hit else None)
+
+        def make_step(ph, pred_cycles):
             def run():
                 mark_started()
-                return self._run_phase(compiled, ph, env, entry.backend,
-                                       entry.fuse_chains,
-                                       traced=detail == "instr")
+                t0 = time.monotonic()
+                out = self._run_phase(compiled, ph, env, entry,
+                                      traced=detail == "instr")
+                if wd is not None and pred_cycles:
+                    wd.calibrate(pred_cycles, time.monotonic() - t0)
+                return out
             return run
 
-        steps = [(phase.engine, make_step(phase)) for phase in phases]
+        steps = [(phase.engine,
+                  make_step(phase, pred[i] if pred is not None else 0.0))
+                 for i, phase in enumerate(phases)]
         deps = [phase.deps for phase in phases]
         step_labels = ([f"phase/{p.index}/{p.kind}" for p in phases]
                        if detail == "phase" else None)
         return _AdmittedBatch(batch=batch, n=n, size=size, hit=hit,
                               entry=entry, env=env, phases=phases,
                               steps=steps, deps=deps, step_labels=step_labels,
-                              label=f"{batch[0].fn_key}x{size}")
+                              label=f"{batch[0].fn_key}x{size}",
+                              step_timeouts=step_timeouts)
 
     def _finalize(self, prep: _AdmittedBatch,
                   err: BaseException | None) -> None:
@@ -587,14 +728,13 @@ class TMServer:
             except BaseException as e:  # noqa: BLE001 — futures must
                 err = e                 # resolve no matter what
         if err is not None:
-            for r in batch:
-                r.future.set_exception(err)
-                self.stats.record_done(t_end - r.t_submit,
-                                       cold=not hit, failed=True)
-        else:
-            for r, res in zip(batch, parts):
-                r.future.set_result(res)
-                self.stats.record_done(t_end - r.t_submit, cold=not hit)
+            # failed group: hand off to bisect-retry isolation (or fail
+            # whole when isolation is off) — futures resolve there
+            self._fail_batch(batch, err, cold=not hit)
+            return
+        for r, res in zip(batch, parts):
+            r.future.set_result(res)
+            self.stats.record_done(t_end - r.t_submit, cold=not hit)
         if self.tracer.enabled:
             # one span per request on the requests track: submit ->
             # respond, the client-visible latency
@@ -602,31 +742,158 @@ class TMServer:
                 self.tracer.add_span(
                     f"request/{r.fn_key}", "requests",
                     r.t_submit, t_end, overlap_ok=True,
-                    cold=not hit, ok=err is None)
+                    cold=not hit, ok=True)
         self._release(prep.n)
 
     def _run_phase(self, compiled: CompiledTMProgram, phase, env: dict,
-                   backend: str, fuse_chains: bool = False,
-                   traced: bool = False) -> list:
+                   entry: CacheEntry, traced: bool = False) -> list:
         # ``traced`` only at Tracer(detail="instr"): the default phase-level
         # timing comes from the stream event's span (see _process_batch)
-        compiled.run_phase(phase, env, backend=backend,
-                           interpret=self.config.interpret,
-                           fuse_chains=fuse_chains,
-                           exact=self.config.exact,
-                           tracer=self.tracer if traced else None)
+        cfg = self.config
+        tracer = self.tracer if traced else None
+        backend = entry.degraded_phases.get(phase.index, entry.backend)
+        try:
+            compiled.run_phase(phase, env, backend=backend,
+                               interpret=cfg.interpret,
+                               fuse_chains=(entry.fuse_chains
+                                            and backend == entry.backend),
+                               exact=cfg.exact, tracer=tracer,
+                               quarantine=entry.quarantine)
+        except Exception as e:  # noqa: BLE001 — degradation ladder below
+            if phase.kind != "tmu":
+                raise  # TPU phases have no alternative backend to fall to
+            err: Exception = e
+            for rung in cfg.degrade_backends:
+                if rung == backend:
+                    continue
+                try:
+                    # phase thunks are pure writes into env, so the retry
+                    # simply overwrites whatever the failed attempt left
+                    compiled.run_phase(phase, env, backend=rung,
+                                       interpret=cfg.interpret,
+                                       fuse_chains=False, exact=cfg.exact,
+                                       tracer=tracer,
+                                       quarantine=entry.quarantine)
+                except Exception as e2:  # noqa: BLE001 — next rung
+                    err = e2
+                    continue
+                # memoize: warm traffic on this entry runs the working
+                # rung directly instead of re-failing the preferred one
+                entry.degraded_phases[phase.index] = rung
+                self.stats.record_degraded_phase()
+                _LOG.warning(
+                    "phase %d of %r degraded from backend %r to %r: %s",
+                    phase.index, str(entry.key.fn_key), backend, rung, e)
+                if self.tracer.enabled:
+                    self.tracer.instant(
+                        "ft/degrade", track="server", phase=phase.index,
+                        fn_key=str(entry.key.fn_key), backend=rung)
+                break
+            else:
+                raise err
         # return the written buffers: the stream resolves them before
         # stamping the event, so busy time is realized compute, not async
         # dispatch latency
         return [env[name] for name in phase.writes]
 
     def _fail_batch(self, batch: list[Request], err: BaseException,
-                    *, cold: bool) -> None:
+                    *, cold: bool, isolate: bool = True) -> None:
+        """Deliver a group failure: to bisect-retry isolation when enabled
+        (futures resolve on the retry worker), else to every member."""
+        pool = self._retry_pool
+        if isolate and self.config.retry_attempts > 0 and pool is not None \
+                and not isinstance(err, concurrent.futures.CancelledError):
+            try:
+                pool.submit(self._isolate, list(batch), err)
+                return
+            except RuntimeError:
+                pass    # pool already shut down: fail directly below
         t_end = time.monotonic()
         for r in batch:
             r.future.set_exception(err)
             self.stats.record_done(t_end - r.t_submit, cold=cold, failed=True)
         self._release(len(batch))
+
+    def _isolate(self, batch: list[Request], err: BaseException) -> None:
+        """Failure isolation on the retry worker: re-execute the failed
+        group bisected — whole, then halves, down to singletons — so only
+        the request(s) actually poisoning it keep an error and innocents
+        resolve bit-exact.  Re-execution is blocking (compile cache + direct
+        ``CompiledTMProgram.run``, no streams), bounded by
+        ``retry_attempts`` singleton retries with exponential backoff."""
+        cfg = self.config
+        self.stats.record_group_fault()
+        if self.tracer.enabled:
+            self.tracer.instant("ft/isolate", track="server",
+                                requests=len(batch), error=type(err).__name__)
+        rescued = 0
+        resolved: set[int] = set()   # indices into batch, for crash safety
+        index = {id(r): i for i, r in enumerate(batch)}
+        try:
+            stack: list[tuple[list[Request], int, BaseException]] = \
+                [(list(batch), 1, err)]
+            while stack:
+                members, attempt, last_err = stack.pop()
+                time.sleep(cfg.retry_backoff_s * (2 ** (attempt - 1)))
+                self.stats.record_isolation_retry()
+                try:
+                    parts = self._execute_direct(members)
+                except Exception as e:  # noqa: BLE001 — bisect or give up
+                    if len(members) > 1:
+                        mid = len(members) // 2
+                        stack.append((members[:mid], attempt + 1, e))
+                        stack.append((members[mid:], attempt + 1, e))
+                    elif attempt < cfg.retry_attempts:
+                        stack.append((members, attempt + 1, e))
+                    else:
+                        self._deliver(members[0], None, e, resolved, index)
+                    continue
+                for r, res in zip(members, parts):
+                    self._deliver(r, res, None, resolved, index)
+                rescued += len(members)
+        except BaseException as e:  # noqa: BLE001 — isolation itself broke:
+            # futures MUST still resolve or clients hang and drain deadlocks
+            _LOG.exception("isolation of %d request(s) failed", len(batch))
+            for i, r in enumerate(batch):
+                if i not in resolved:
+                    self._deliver(r, None, e, resolved, index)
+        if rescued:
+            self.stats.record_rescued(rescued)
+        if self.tracer.enabled:
+            self.tracer.instant("ft/isolated", track="server",
+                                rescued=rescued,
+                                victims=len(batch) - rescued)
+
+    def _deliver(self, r: Request, result, err: BaseException | None,
+                 resolved: set, index: dict) -> None:
+        t = time.monotonic()
+        if err is None:
+            r.future.set_result(result)
+            self.stats.record_done(t - r.t_submit, cold=False)
+        else:
+            r.future.set_exception(err)
+            self.stats.record_done(t - r.t_submit, cold=False, failed=True)
+            self.stats.record_victims(1)
+        resolved.add(index[id(r)])
+        self._release(1)
+
+    def _execute_direct(self, members: list[Request]):
+        """Blocking re-execution of ``members`` as one coalesced group:
+        same compile cache, same entry config — so a rescued result is
+        bit-exact with the non-faulted serving path — but no streams (this
+        runs on the retry worker, possibly after the engines stopped)."""
+        cfg = self.config
+        size = bucket_size(len(members), cfg.max_batch)
+        stacked, _ = coalesce(members, size)
+        key = CacheKey.for_call(members[0].fn, stacked, backend=cfg.backend,
+                                params=None, fn_key=members[0].fn_key)
+        entry, _ = self.cache.get_or_compile(
+            key, lambda: self._build_entry(key, members[0].fn, stacked))
+        outs, _ = entry.compiled.run(
+            *stacked, backend=entry.backend, interpret=cfg.interpret,
+            fuse_chains=entry.fuse_chains, exact=cfg.exact,
+            quarantine=entry.quarantine)
+        return split(outs, len(members))
 
     def _release(self, n: int) -> None:
         with self._idle:

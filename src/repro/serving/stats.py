@@ -83,6 +83,16 @@ class ServerStats:
     recent_intervals: int = _RECENT_INTERVALS
     dropped_intervals: int = 0
 
+    # --- fault/recovery ledger (repro.ft, docs/robustness.md) -------------
+    group_faults: int = 0          # batched groups whose execution failed
+    #                                and entered bisect-retry isolation
+    isolation_retries: int = 0     # sub-group re-executions charged by it
+    rescued_requests: int = 0      # innocents resolved by isolation
+    victim_requests: int = 0       # requests that kept their error
+    phase_timeouts: int = 0        # watchdog-poisoned hung phases
+    slow_phases: int = 0           # straggler-detector flags (no failure)
+    degraded_phases: int = 0       # phase-level backend-ladder fallbacks
+
     def __post_init__(self):
         self._lock = threading.Lock()
         # overlap accounting is INCREMENTAL — O(1) state and snapshot cost
@@ -176,6 +186,35 @@ class ServerStats:
         with self._lock:
             self.predicted_overlap.append(ratio)
 
+    # --- fault/recovery recording -----------------------------------------
+    def record_group_fault(self) -> None:
+        with self._lock:
+            self.group_faults += 1
+
+    def record_isolation_retry(self, n: int = 1) -> None:
+        with self._lock:
+            self.isolation_retries += n
+
+    def record_rescued(self, n: int = 1) -> None:
+        with self._lock:
+            self.rescued_requests += n
+
+    def record_victims(self, n: int = 1) -> None:
+        with self._lock:
+            self.victim_requests += n
+
+    def record_phase_timeout(self) -> None:
+        with self._lock:
+            self.phase_timeouts += 1
+
+    def record_slow_phase(self) -> None:
+        with self._lock:
+            self.slow_phases += 1
+
+    def record_degraded_phase(self) -> None:
+        with self._lock:
+            self.degraded_phases += 1
+
     # --- derived ----------------------------------------------------------
     def _measure_locked(self) -> dict:
         any_busy = sum(self._busy.values()) - self._both_busy
@@ -230,6 +269,13 @@ class ServerStats:
                 **latency_percentiles(list(self.queue_delay_s),
                                       "queue_delay"),
                 "predicted_overlap": pred,
+                "group_faults": self.group_faults,
+                "isolation_retries": self.isolation_retries,
+                "rescued_requests": self.rescued_requests,
+                "victim_requests": self.victim_requests,
+                "phase_timeouts": self.phase_timeouts,
+                "slow_phases": self.slow_phases,
+                "degraded_phases": self.degraded_phases,
             }
             snap.update(self._measure_locked())
         return snap

@@ -1,0 +1,450 @@
+"""Fault-injection + recovery tests (repro.ft, docs/robustness.md).
+
+The acceptance bar: seeded fault plans are deterministic; a transiently
+faulted group is bisect-retried so innocents resolve BIT-EXACT on every
+backend while a persistently poisoned request keeps its own error; a hung
+phase is watchdog-poisoned without killing the engine; a failing pallas
+kernel degrades down the backend ladder and the cache entry remembers; and
+``drain`` surfaces a diagnostic instead of hanging forever.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.executor import BACKENDS
+from repro.ft import (FaultInjector, FaultPlan, FaultSpec, InjectedFault,
+                      PhaseTimeoutError, PhaseWatchdog, SITES,
+                      active_injector)
+from repro.runtime.fault_tolerance import (Heartbeat, RestartSupervisor,
+                                           StragglerDetector)
+from repro.runtime.streams import StreamRuntime
+from repro.serving import (DrainTimeoutError, PipelineJob, ServerConfig,
+                           TMServer)
+
+
+# module-level so every request shares one fn identity (one bucket lineage)
+def _tm_fn(x):
+    h = jnp.transpose(x, (1, 0))
+    return h + 1.0
+
+
+def _args(i=0):
+    return jnp.arange(12, dtype=jnp.float32).reshape(3, 4) + float(i)
+
+
+def _assert_bitexact(got, want):
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# plans + injector mechanics
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(site="gpu")
+    with pytest.raises(ValueError):
+        FaultSpec(site="phase", mode="explode")
+    with pytest.raises(ValueError):
+        FaultSpec(site="phase", p=1.5)
+    with pytest.raises(ValueError):
+        FaultSpec(site="phase", count=-1)
+    assert set(SITES) == {"phase", "lowering", "compile", "stream"}
+
+
+def test_injector_probabilistic_firing_is_seed_deterministic():
+    plan = FaultPlan(specs=(FaultSpec(site="stream", p=0.5, count=10**9),),
+                     seed=42)
+
+    def trace(plan):
+        fired = []
+        inj = FaultInjector(plan)
+        for i in range(64):
+            try:
+                inj.fire("stream", f"tmu:job{i}")
+                fired.append(0)
+            except InjectedFault:
+                fired.append(1)
+        return fired
+
+    a, b = trace(plan), trace(plan)
+    assert a == b
+    assert 0 < sum(a) < 64  # p=0.5 actually mixes
+    other = trace(FaultPlan(specs=plan.specs, seed=43))
+    assert other != a  # the seed is load-bearing
+
+
+def test_injector_installs_and_clears_all_site_hooks():
+    import repro.compiler.api as api
+    import repro.core.dispatch as dispatch
+    import repro.runtime.streams as streams
+    import repro.serving.cache as cache
+
+    hosts = [api, dispatch, streams, cache]
+    assert all(m.fault_hook is None for m in hosts)
+    inj = FaultInjector(FaultPlan(specs=()))
+    with inj:
+        assert all(m.fault_hook == inj.fire for m in hosts)
+        assert active_injector() is inj
+        # one active injector at a time: overlapping installs would make
+        # occurrence counts meaningless
+        with pytest.raises(RuntimeError):
+            FaultInjector(FaultPlan(specs=())).install()
+    assert all(m.fault_hook is None for m in hosts)
+    assert active_injector() is None
+
+
+def test_injector_match_after_and_count():
+    spec = FaultSpec(site="phase", match="tmu", mode="fail", after=1, count=2)
+    inj = FaultInjector(FaultPlan(specs=(spec,)))
+    inj.fire("phase", "phase/0/tpu")      # wrong label: no match
+    inj.fire("phase", "phase/0/tmu")      # occurrence 0: skipped by after=1
+    for _ in range(2):                    # occurrences 1..2 fire
+        with pytest.raises(InjectedFault):
+            inj.fire("phase", "phase/0/tmu")
+    inj.fire("phase", "phase/0/tmu")      # count exhausted
+    assert inj.fired == 2
+    assert [m for (_, _, m) in inj.log] == ["fail", "fail"]
+
+
+def test_injector_hang_released_by_uninstall():
+    spec = FaultSpec(site="stream", mode="hang", count=1, delay_s=30.0)
+    inj = FaultInjector(FaultPlan(specs=(spec,)))
+    inj.install()
+    t0 = time.monotonic()
+    done = threading.Event()
+
+    def hangs():
+        inj.fire("stream", "tmu:x")
+        done.set()
+
+    t = threading.Thread(target=hangs, daemon=True)
+    t.start()
+    time.sleep(0.05)
+    inj.uninstall()                       # releases every in-flight hang
+    assert done.wait(timeout=5.0)
+    assert time.monotonic() - t0 < 5.0
+
+
+# ---------------------------------------------------------------------------
+# seed liveness primitives (fault_tolerance.py)
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_beat_and_stall_with_fake_clock():
+    now = [0.0]
+    hb = Heartbeat(deadline_s=10.0, clock=lambda: now[0])
+    assert not hb.stalled()
+    now[0] = 9.0
+    assert not hb.stalled() and hb.seconds_since_beat() == 9.0
+    now[0] = 11.0
+    assert hb.stalled()
+    hb.beat()
+    assert not hb.stalled() and hb.seconds_since_beat() == 0.0
+
+
+def test_straggler_detector_warmup_then_flags_outliers():
+    det = StragglerDetector(threshold=2.0)
+    # warmup: the first three samples (compile steps) never flag
+    assert not any(det.record(s) for s in (5.0, 0.1, 0.1))
+    for _ in range(5):
+        assert not det.record(0.1)      # steady state
+    mean = det.mean
+    assert det.record(mean * 10)        # a 10x outlier flags
+    assert det.flagged == 1
+    assert det.mean > mean              # and still folds into the EWMA
+
+
+def test_restart_supervisor_bounded_restarts():
+    calls = []
+
+    def loop(step, state):
+        calls.append(step)
+        if len(calls) < 3:
+            raise RuntimeError("node lost")
+        return "done"
+
+    sup = RestartSupervisor(max_restarts=3)
+    assert sup.run(loop, lambda: (0, None)) == "done"
+    assert sup.restarts == 2
+    sup2 = RestartSupervisor(max_restarts=1)
+    with pytest.raises(RuntimeError):
+        sup2.run(lambda *a: (_ for _ in ()).throw(RuntimeError("x")),
+                 lambda: (0, None))
+
+
+# ---------------------------------------------------------------------------
+# watchdog over a raw runtime
+# ---------------------------------------------------------------------------
+
+def test_watchdog_poisons_hung_task_and_stream_survives():
+    with StreamRuntime() as rt:
+        wd = PhaseWatchdog(rt, floor_s=0.1, poll_s=0.005)
+        with wd:
+            ev = rt.submit("tmu", lambda: time.sleep(3.0), label="hung",
+                           timeout_s=0.15)
+            with pytest.raises(PhaseTimeoutError):
+                ev.wait(timeout=5.0)
+            assert ev.done and isinstance(ev.error, PhaseTimeoutError)
+            # the replaced worker keeps the stream serving
+            ev2 = rt.submit("tmu", lambda: 42, label="next")
+            assert ev2.wait(timeout=5.0) == 42
+        assert wd.timeouts == 1
+        snap = wd.snapshot()
+        assert snap["timeouts"] == 1 and not snap["stalled"]
+
+
+def test_watchdog_calibration_scales_deadlines():
+    with StreamRuntime() as rt:
+        wd = PhaseWatchdog(rt, floor_s=0.01, factor=10.0)
+        assert wd.deadline_for(1000.0) == 0.01      # floor until calibrated
+        wd.calibrate(1000.0, 0.5)                   # 0.5ms/cycle
+        assert wd.deadline_for(1000.0) == pytest.approx(10.0 * 0.5)
+        assert wd.deadline_for(0.0) == 0.01         # unpriced: floor
+
+
+def test_stream_callback_errors_are_counted_not_printed(capsys):
+    with StreamRuntime() as rt:
+        ev = rt.submit("tmu", lambda: 1, label="cb")
+
+        def bad_callback(event):
+            raise RuntimeError("callback bug")
+
+        ev.add_done_callback(bad_callback)
+        assert ev.wait(timeout=5.0)
+        deadline = time.monotonic() + 5.0
+        while rt.callback_errors() == 0 and time.monotonic() < deadline:
+            time.sleep(0.01)
+    assert rt.callback_errors() == 1
+    out = capsys.readouterr()
+    assert "callback bug" not in out.out + out.err  # logging, not stdout
+
+
+# ---------------------------------------------------------------------------
+# pipeline job plumbing
+# ---------------------------------------------------------------------------
+
+def test_pipeline_job_step_timeouts_length_validated():
+    with pytest.raises(ValueError):
+        PipelineJob(steps=[("tmu", lambda: 1), ("tpu", lambda: 2)],
+                    on_done=lambda e: None, step_timeouts=[0.1])
+
+
+def test_server_config_ft_knob_validation():
+    with pytest.raises(ValueError):
+        ServerConfig(retry_attempts=-1)
+    with pytest.raises(ValueError):
+        ServerConfig(phase_timeout_factor=-0.5)
+    with pytest.raises(ValueError):
+        ServerConfig(degrade_backends=("warp",))
+
+
+# ---------------------------------------------------------------------------
+# failure isolation through TMServer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bisect_retry_rescues_innocents_bit_exact(backend):
+    """A count=3 phase fault fails the group execution, the whole-group
+    retry AND one half — forcing a real bisect — yet every request resolves
+    bit-exact and nothing is a victim.  The fault targets the TPU phase: a
+    faulted TMU phase would be absorbed by the backend ladder first (see
+    test_phase_ladder_degrades_and_memoizes), never reaching isolation."""
+    xs = [_args(i) for i in range(4)]
+    plan = FaultPlan(specs=(FaultSpec(site="phase", match="tpu",
+                                      mode="fail", count=3),), seed=3)
+    with TMServer(ServerConfig(max_batch=4, batch_timeout_s=0.05,
+                               backend=backend, retry_attempts=2)) as srv:
+        with FaultInjector(plan) as inj:
+            futs = [srv.submit(_tm_fn, x) for x in xs]
+            res = [f.result(timeout=120) for f in futs]
+        snap = srv.snapshot_stats()
+    assert inj.fired == 3
+    for r, x in zip(res, xs):
+        _assert_bitexact(r, _tm_fn(x))
+    assert snap["group_faults"] >= 1
+    assert snap["isolation_retries"] >= 3   # group + at least half + half
+    assert snap["rescued_requests"] == 4
+    assert snap["victim_requests"] == 0
+
+
+def test_poisoned_request_is_the_only_victim():
+    def _poison_fn(x):
+        raise ValueError("poisoned request")
+
+    xs = [_args(i) for i in range(4)]
+    with TMServer(ServerConfig(max_batch=4, batch_timeout_s=0.02,
+                               retry_attempts=2)) as srv:
+        victim = srv.submit(_poison_fn, xs[0], fn_key="poison")
+        good = [srv.submit(_tm_fn, x) for x in xs]
+        for f, x in zip(good, xs):
+            _assert_bitexact(f.result(timeout=120), _tm_fn(x))
+        with pytest.raises(ValueError, match="poisoned request"):
+            victim.result(timeout=120)
+        snap = srv.snapshot_stats()
+    assert snap["victim_requests"] == 1
+    assert snap["failed"] == 1
+
+
+def test_persistent_fault_bounds_retries_and_server_recovers():
+    x = _args()
+    plan = FaultPlan(
+        specs=(FaultSpec(site="phase", mode="fail", count=10**9),), seed=4)
+    with TMServer(ServerConfig(max_batch=4, batch_timeout_s=0.05,
+                               retry_attempts=1)) as srv:
+        with FaultInjector(plan):
+            futs = [srv.submit(_tm_fn, _args(i)) for i in range(4)]
+            for f in futs:
+                with pytest.raises(InjectedFault):
+                    f.result(timeout=120)
+        # injector gone: the same server serves again
+        _assert_bitexact(srv(_tm_fn, x), _tm_fn(x))
+        snap = srv.snapshot_stats()
+    assert snap["victim_requests"] == 4
+    assert snap["group_faults"] >= 1
+
+
+def test_fifo_scheduler_isolation_path():
+    xs = [_args(i) for i in range(4)]
+    plan = FaultPlan(specs=(FaultSpec(site="stream", mode="fail", count=1),),
+                     seed=9)
+    with TMServer(ServerConfig(max_batch=4, batch_timeout_s=0.05,
+                               scheduler="fifo", retry_attempts=2)) as srv:
+        with FaultInjector(plan):
+            futs = [srv.submit(_tm_fn, x) for x in xs]
+            res = [f.result(timeout=120) for f in futs]
+        snap = srv.snapshot_stats()
+    for r, x in zip(res, xs):
+        _assert_bitexact(r, _tm_fn(x))
+    assert snap["rescued_requests"] == 4 and snap["victim_requests"] == 0
+
+
+def test_isolation_off_fails_group_whole():
+    plan = FaultPlan(specs=(FaultSpec(site="stream", mode="fail", count=1),),
+                     seed=11)
+    with TMServer(ServerConfig(max_batch=4, batch_timeout_s=0.05,
+                               retry_attempts=0)) as srv:
+        with FaultInjector(plan):
+            futs = [srv.submit(_tm_fn, _args(i)) for i in range(4)]
+            for f in futs:
+                with pytest.raises(InjectedFault):
+                    f.result(timeout=120)
+        snap = srv.snapshot_stats()
+    assert snap["group_faults"] == 0    # isolation never engaged
+    assert snap["failed"] == 4
+
+
+# ---------------------------------------------------------------------------
+# watchdog through TMServer
+# ---------------------------------------------------------------------------
+
+def test_hung_phase_times_out_and_engine_keeps_serving():
+    x = _args()
+    cfg = ServerConfig(max_batch=1, batch_timeout_s=0.0, retry_attempts=0,
+                       phase_timeout_factor=5.0, phase_timeout_floor_s=0.15)
+    with TMServer(cfg) as srv:
+        assert srv.watchdog is not None
+        _assert_bitexact(srv(_tm_fn, x), _tm_fn(x))   # warm the entry
+        plan = FaultPlan(specs=(FaultSpec(site="stream", mode="hang",
+                                          count=1, delay_s=10.0),), seed=7)
+        with FaultInjector(plan):
+            fut = srv.submit(_tm_fn, x)
+            with pytest.raises(PhaseTimeoutError):
+                fut.result(timeout=120)
+        # the poisoned worker was replaced: same server, same entry, served
+        _assert_bitexact(srv(_tm_fn, x), _tm_fn(x))
+        snap = srv.snapshot_stats()
+        wd = srv.watchdog.snapshot()
+    assert snap["phase_timeouts"] == 1
+    assert wd["timeouts"] == 1
+    assert wd["s_per_cycle"] is not None   # phase walls calibrated it
+
+
+def test_hung_group_is_rescued_when_isolation_on():
+    cfg = ServerConfig(max_batch=2, batch_timeout_s=0.02, retry_attempts=2,
+                       phase_timeout_factor=5.0, phase_timeout_floor_s=0.15)
+    with TMServer(cfg) as srv:
+        # warm the HEIGHT-2 class: deadlines attach to warm hits only
+        warm = [srv.submit(_tm_fn, _args(i)) for i in range(2)]
+        [f.result(timeout=120) for f in warm]
+        plan = FaultPlan(specs=(FaultSpec(site="stream", mode="hang",
+                                          count=1, delay_s=10.0),), seed=8)
+        with FaultInjector(plan):
+            futs = [srv.submit(_tm_fn, _args(i)) for i in range(2)]
+            res = [f.result(timeout=120) for f in futs]
+        snap = srv.snapshot_stats()
+    for i, r in enumerate(res):
+        _assert_bitexact(r, _tm_fn(_args(i)))
+    assert snap["phase_timeouts"] >= 1
+    assert snap["rescued_requests"] >= 2 and snap["victim_requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# degradation ladder + quarantine
+# ---------------------------------------------------------------------------
+
+def test_phase_ladder_degrades_and_memoizes():
+    x = _args()
+    plan = FaultPlan(specs=(FaultSpec(site="phase", match="tmu",
+                                      mode="fail", count=1),), seed=5)
+    with TMServer(ServerConfig(max_batch=1, batch_timeout_s=0.0,
+                               backend="pallas", retry_attempts=0)) as srv:
+        _assert_bitexact(srv(_tm_fn, x), _tm_fn(x))   # warm on pallas
+        with FaultInjector(plan):
+            _assert_bitexact(srv(_tm_fn, x), _tm_fn(x))
+        snap = srv.snapshot_stats()
+        memo = [srv.cache.get(k).degraded_phases for k in srv.cache.keys()]
+    assert snap["degraded_phases"] >= 1
+    assert snap["failed"] == 0          # the ladder absorbed the fault
+    assert any(m for m in memo)         # the working rung is pinned
+
+
+def test_lowering_quarantine_survives_injected_kernel_failure():
+    x = _args()
+    plan = FaultPlan(specs=(FaultSpec(site="lowering", mode="fail",
+                                      count=1),), seed=6)
+    with TMServer(ServerConfig(max_batch=1, batch_timeout_s=0.0,
+                               backend="pallas", retry_attempts=0)) as srv:
+        _assert_bitexact(srv(_tm_fn, x), _tm_fn(x))   # warm on pallas
+        with FaultInjector(plan) as inj:
+            _assert_bitexact(srv(_tm_fn, x), _tm_fn(x))
+        quarantined = [srv.cache.get(k).quarantine for k in srv.cache.keys()]
+        # warm re-run: the quarantined rule is skipped, no new fault needed
+        _assert_bitexact(srv(_tm_fn, x), _tm_fn(x))
+        snap = srv.snapshot_stats()
+    assert inj.fired == 1
+    assert any(q for q in quarantined)  # the failing (rule, shape) is pinned
+    assert snap["failed"] == 0
+
+
+# ---------------------------------------------------------------------------
+# drain diagnostics
+# ---------------------------------------------------------------------------
+
+def test_drain_timeout_raises_with_pending_diagnostics():
+    x = _args()
+    plan = FaultPlan(specs=(FaultSpec(site="stream", mode="hang", count=1,
+                                      delay_s=10.0),), seed=10)
+    srv = TMServer(ServerConfig(max_batch=1, batch_timeout_s=0.0,
+                                retry_attempts=0)).start()
+    try:
+        _assert_bitexact(srv(_tm_fn, x), _tm_fn(x))
+        with FaultInjector(plan):
+            fut = srv.submit(_tm_fn, x)
+            with pytest.raises(DrainTimeoutError) as exc:
+                srv.drain(timeout=0.3)
+            assert exc.value.pending                      # diagnostic rows
+            states = {r["state"] for r in exc.value.pending}
+            assert "running" in states
+            assert "outstanding" in str(exc.value)
+        # hang released at uninstall: the request completes and drain passes
+        fut.result(timeout=120)
+        srv.drain(timeout=30.0)
+    finally:
+        srv.stop()
