@@ -31,14 +31,15 @@ from typing import Any
 import jax
 
 from repro.core.executor import TMExecutor
-from repro.core.dispatch import LoweringReport
+from repro.core.dispatch import Lowering, LoweringReport, lower_xengine
 from repro.core.instr import TMProgram
 from repro.core.schedule import CycleParams
 from repro.core.tm_primitive import tag_tm_ops
 from repro.obs.tracer import NULL_TRACER
 from repro.compiler.allocate import ScratchPlan, allocate
 from repro.compiler.ir import TMGraph, eval_tpu_node, eval_tpu_node_exact
-from repro.compiler.partition import PartitionReport, Phase, partition
+from repro.compiler.partition import (
+    _KIND_CHARS, PartitionReport, Phase, partition)
 from repro.compiler.passes import PassReport, run_pipeline
 from repro.compiler.trace import graph_from_jaxpr
 
@@ -262,6 +263,11 @@ class CompiledTMProgram:
                     exact: bool, tracer=NULL_TRACER,
                     quarantine: set | None = None,
                     ) -> LoweringReport | TPUPhaseReport:
+        if phase.kind == "fused":
+            return self._exec_fused(phase, env, backend=backend,
+                                    interpret=interpret,
+                                    fuse_chains=fuse_chains, exact=exact,
+                                    tracer=tracer, quarantine=quarantine)
         if phase.kind == "tpu":
             if exact:
                 for i in phase.node_indices:
@@ -307,6 +313,69 @@ class CompiledTMProgram:
         out, lowering, _ = ex.run(phase.program, bufs)
         env.update(out)
         return lowering
+
+    def _exec_fused(self, phase: Phase, env: dict[str, Any], *,
+                    backend: str, interpret: bool, fuse_chains: bool,
+                    exact: bool, tracer=NULL_TRACER,
+                    quarantine: set | None = None) -> LoweringReport:
+        """Execute a cross-engine fused phase: the compute eqn + its TM run
+        as ONE Pallas launch (pallas backend), with the crossing buffer
+        streamed through VMEM; any decline — unsupported geometry, VMEM
+        budget, a quarantined kernel, the reference/fused backends, exact
+        mode — takes the split path (eqn and TM run separately), bit-exact.
+        The partition only emits fused phases under ``cross_engine=True``,
+        which is itself an opt-in (the serving sweep pins it only after a
+        realized probe), so the pallas path needs no further gating."""
+        xe = phase.xengine
+        node = self.graph.nodes[xe.eqn_index]
+        instrs = [self.graph.nodes[i].instr for i in xe.tm_indices]
+        direction = xe.direction
+        report = LoweringReport(backend=backend)
+        if backend == "pallas" and not exact:
+            streamed = set(xe.chain.buffers) | {xe.buffer}
+            tm_srcs = [[None if s in streamed else env[s] for s in ins.srcs]
+                       for ins in instrs]
+            eqn_srcs = [lit if s is None
+                        else (None if s == xe.buffer else env[s])
+                        for s, lit in zip(node.src_names, node.literals)]
+            sb = self.params.segment_bytes if self.params is not None \
+                else None
+            lowered = lower_xengine(direction, node, eqn_srcs, instrs,
+                                    tm_srcs, interpret, segment_bytes=sb,
+                                    quarantine=quarantine)
+            if lowered is not None:
+                val, rec = lowered
+                env[rec.dst] = val
+                report.records.append(rec)
+                return report
+        # split path: evaluate the eqn and the TM run in dataflow order —
+        # exactly what the non-crossing partition executes
+        def run_eqn():
+            if exact:
+                eval_tpu_node_exact(node, env)
+            else:
+                eval_tpu_node(node, env)
+            report.records.append(Lowering(
+                dst=node.dst_names[0], opcode="tpu",
+                path=f"xla.{node.primitive_name}",
+                reason="cross-engine lowering declined: split path"))
+
+        def run_tm():
+            ex = TMExecutor(backend=backend, interpret=interpret,
+                            params=self.params, fuse_chains=fuse_chains,
+                            tracer=tracer, quarantine=quarantine)
+            bufs = {n: env[n] for n in phase.program.inputs}
+            out, lowering, _ = ex.run(phase.program, bufs)
+            env.update(out)
+            report.records.extend(lowering.records)
+
+        if direction == "compute_to_tm":
+            run_eqn()
+            run_tm()
+        else:
+            run_tm()
+            run_eqn()
+        return report
 
     def outputs_from(self, env: dict[str, Any]):
         outs = [env[o] for o in self.graph.outputs]
@@ -386,12 +455,18 @@ class CompiledTMProgram:
 
 
 def tm_compile(fn, *example_args, params: CycleParams | None = None,
-               tracer=None) -> CompiledTMProgram:
+               cross_engine: bool = False, tracer=None) -> CompiledTMProgram:
     """Trace ``fn`` at ``example_args`` and lower it through the pipeline:
 
     jaxpr -> TM IR (trace) -> passes (map composition, copy elim, epilogue
     sink, RME legalization) -> TPU/TMU phase DAG + pipeline schedule ->
     scratch allocation.
+
+    ``cross_engine`` lets the partition merge legal engine-boundary
+    crossings (a supported compute eqn forwarding into — or fed by — an
+    adjacent COARSE TM run) into single ``fused`` phases that lower as ONE
+    Pallas launch; off by default so the phase DAG of non-crossing programs
+    is byte-identical with the flag in either state.
 
     ``tracer`` (a :class:`repro.obs.Tracer`) records each stage as a nested
     span under ``compile`` with the stage's report summary attached.
@@ -410,13 +485,13 @@ def tm_compile(fn, *example_args, params: CycleParams | None = None,
             pass_report = run_pipeline(graph)
             sp.set(summary=pass_report.summary())
         with tracer.span("compile/partition") as sp:
-            part = partition(graph, params)
+            part = partition(graph, params, cross_engine=cross_engine)
             sp.set(summary=part.summary(), phases=len(part.phases),
                    dag_edges=part.dag_edges)
         with tracer.span("compile/allocate") as sp:
             scratch = allocate(graph, part, params)
             sp.set(summary=scratch.summary())
-        root.set(phases="".join("T" if p.kind == "tpu" else "M"
+        root.set(phases="".join(_KIND_CHARS.get(p.kind, "?")
                                 for p in part.phases))
     return CompiledTMProgram(graph=graph, pass_report=pass_report,
                              partition_report=part, scratch_plan=scratch,

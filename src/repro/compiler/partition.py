@@ -22,17 +22,19 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.core.fusion import CrossEngineChain, cross_engine_chains
 from repro.core.instr import TMProgram
-from repro.core.schedule import CycleParams, ScheduleReport, schedule
+from repro.core.schedule import (CycleParams, ScheduleReport, schedule,
+                                 xengine_phase_report)
 from repro.compiler.ir import TMGraph
 
 
 @dataclasses.dataclass
 class Phase:
-    kind: str                      # "tpu" | "tmu"
+    kind: str                      # "tpu" | "tmu" | "fused" (engine-crossing)
     node_indices: list[int]        # indices into graph.nodes
-    program: TMProgram | None = None       # tmu phases only
-    schedule: ScheduleReport | None = None  # tmu phases only
+    program: TMProgram | None = None       # tmu + fused phases (the TM run)
+    schedule: ScheduleReport | None = None  # tmu + fused phases
     # --- DAG wiring (filled by partition()) -------------------------------
     index: int = 0                 # position in PartitionReport.phases
     reads: tuple[str, ...] = ()    # buffers consumed from outside the phase
@@ -49,10 +51,16 @@ class Phase:
     jit_ok: bool = dataclasses.field(default=False, compare=False)
     donated: tuple[str, ...] | None = dataclasses.field(
         default=None, compare=False)
+    # fused phases only: the crossing this phase realizes (compute eqn + its
+    # adjacent TM run, one Pallas launch when the lowering claims it)
+    xengine: CrossEngineChain | None = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     @property
     def engine(self) -> str:
-        return "tpu" if self.kind == "tpu" else "tmu"
+        # a fused phase is anchored on its compute kernel — it runs on the
+        # TPU stream (the TM chain rides the launch as commit/prologue)
+        return "tpu" if self.kind in ("tpu", "fused") else "tmu"
 
 
 @dataclasses.dataclass
@@ -65,16 +73,31 @@ class PartitionReport:
     chained_cycles: float = 0.0  # forwarding REALIZED: chains as megakernels
     forwarding_chains: int = 0
     dag_edges: int = 0           # phase-level data-dependency edges
+    # cross-engine fusion (partition(cross_engine=True) only):
+    xengine_phases: int = 0          # crossings merged into fused phases
+    xengine_saved_bytes: int = 0     # modeled HBM bytes the crossings elide
+    xengine_saved_cycles: float = 0.0  # modeled cycle win vs the split path
+    xengine_rows: list = dataclasses.field(default_factory=list)
 
     @property
     def tmu_phases(self) -> list[Phase]:
         return [p for p in self.phases if p.kind == "tmu"]
 
+    @property
+    def fused_phases(self) -> list[Phase]:
+        return [p for p in self.phases if p.kind == "fused"]
+
     def launches(self, *, chained: bool = False) -> int:
-        """Modeled kernel launches across all TM phases (chains collapse to
-        one launch each when ``chained``)."""
-        return sum(ph.schedule.launches(chained=chained)
-                   for ph in self.tmu_phases if ph.schedule is not None)
+        """Modeled TM kernel launches (chains collapse to one launch each
+        when ``chained``).  A fused phase's TM run launches zero extra
+        kernels when chained — it rides the compute kernel's launch — and
+        its per-instruction count otherwise (the split path)."""
+        n = sum(ph.schedule.launches(chained=chained)
+                for ph in self.tmu_phases if ph.schedule is not None)
+        if not chained:
+            n += sum(ph.schedule.launches(chained=False)
+                     for ph in self.fused_phases if ph.schedule is not None)
+        return n
 
     def phase_mix(self) -> dict:
         """Fragmentation stats of the phase list — how much TM work sits in
@@ -89,7 +112,9 @@ class PartitionReport:
             "tmu_instrs": sum(len(p.node_indices) for p in tmu),
             "tmu_singletons": sum(1 for p in tmu
                                   if len(p.node_indices) == 1),
-            "kinds": "".join("T" if p.kind == "tpu" else "M"
+            "fused_phases": sum(1 for p in self.phases
+                                if p.kind == "fused"),
+            "kinds": "".join(_KIND_CHARS.get(p.kind, "?")
                              for p in self.phases),
         }
 
@@ -105,13 +130,17 @@ class PartitionReport:
         return 1.0 - self.forwarded_cycles / self.unpipelined_cycles
 
     def summary(self) -> str:
-        kinds = "".join("T" if p.kind == "tpu" else "M" for p in self.phases)
-        return (f"phases [{kinds}] (T=TPU, M=TMU), {self.dag_edges} dep "
+        kinds = "".join(_KIND_CHARS.get(p.kind, "?") for p in self.phases)
+        return (f"phases [{kinds}] (T=TPU, M=TMU, F=fused), "
+                f"{self.dag_edges} dep "
                 f"edge(s), {len(self.sink_phases())} sink(s): "
                 f"{self.unpipelined_cycles:.0f} unpipelined -> "
                 f"{self.forwarded_cycles:.0f} forwarded TM cycles "
                 f"({self.latency_reduction:.1%} reduction, "
                 f"{self.forwarding_edges} forwarded edge(s))")
+
+
+_KIND_CHARS = {"tpu": "T", "tmu": "M", "fused": "F"}
 
 
 def _phase_program(graph: TMGraph, indices: list[int]) -> TMProgram:
@@ -157,21 +186,50 @@ def _tpu_reads_writes(graph: TMGraph, indices: list[int],
     return tuple(reads), tuple(writes)
 
 
-def partition(graph: TMGraph,
-              params: CycleParams | None = None) -> PartitionReport:
+def partition(graph: TMGraph, params: CycleParams | None = None, *,
+              cross_engine: bool = False) -> PartitionReport:
+    """Split the graph into a phase DAG.
+
+    With ``cross_engine`` (opt-in: the serving admission sweep pins it per
+    cache entry, ``tm_compile`` forwards it), every legal engine-boundary
+    crossing (:func:`repro.core.fusion.cross_engine_chains`) is emitted as a
+    ``"fused"`` phase claiming the compute eqn *and* its adjacent TM run —
+    one launch at execution when the lowering realizes, the bit-exact split
+    path otherwise.  With ``cross_engine=False`` (the default) the phase
+    list is byte-identical to the pre-crossing partition."""
+    xstarts: dict[int, CrossEngineChain] = {}
+    if cross_engine:
+        p = params or CycleParams()
+        for c in cross_engine_chains(graph, p.itemsize, p.segment_bytes):
+            xstarts[min(c.span)] = c
+
     phases: list[Phase] = []
-    for i, node in enumerate(graph.nodes):
+    i = 0
+    while i < len(graph.nodes):
+        xc = xstarts.get(i)
+        if xc is not None:
+            phases.append(Phase(kind="fused", node_indices=list(xc.span),
+                                xengine=xc))
+            i = xc.span[-1] + 1
+            continue
+        node = graph.nodes[i]
         if phases and phases[-1].kind == node.kind:
             phases[-1].node_indices.append(i)
         else:
             phases.append(Phase(kind=node.kind, node_indices=[i]))
+        i += 1
 
     unpiped = piped = fwded = chained = 0.0
     n_edges = n_chains = 0
+    x_saved_bytes = 0
+    x_saved_cycles = 0.0
+    x_rows: list = []
     for ph in phases:
-        if ph.kind != "tmu":
+        if ph.kind == "tpu":
             continue
-        ph.program = _phase_program(graph, ph.node_indices)
+        tm_indices = (list(ph.xengine.tm_indices) if ph.kind == "fused"
+                      else ph.node_indices)
+        ph.program = _phase_program(graph, tm_indices)
         shapes = {name: graph.shape(name) for name in ph.program.inputs}
         ph.schedule = schedule(ph.program, shapes, params)
         unpiped += ph.schedule.unpipelined_cycles
@@ -180,6 +238,14 @@ def partition(graph: TMGraph,
         chained += ph.schedule.chained_cycles
         n_edges += len(ph.schedule.forwards)
         n_chains += len(ph.schedule.chains)
+        if ph.kind == "fused":
+            row = xengine_phase_report(
+                ph.program, shapes, params,
+                crossing_shape=graph.shape(ph.xengine.buffer),
+                direction=ph.xengine.direction)
+            x_saved_bytes += row["saved_bytes"]
+            x_saved_cycles += row["saved_cycles"]
+            x_rows.append(row)
 
     # --- DAG wiring: reads/writes per phase, then producer edges ----------
     producer: dict[str, int] = {}   # buffer -> phase index that writes it
@@ -190,6 +256,9 @@ def partition(graph: TMGraph,
             ph.reads = tuple(ph.program.inputs)
             ph.writes = tuple(ph.program.outputs)
         else:
+            # _tpu_reads_writes is generic over node srcs/dsts, so a fused
+            # phase's reads/writes span the eqn AND its TM run — the
+            # crossing buffer is internal and never appears (zero HBM)
             ph.reads, ph.writes = _tpu_reads_writes(graph, ph.node_indices)
         deps = []
         for name in ph.reads:
@@ -204,4 +273,8 @@ def partition(graph: TMGraph,
     return PartitionReport(phases=phases, unpipelined_cycles=unpiped,
                            pipelined_cycles=piped, forwarded_cycles=fwded,
                            forwarding_edges=n_edges, chained_cycles=chained,
-                           forwarding_chains=n_chains, dag_edges=dag_edges)
+                           forwarding_chains=n_chains, dag_edges=dag_edges,
+                           xengine_phases=len(x_rows),
+                           xengine_saved_bytes=x_saved_bytes,
+                           xengine_saved_cycles=x_saved_cycles,
+                           xengine_rows=x_rows)

@@ -149,8 +149,30 @@ class ChainRule:
     priority: int = 0
 
 
+@dataclasses.dataclass(frozen=True)
+class XEngineRule:
+    """One cross-engine registry entry — lowers a compute eqn plus its
+    adjacent TM chain as ONE Pallas launch.
+
+    ``lower(direction, eqn_node, eqn_srcs, instrs, tm_srcs, interpret,
+    segment_bytes=None)`` receives the crossing direction
+    (``"compute_to_tm"`` | ``"tm_to_compute"``), the TPU node
+    (:class:`repro.compiler.ir.TPUNode`), the eqn's resolved operands
+    (``None`` in the crossing slot for TM→compute; literal slots carry the
+    literal value), the TM instruction run, and each TM instruction's
+    resolved sources (``None`` for chain-internal intermediates AND for the
+    crossing buffer — neither materializes).  Returns ``(value, path,
+    segments)`` when the rule claims the crossing, None to decline (the
+    caller splits, bit-exact)."""
+
+    name: str
+    lower: Callable[..., tuple[jnp.ndarray, str, int | None] | None]
+    priority: int = 0
+
+
 _RULES: list[KernelRule] = []
 _CHAIN_RULES: list[ChainRule] = []
+_XENGINE_RULES: list[XEngineRule] = []
 _REGISTERED = False
 
 
@@ -171,6 +193,14 @@ def register_chain_rule(name: str, lower, priority: int = 0) -> None:
     _CHAIN_RULES.sort(key=lambda r: -r.priority)
 
 
+def register_xengine_rule(name: str, lower, priority: int = 0) -> None:
+    """Register a cross-engine rule (called by kernel packages at import)."""
+    global _XENGINE_RULES
+    _XENGINE_RULES = [r for r in _XENGINE_RULES if r.name != name]
+    _XENGINE_RULES.append(XEngineRule(name, lower, priority))
+    _XENGINE_RULES.sort(key=lambda r: -r.priority)
+
+
 def _ensure_registered() -> None:
     """Import the kernel packages so their ops modules self-register."""
     global _REGISTERED
@@ -180,6 +210,7 @@ def _ensure_registered() -> None:
     import repro.kernels.resize.ops     # noqa: F401
     import repro.kernels.rme_gather.ops  # noqa: F401
     import repro.kernels.tm_affine.ops  # noqa: F401
+    import repro.kernels.matmul_tm.chain  # noqa: F401
     _REGISTERED = True
 
 
@@ -304,4 +335,52 @@ def lower_chain(instrs: Sequence[TMInstr],
             return val, Lowering(dst=instrs[-1].dst, opcode="chain",
                                  path=path, kernel=rule.name, segments=seg,
                                  launches=1, instrs=len(instrs))
+    return None
+
+
+def lower_xengine(direction: str, eqn_node, eqn_srcs: Sequence,
+                  instrs: Sequence[TMInstr],
+                  tm_srcs: Sequence[Sequence[jnp.ndarray | None]],
+                  interpret: bool, segment_bytes: int | None = None,
+                  quarantine: set | None = None,
+                  ) -> tuple[jnp.ndarray, Lowering] | None:
+    """Lower a cross-engine crossing (compute eqn + adjacent TM chain)
+    through the cross-engine registry.
+
+    The returned record's ``dst`` is what the ONE launch produces: the
+    chain's final dst for ``compute_to_tm`` (the eqn's output streams into
+    the chain and never materializes), the eqn's output for
+    ``tm_to_compute`` (the chain output streams into the eqn's input
+    blocks).  ``launches=1`` and ``instrs=len(instrs)+1`` count the eqn, so
+    launch/instruction accounting stays honest against the split path.
+    Returns None when no rule claims the crossing — the caller then
+    executes eqn and chain separately, bit-exact.  ``quarantine`` works as
+    in :func:`lower_instr`: a raising rule is quarantined under its
+    shape-class key and skipped on later runs."""
+    _ensure_registered()
+    dst = (instrs[-1].dst if direction == "compute_to_tm"
+           else eqn_node.dst_names[0])
+    for rule in _XENGINE_RULES:
+        if quarantine is not None:
+            qkey = quarantine_key(rule.name, f"xchain.{direction}", eqn_srcs)
+            if qkey in quarantine:
+                continue
+        try:
+            hook = fault_hook
+            if hook is not None:
+                hook("lowering", f"{rule.name}:xchain:{dst}")
+            lowered = rule.lower(direction, eqn_node, eqn_srcs, instrs,
+                                 tm_srcs, interpret,
+                                 segment_bytes=segment_bytes)
+        except Exception:
+            if quarantine is None:
+                raise
+            quarantine.add(quarantine_key(rule.name, f"xchain.{direction}",
+                                          eqn_srcs))
+            continue
+        if lowered is not None:
+            val, path, seg = lowered
+            return val, Lowering(dst=dst, opcode="xchain", path=path,
+                                 kernel=rule.name, segments=seg,
+                                 launches=1, instrs=len(instrs) + 1)
     return None

@@ -355,6 +355,47 @@ def chain_timing(instrs: list[TMInstr], shapes: dict,
                        store=store, launches=1)
 
 
+def xengine_phase_report(prog: TMProgram,
+                         input_shapes: dict[str, tuple[int, ...]],
+                         params: CycleParams | None = None, *,
+                         crossing_shape: tuple[int, ...] = (),
+                         direction: str = "") -> dict:
+    """Price one cross-engine fused phase: its TM run as the adjacent
+    compute kernel's commit/prologue stage vs the split path.
+
+    Split: every TM instruction pays issue + its double-buffered cycles,
+    plus the crossing buffer's full HBM round-trip (the compute kernel
+    stores it, the TM side loads it — or the reverse).  Fused: the chain
+    rides the compute kernel's launch (no TM issue at all) and the crossing
+    streams through VMEM, so its load (compute→TM) or store (TM→compute)
+    leg leaves the chain's memory bill too.  ``saved_cycles`` is what the
+    serving admission sweep scores; ``saved_bytes`` is the HBM traffic the
+    benchmark gate checks against measured per-phase reads+writes."""
+    p = params or CycleParams()
+    shapes = infer_shapes(prog, input_shapes)
+    timings = [_timing(i, ins, shapes, p)
+               for i, ins in enumerate(prog.instrs)]
+    ct = chain_timing(list(prog.instrs), shapes, p)
+    crossing_bytes = (math.prod(crossing_shape) * p.itemsize
+                      if crossing_shape else 0)
+    roundtrip = 2.0 * crossing_bytes / p.bandwidth_bytes
+    split = (sum(p.issue_overhead + t.pipelined_cycles for t in timings)
+             + roundtrip)
+    fused = max(0.0, ct.pipelined_cycles
+                - crossing_bytes / p.bandwidth_bytes)
+    return {
+        "direction": direction,
+        "instrs": len(prog.instrs),
+        "segments": ct.n_segments,
+        "crossing_bytes": crossing_bytes,
+        "saved_bytes": crossing_bytes * 2,
+        "split_cycles": split,
+        "fused_cycles": fused,
+        "saved_cycles": split - fused,
+        "launches_removed": sum(t.launches for t in timings),
+    }
+
+
 def schedule(prog: TMProgram, input_shapes: dict[str, tuple[int, ...]],
              params: CycleParams | None = None) -> ScheduleReport:
     """Build the three-way cycle comparison for one program."""

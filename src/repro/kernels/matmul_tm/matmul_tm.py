@@ -26,6 +26,16 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
+def block_div(n: int, b: int) -> int:
+    """Largest block size <= ``b`` that divides ``n`` (>= 1) — the divisor
+    clamp the wrappers apply so odd dims never hand Pallas a grid whose
+    blocks don't tile the array."""
+    b = max(1, min(int(b), int(n)))
+    while n % b:
+        b -= 1
+    return b
+
+
 def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int,
                local_fn: Callable | None):
     k = pl.program_id(2)

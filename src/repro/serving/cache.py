@@ -85,6 +85,11 @@ class CacheEntry:
     # pinned at admission by the cycle-model chain sweep, and used by the
     # stats side so predicted overlap reflects realized (chained) execution
     fuse_chains: bool = False
+    # pallas backend: the pinned compilation was re-partitioned with
+    # cross-engine fusion (compute eqns merged with adjacent TM runs into
+    # ``fused`` phases that lower as ONE Pallas launch) — pinned at
+    # admission only after a realized probe, like ``fuse_chains``
+    cross_engine: bool = False
     selection: dict = dataclasses.field(default_factory=dict)
     compile_s: float = 0.0
     hits: int = 0

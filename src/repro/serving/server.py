@@ -101,6 +101,13 @@ class ServerConfig:
     # per-instruction execution through the cycle model (+ a per-launch
     # charge) and pin the winner on the entry
     select_chaining: bool = True
+    # admission also sweeps cross-engine fusion (pallas backend): re-
+    # partition with engine-boundary crossings merged into fused phases,
+    # score the modeled HBM/launch savings through the cycle model, probe
+    # one execution, and pin the crossing partition only when a crossing
+    # actually realized (the lowering may decline geometry the discovery
+    # pass accepted)
+    select_xengine: bool = True
     # observability: None/False = off (the no-op tracer — one attribute
     # check on the hot path), True = the server creates a repro.obs.Tracer
     # (exposed as ``TMServer.tracer``), or pass a Tracer to share one
@@ -255,6 +262,18 @@ def predict_phase_cycles(compiled: CompiledTMProgram, phase,
                 else phase.schedule.forwarded_cycles)
     p = compiled.params or CycleParams()
     nodes = compiled.graph.nodes
+    if phase.kind == "fused":
+        # cross-engine fused phase: the TM run's scheduled cycles plus the
+        # eqn's data-movement proxy — pessimistic (the realized megakernel
+        # never round-trips the crossing buffer), which is the safe side
+        # for a watchdog deadline
+        tm = 0.0 if phase.schedule is None else \
+            phase.schedule.forwarded_cycles
+        node = nodes[phase.xengine.eqn_index]
+        elems = sum(_size(compiled.graph.shape(n))
+                    for n in tuple(node.src_names) + tuple(node.dst_names)
+                    if n is not None)
+        return tm + elems * p.itemsize / p.bandwidth_bytes
     elems = sum(
         _size(compiled.graph.shape(n))
         for i in phase.node_indices
@@ -944,6 +963,42 @@ class TMServer:
                 rows["realized_chains"] = sum(r.chain_count() for r in reps)
                 fuse_chains = rows["realized_chains"] > 0
             selection["fuse_chains"] = {"winner": fuse_chains, **rows}
+        cross_engine = False
+        quarantine: set = set()
+        if cfg.select_xengine and backend == "pallas":
+            part_x = partition(compiled.graph, compiled.params,
+                               cross_engine=True)
+            if part_x.xengine_phases:
+                removed = sum(r.get("launches_removed", 0)
+                              for r in part_x.xengine_rows)
+                rows = {"xengine_phases": part_x.xengine_phases,
+                        "saved_bytes": part_x.xengine_saved_bytes,
+                        "saved_cycles": part_x.xengine_saved_cycles,
+                        "launches_removed": removed}
+                modeled = (part_x.xengine_saved_cycles
+                           + cfg.launch_overhead_cycles * removed)
+                rows["score_gain"] = modeled
+                if modeled > 0:
+                    # the lowering may still decline a modeled crossing
+                    # (pullback geometry, VMEM budget): probe one execution
+                    # and pin the crossing partition only when a megakernel
+                    # actually realized, exactly like the chain sweep
+                    candidate = dataclasses.replace(
+                        compiled, partition_report=part_x,
+                        scratch_plan=allocate(compiled.graph, part_x,
+                                              compiled.params))
+                    _, reps = candidate.run(
+                        *stacked_args, backend="pallas",
+                        interpret=cfg.interpret, fuse_chains=fuse_chains,
+                        quarantine=quarantine)
+                    realized = sum(
+                        1 for rep in reps for r in rep.records
+                        if (r.path or "").startswith("pallas.xchain"))
+                    rows["realized_crossings"] = realized
+                    if realized:
+                        compiled = candidate
+                        cross_engine = True
+                selection["cross_engine"] = {"winner": cross_engine, **rows}
         # predicted overlap must describe the execution shape the entry pins
         # (chained segment counts when chaining won the sweep)
         overlap = predict_overlap(compiled, fuse_chains=fuse_chains)
@@ -951,5 +1006,6 @@ class TMServer:
         selection["predicted_overlap"] = overlap
         return CacheEntry(key=key, fn=fn, compiled=compiled, backend=backend,
                           params=compiled.params, fuse_chains=fuse_chains,
-                          selection=selection,
+                          cross_engine=cross_engine, selection=selection,
+                          quarantine=quarantine,
                           compile_s=time.perf_counter() - t0)

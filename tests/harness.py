@@ -460,3 +460,121 @@ def run_compiled_differential(case: CompiledCase, dtype: str, variant,
                 x, y, atol=case.atol, rtol=0,
                 err_msg=f"{case.name}:{backend}:{dtype}")
     return compiled
+
+
+# ---------------------------------------------------------------------------
+# cross-engine cases: a compute eqn forwarding into (or fed by) an adjacent
+# TM run.  Compiled under ``cross_engine=True`` the crossing must partition
+# as ONE fused phase and — on the pallas backend — realize as ONE
+# ``pallas.xchain`` launch, bit-exact against the eager function, against
+# the non-crossing compilation, and across all three backends (reference /
+# fused take the split path inside the fused phase).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class XEngineCase:
+    """One engine-boundary crossing program."""
+
+    name: str
+    build: Callable  # (dtype, variant, rng) -> (fn, args tuple)
+    direction: str                       # expected crossing direction
+    variants: tuple                      # shape variants (passed to build)
+    tm_links: int = 1                    # TM instrs riding the crossing
+    dtypes: tuple[str, ...] = ALL_DTYPES
+
+
+def _x_mm_transpose(dtype, variant, rng):
+    M, K, N = variant
+    a = _arr(rng, (M, K), dtype)
+    b = _arr(rng, (K, N), dtype)
+    return (lambda p, q: (p @ q).T), (a, b)
+
+
+def _x_mm_pixelshuffle(dtype, variant, rng):
+    H, W, C, s, K = variant
+
+    def fn(p, q):
+        y = (p @ q).reshape(H, W, C, s, s)
+        return jnp.transpose(y, (0, 3, 1, 4, 2)).reshape(H * s, W * s, C)
+
+    a = _arr(rng, (H * W, K), dtype)
+    b = _arr(rng, (K, C * s * s), dtype)
+    return fn, (a, b)
+
+
+def _x_mm_pad_chain(dtype, variant, rng):
+    M, K, N = variant
+    a = _arr(rng, (M, K), dtype)
+    b = _arr(rng, (K, N), dtype)
+    return (lambda p, q: jnp.pad((p @ q).T, ((1, 1), (2, 2)))), (a, b)
+
+
+def _x_transpose_mm(dtype, variant, rng):
+    M, K, N = variant
+    a = _arr(rng, (K, M), dtype)     # transposed layout feeding the matmul
+    b = _arr(rng, (K, N), dtype)
+    return (lambda p, q: p.T @ q), (a, b)
+
+
+def _x_pad_mm(dtype, variant, rng):
+    M, K, N = variant
+    a = _arr(rng, (M, K - 2), dtype)  # pad restores K before the matmul
+    b = _arr(rng, (K, N), dtype)
+    return (lambda p, q: jnp.pad(p, ((0, 0), (1, 1))) @ q), (a, b)
+
+
+XENGINE_CASES = [
+    # odd, non-tile-aligned shapes on purpose (remainder handling)
+    XEngineCase("mm_transpose", _x_mm_transpose, "compute_to_tm",
+                variants=((24, 16, 40), (7, 9, 5), (33, 12, 20))),
+    XEngineCase("mm_pixelshuffle", _x_mm_pixelshuffle, "compute_to_tm",
+                variants=((4, 6, 5, 2, 16), (3, 5, 2, 3, 8))),
+    XEngineCase("mm_pad_chain", _x_mm_pad_chain, "compute_to_tm",
+                variants=((24, 16, 40), (6, 10, 14)), tm_links=2),
+    XEngineCase("transpose_mm", _x_transpose_mm, "tm_to_compute",
+                variants=((24, 16, 40), (9, 7, 5))),
+    XEngineCase("pad_mm", _x_pad_mm, "tm_to_compute",
+                variants=((24, 16, 40), (6, 11, 9))),
+]
+
+XENGINE_CASES_BY_NAME = {c.name: c for c in XENGINE_CASES}
+
+
+def run_xengine_differential(case: XEngineCase, dtype: str, variant,
+                             rng: np.random.RandomState):
+    """Compile one crossing under ``cross_engine`` on AND off; assert the
+    fused partition, the single realized ``pallas.xchain`` launch, and
+    bit-exact agreement everywhere.  Returns the fused compilation."""
+    from repro.compiler import tm_compile
+
+    fn, args = case.build(dtype, variant, rng)
+    ref = np.asarray(fn(*args), dtype=np.float64)
+    base = tm_compile(fn, *args)
+    fused = tm_compile(fn, *args, cross_engine=True)
+
+    part = fused.partition_report
+    assert part.xengine_phases == 1, (case.name, part.summary())
+    (fp,) = part.fused_phases
+    assert fp.xengine.direction == case.direction, (
+        case.name, fp.xengine.direction)
+    assert len(fp.xengine.tm_indices) == case.tm_links, (
+        case.name, fp.xengine.tm_indices)
+
+    for backend in BACKENDS:
+        got, reps = fused.run(*args, backend=backend)
+        y = np.asarray(got, dtype=np.float64)
+        assert ref.shape == y.shape, (case.name, backend, ref.shape, y.shape)
+        assert np.array_equal(ref, y), (case.name, backend, dtype, variant)
+        if backend == "pallas":
+            recs = [r for rep in reps for r in rep.records]
+            xrecs = [r for r in recs if r.path.startswith("pallas.xchain")]
+            assert len(xrecs) == 1, (case.name, recs)
+            assert xrecs[0].launches == 1
+            assert xrecs[0].instrs == case.tm_links + 1  # eqn counted too
+
+    # and the non-crossing compilation is bit-identical on every backend
+    for backend in BACKENDS:
+        got_base, _ = base.run(*args, backend=backend)
+        assert np.array_equal(ref, np.asarray(got_base, dtype=np.float64)), (
+            case.name, backend, "base")
+    return fused

@@ -1,0 +1,377 @@
+"""Cross-engine megakernels: TM chains streamed into and out of compute
+kernels (paper Fig. 5c across the TPU/TMU boundary).
+
+Covers the PR acceptance criteria:
+
+* a producer matmul + TM-chain consumer (and the reverse) executes as ONE
+  Pallas launch with no intermediate HBM buffer, bit-exact against the
+  unfused path on all three backends, swept over dtypes x odd shapes
+  (``tests.harness.XENGINE_CASES``);
+* the partition merges a crossing into one ``fused`` phase, and
+  non-crossing programs partition byte-identically with the flag on or off;
+* ``matmul_call`` handles non-divisible dims above the default block
+  (divisor clamp regression) and ``matmul_tm_call`` lowers through the
+  cross-engine chain registry with the two-pass fallback kept bit-exact as
+  its decline branch;
+* the serving admission sweep pins cross-engine fusion only after a
+  realized probe.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from tests.harness import (ALL_DTYPES, BACKENDS, XENGINE_CASES,
+                           XENGINE_CASES_BY_NAME, run_xengine_differential)
+
+IDS = [c.name for c in XENGINE_CASES]
+
+
+@pytest.fixture
+def rng():
+    return np.random.RandomState(977)
+
+
+# ---------------------------------------------------------------------------
+# differential sweep: dtypes x odd shapes x all three backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", ALL_DTYPES)
+@pytest.mark.parametrize("case", XENGINE_CASES, ids=IDS)
+def test_xengine_differential(case, dtype, rng):
+    if dtype not in case.dtypes:
+        pytest.skip(f"{case.name} not defined for {dtype}")
+    for variant in case.variants:
+        run_xengine_differential(case, dtype, variant, rng)
+
+
+def test_xengine_zero_intermediate_hbm(rng):
+    """The crossing buffer never appears in the fused phase's reads or
+    writes — the partition's HBM accounting records zero round-trip for
+    it (the megakernel hands it off through VMEM)."""
+    case = XENGINE_CASES_BY_NAME["mm_transpose"]
+    fused = run_xengine_differential(case, "float32", (24, 16, 40), rng)
+    (fp,) = fused.partition_report.fused_phases
+    crossing = fp.xengine.buffer
+    assert crossing not in fp.reads and crossing not in fp.writes
+    for buf in fp.xengine.chain.buffers:  # chain-internal intermediates too
+        assert buf not in fp.reads and buf not in fp.writes
+    assert fused.partition_report.xengine_saved_bytes > 0
+
+
+def test_xengine_fewer_launches_than_split(rng):
+    """One xchain record replaces (eqn launch + per-instr TM launches)."""
+    case = XENGINE_CASES_BY_NAME["mm_pad_chain"]
+    fused = run_xengine_differential(case, "float32", (24, 16, 40), rng)
+    fn, args = case.build("float32", (24, 16, 40),
+                          np.random.RandomState(977))
+    from repro.compiler import tm_compile
+    base = tm_compile(fn, *args)
+    _, reps = base.run(*args, backend="pallas")
+    split_tm_launches = sum(r.launch_count() for r in reps)
+    _, freps = fused.run(*args, backend="pallas")
+    fused_launches = sum(r.launch_count() for r in freps)
+    # split path: >= 2 TM launches plus the eqn's XLA computation;
+    # fused: exactly 1 launch covering eqn + both TM links
+    assert fused_launches == 1
+    assert fused_launches < split_tm_launches + 1
+
+
+# ---------------------------------------------------------------------------
+# partition: crossing -> one fused phase; non-crossing -> byte-identical
+# ---------------------------------------------------------------------------
+
+def _graph_of(fn, *args):
+    import jax
+    from repro.compiler.passes import run_pipeline
+    from repro.compiler.trace import graph_from_jaxpr
+    from repro.core.tm_primitive import tag_tm_ops
+    with tag_tm_ops():
+        closed = jax.make_jaxpr(fn)(*args)
+    graph = graph_from_jaxpr(closed)
+    run_pipeline(graph)
+    return graph
+
+
+def _phase_fingerprint(part):
+    return [(p.kind, tuple(p.node_indices), tuple(p.reads),
+             tuple(p.writes), tuple(p.deps)) for p in part.phases]
+
+
+def test_partition_crossing_is_one_fused_phase(rng):
+    from repro.compiler.partition import partition
+    x = jnp.asarray(rng.rand(24, 16), jnp.float32)
+    w = jnp.asarray(rng.rand(16, 40), jnp.float32)
+    g = _graph_of(lambda a, b: (a @ b).T, x, w)
+    part = partition(g, cross_engine=True)
+    assert [p.kind for p in part.phases] == ["fused"]
+    assert part.xengine_phases == 1
+    assert part.phase_mix()["fused_phases"] == 1
+    assert "F" in part.summary()
+    # the fused phase carries both the eqn and the TM node
+    (fp,) = part.fused_phases
+    assert len(fp.node_indices) == 2
+    assert fp.engine == "tpu"  # fused phases dispatch on the compute stream
+
+
+def test_partition_non_crossing_byte_identical(rng):
+    """Programs without a legal crossing partition identically whether the
+    flag is on or off — phase kinds, node sets, reads/writes, DAG edges."""
+    from repro.compiler.partition import partition
+    x = jnp.asarray(rng.rand(5, 7, 3), jnp.float32)
+
+    # pure-TM program: no compute eqn at all
+    g1 = _graph_of(lambda a: jnp.transpose(a, (1, 0, 2)), x)
+    # compute whose output is a graph output: no crossing to claim
+    a = jnp.asarray(rng.rand(8, 6), jnp.float32)
+    b = jnp.asarray(rng.rand(6, 10), jnp.float32)
+    g2 = _graph_of(lambda p, q: p @ q, a, b)
+    # compute -> TM where the intermediate has TWO consumers
+    def two_consumers(p, q):
+        y = p @ q
+        return y.T, y + 1.0
+    g3 = _graph_of(two_consumers, a, b)
+
+    for g in (g1, g2, g3):
+        off = partition(g)
+        on = partition(g, cross_engine=True)
+        assert on.xengine_phases == 0
+        assert _phase_fingerprint(on) == _phase_fingerprint(off)
+        assert on.dag_edges == off.dag_edges
+        assert on.summary() == off.summary()
+
+
+def test_partition_crossing_off_by_default(rng):
+    from repro.compiler.partition import partition
+    x = jnp.asarray(rng.rand(24, 16), jnp.float32)
+    w = jnp.asarray(rng.rand(16, 40), jnp.float32)
+    g = _graph_of(lambda a, b: (a @ b).T, x, w)
+    part = partition(g)
+    assert part.xengine_phases == 0
+    assert all(p.kind in ("tpu", "tmu") for p in part.phases)
+
+
+def test_cross_engine_chain_discovery(rng):
+    """Discovery claims greedily left-to-right: an eqn -> TM -> eqn sandwich
+    resolves as compute_to_tm (the earlier crossing wins)."""
+    from repro.core.fusion import cross_engine_chains
+    a = jnp.asarray(rng.rand(16, 16), jnp.float32)
+    b = jnp.asarray(rng.rand(16, 16), jnp.float32)
+    g = _graph_of(lambda p, q: (p @ q).T @ q, a, b)
+    chains = cross_engine_chains(g)
+    assert len(chains) == 1
+    assert chains[0].direction == "compute_to_tm"
+
+
+def test_grids_commensurable():
+    from repro.core.fusion import grids_commensurable
+    assert grids_commensurable(4, 8)
+    assert grids_commensurable(8, 4)
+    assert grids_commensurable(5, 5)
+    assert not grids_commensurable(4, 6)
+    assert not grids_commensurable(0, 4)
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: matmul_call divisor clamp on non-divisible dims
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(192, 64, 64), (200, 128, 96),
+                                   (128, 200, 64), (3, 5, 4), (7, 9, 5)])
+def test_matmul_call_non_divisible_dims(shape, rng):
+    from repro.kernels.matmul_tm.ops import matmul_call
+    M, K, N = shape
+    x = jnp.asarray(rng.randn(M, K).astype(np.float32))
+    w = jnp.asarray(rng.randn(K, N).astype(np.float32))
+    got = matmul_call(x, w)
+    assert got.shape == (M, N)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), atol=1e-3)
+
+
+def test_block_div():
+    from repro.kernels.matmul_tm.matmul_tm import block_div
+    assert block_div(192, 128) == 96
+    assert block_div(200, 128) == 100
+    assert block_div(128, 128) == 128
+    assert block_div(7, 128) == 7
+    assert block_div(9, 4) == 3
+    assert block_div(13, 5) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: matmul_tm_call lowers through the chain registry; the
+# two-pass fallback is the decline branch and stays bit-exact
+# ---------------------------------------------------------------------------
+
+def test_matmul_tm_call_routes_through_xchain(rng):
+    from repro.core.affine import strided_slice_map
+    from repro.kernels.matmul_tm.ops import matmul_call, matmul_tm_call
+    from repro.kernels.tm_affine.ops import tm_affine_call
+    M, K, N = 24, 16, 20
+    x = jnp.asarray(rng.randn(M, K).astype(np.float32))
+    w = jnp.asarray(rng.randn(K, N).astype(np.float32))
+    m = strided_slice_map((M, N), (0, 0), (2, 1), (12, 20))
+    got = matmul_tm_call(x, w, m)
+    two_pass = tm_affine_call(matmul_call(x, w), m)
+    assert got.shape == m.out_shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(two_pass),
+                               atol=1e-4)
+
+
+def test_matmul_tm_call_decline_matches_two_pass(rng):
+    """A dtype-mismatched call declines the registry; the two-pass branch
+    must produce the identical result it always did."""
+    from repro.core.affine import strided_slice_map
+    from repro.kernels.matmul_tm.ops import matmul_call, matmul_tm_call
+    from repro.kernels.tm_affine.ops import tm_affine_call
+    M, K, N = 12, 8, 10
+    x = jnp.asarray(rng.randn(M, K).astype(np.float32))
+    w = jnp.asarray(rng.randn(K, N).astype(np.float32)).astype(jnp.bfloat16)
+    m = strided_slice_map((M, N), (0, 0), (2, 1), (6, 10))
+    got = matmul_tm_call(x, w, m)
+    two_pass = tm_affine_call(matmul_call(x, w), m)
+    assert np.array_equal(np.asarray(got, np.float64),
+                          np.asarray(two_pass, np.float64))
+
+
+def test_matmul_tm_call_transpose_keeps_bespoke_epilogue(rng):
+    from repro.core.affine import transpose_map
+    from repro.kernels.matmul_tm.ops import matmul_tm_call
+    x = jnp.asarray(rng.randn(12, 8).astype(np.float32))
+    w = jnp.asarray(rng.randn(8, 10).astype(np.float32))
+    m = transpose_map((1, 12, 10))  # 3D wrapper is not pure-2D: declines
+
+    class _FlatT:
+        in_shape = (12, 10)
+        out_shape = (10, 12)
+
+        @staticmethod
+        def is_pure_permutation():
+            return True
+
+        @staticmethod
+        def permutation():
+            return (1, 0)
+
+    got = matmul_tm_call(x, w, _FlatT())
+    np.testing.assert_allclose(np.asarray(got), np.asarray((x @ w).T),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# execution: split path inside the fused phase (decline / other backends)
+# ---------------------------------------------------------------------------
+
+def test_fused_phase_split_path_bit_exact(rng):
+    """On reference/fused backends (and in exact mode) the fused phase runs
+    its split path — eqn and TM run separately, bit-exact vs eager."""
+    from repro.compiler import tm_compile
+    x = jnp.asarray(rng.randn(24, 16).astype(np.float32))
+    w = jnp.asarray(rng.randn(16, 40).astype(np.float32))
+    fn = lambda a, b: (a @ b).T
+    ref = np.asarray(fn(x, w), np.float64)
+    fused = tm_compile(fn, x, w, cross_engine=True)
+    for backend in ("reference", "fused"):
+        got, reps = fused.run(x, w, backend=backend)
+        assert np.array_equal(ref, np.asarray(got, np.float64))
+        recs = [r for rep in reps for r in rep.records]
+        assert not any(r.path.startswith("pallas.xchain") for r in recs)
+    got, reps = fused.run(x, w, backend="pallas", exact=True)
+    assert np.array_equal(ref, np.asarray(got, np.float64))
+    recs = [r for rep in reps for r in rep.records]
+    assert not any(r.path.startswith("pallas.xchain") for r in recs)
+
+
+def test_fused_phase_quarantine_falls_back_split(rng):
+    """A pre-quarantined xchain rule makes the fused phase take the split
+    path — same output, no xchain record, quarantine untouched."""
+    from repro.compiler import tm_compile
+    from repro.core.dispatch import quarantine_key
+    x = jnp.asarray(rng.randn(24, 16).astype(np.float32))
+    w = jnp.asarray(rng.randn(16, 40).astype(np.float32))
+    fn = lambda a, b: (a @ b).T
+    fused = tm_compile(fn, x, w, cross_engine=True)
+    q = {quarantine_key("matmul_tm.xchain", "xchain.compute_to_tm", [x, w])}
+    before = set(q)
+    got, reps = fused.run(x, w, backend="pallas", quarantine=q)
+    assert np.array_equal(np.asarray(fn(x, w), np.float64),
+                          np.asarray(got, np.float64))
+    recs = [r for rep in reps for r in rep.records]
+    assert not any(r.path.startswith("pallas.xchain") for r in recs)
+    assert q == before
+
+
+# ---------------------------------------------------------------------------
+# serving: admission sweep pins cross-engine fusion after a realized probe
+# ---------------------------------------------------------------------------
+
+def test_server_pins_cross_engine(rng):
+    from repro.serving.server import ServerConfig, TMServer
+
+    def fn(a, b):
+        return (a @ b).T
+
+    x = jnp.asarray(rng.randn(24, 16).astype(np.float32))
+    w = jnp.asarray(rng.randn(16, 40).astype(np.float32))
+    cfg = ServerConfig(max_batch=1, batch_timeout_s=0.0, backend="pallas")
+    with TMServer(cfg) as srv:
+        got = srv(fn, x, w)
+        (key,) = srv.cache.keys()
+        entry = srv.cache.get(key)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(fn(x, w)),
+                               atol=1e-4)
+    assert entry.cross_engine
+    sel = entry.selection["cross_engine"]
+    assert sel["winner"] and sel["realized_crossings"] >= 1
+    assert sel["saved_bytes"] > 0
+    assert any(p.kind == "fused"
+               for p in entry.compiled.partition_report.phases)
+
+
+def test_server_xengine_sweep_off(rng):
+    from repro.serving.server import ServerConfig, TMServer
+
+    def fn(a, b):
+        return (a @ b).T
+
+    x = jnp.asarray(rng.randn(24, 16).astype(np.float32))
+    w = jnp.asarray(rng.randn(16, 40).astype(np.float32))
+    cfg = ServerConfig(max_batch=1, batch_timeout_s=0.0, backend="pallas",
+                       select_xengine=False)
+    with TMServer(cfg) as srv:
+        got = srv(fn, x, w)
+        (key,) = srv.cache.keys()
+        entry = srv.cache.get(key)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(fn(x, w)),
+                               atol=1e-4)
+    assert not entry.cross_engine
+    assert "cross_engine" not in entry.selection
+    assert all(p.kind != "fused"
+               for p in entry.compiled.partition_report.phases)
+
+
+# ---------------------------------------------------------------------------
+# model-level: yolov3_tiny compiles with realized crossings (slow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_yolov3_tiny_cross_engine(rng):
+    import jax
+    from repro.compiler import tm_compile
+    from repro.models import cnn
+    p = cnn.init_yolov3_tiny(jax.random.PRNGKey(0))
+    x = jnp.asarray(rng.rand(1, 32, 32, 3).astype(np.float32))
+    fn = lambda a: cnn.yolov3_tiny(p, a)
+    base = tm_compile(fn, x)
+    fused = tm_compile(fn, x, cross_engine=True)
+    assert fused.partition_report.xengine_phases >= 1
+    assert len(fused.partition_report.phases) < len(
+        base.partition_report.phases)
+    ref = np.asarray(jax.tree_util.tree_leaves(fn(x))[0], np.float64)
+    out, reps = fused.run(x, backend="pallas")
+    got = np.asarray(jax.tree_util.tree_leaves(out)[0], np.float64)
+    np.testing.assert_allclose(ref, got, atol=1e-3)
+    recs = [r for rep in reps for r in rep.records]
+    assert any(r.path.startswith("pallas.xchain") for r in recs)
